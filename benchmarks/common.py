@@ -1,0 +1,49 @@
+"""Shared benchmark helpers. Scale via env:
+REPRO_BENCH_SCALE  — command-count multiplier (default 1.0; paper-full ~20)
+REPRO_BENCH_FULL=1 — paper-exact 16GB / full geometry (slow)
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import time
+
+from repro.configs.fmmu_paper import PAPER_SSD, SSDConfig
+
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+
+def bench_ssd_config(channels=None, ways=None, capacity_gb=None,
+                     host_bw_gbps=None) -> SSDConfig:
+    """Paper config, optionally reduced for bench wall-time."""
+    kw = {}
+    # paper geometry by default: the 16GB/1,088KB-RAM ratio is what makes
+    # DFTL/CDFTL map-RAM-bound (shrinking capacity hides the effect)
+    kw["capacity_gb"] = capacity_gb or 16
+    if channels:
+        kw["channels"] = channels
+    if ways:
+        kw["ways"] = ways
+    if host_bw_gbps:
+        kw["host_bw_gbps"] = host_bw_gbps
+    return dataclasses.replace(PAPER_SSD, **kw)
+
+
+def n_cmds(base: int) -> int:
+    return max(500, int(base * SCALE))
+
+
+def emit(name: str, value_us: float, derived: str = ""):
+    """CSV row: name,us_per_call,derived"""
+    print(f"{name},{value_us:.4f},{derived}", flush=True)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.wall = time.time() - self.t0

@@ -1,0 +1,44 @@
+"""Fig. 13 — trace-driven normalized elapsed time (MSR_proj / MSR_hm /
+WebSearch *surrogates* matched to Table 3; see workloads.py docstring)."""
+from __future__ import annotations
+
+from benchmarks.common import bench_ssd_config, emit, n_cmds
+from repro.core.sim.ssd import SSDSim
+from repro.core.sim import workloads as W
+
+SCHEMES = [("ideal", 1), ("dftl", 1), ("dftl", 4), ("cdftl", 1),
+           ("cdftl", 4), ("fmmu", 1)]
+# paper's normalized-elapsed anchors (scheme/ideal)
+PAPER = {("MSR_proj", "dftl1c"): 10.63, ("MSR_proj", "cdftl4c"): 1.47,
+         ("MSR_hm", "dftl4c"): 3.35, ("MSR_hm", "cdftl4c"): 1.32}
+
+
+def main():
+    for tname, spec in W.TRACES.items():
+        cmds = n_cmds(20000)
+        warm = cmds // 2
+        elapsed = {}
+        for scheme, cores in SCHEMES:
+            tag = f"{scheme}{cores}c" if scheme != "ideal" else "ideal"
+            cfg = bench_ssd_config()
+            if scheme == "ideal":
+                sim = SSDSim(cfg, scheme="fmmu", zero_exec=True)
+            else:
+                sim = SSDSim(cfg, scheme=scheme, n_cores=cores)
+            sim.precondition_sequential()
+            r = sim.run_closed_loop(W.trace_surrogate(cfg, spec), cmds,
+                                    warmup_cmds=warm)
+            elapsed[tag] = r["elapsed_us"]
+            norm = r["elapsed_us"] / elapsed.get("ideal", r["elapsed_us"])
+            extra = ""
+            if (tname, tag) in PAPER:
+                extra = f" paper_norm={PAPER[(tname, tag)]}"
+            emit(f"fig13_{tname}_{tag}", r["elapsed_us"] / max(cmds, 1),
+                 f"normalized={norm:.2f}{extra}")
+        emit(f"fig13_claim_{tname}", 0.0,
+             f"fmmu_norm={elapsed['fmmu1c'] / elapsed['ideal']:.3f} "
+             f"(paper: ~1.0, approaches ideal)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Run every benchmark (one per paper table/figure + kernels).
+``PYTHONPATH=src python -m benchmarks.run``
+CSV rows: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig2_perf_model, fig10_ftl_exec, fig11_synthetic,
+                            fig13_traces, fig14_scalability, kernel_bench)
+    mods = [
+        ("fig10 (FTL exec times)", fig10_ftl_exec),
+        ("fig2 (perf model)", fig2_perf_model),
+        ("fig11/12 (synthetic)", fig11_synthetic),
+        ("fig13 (traces)", fig13_traces),
+        ("fig14 (scalability)", fig14_scalability),
+        ("kernels", kernel_bench),
+    ]
+    failures = 0
+    print("name,us_per_call,derived")
+    for name, mod in mods:
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod.main()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+        print(f"# --- {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

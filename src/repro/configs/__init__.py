@@ -1,0 +1,69 @@
+"""Config registry: ``--arch <id>`` ids map to ArchConfig instances."""
+from __future__ import annotations
+
+from repro.configs.base import (
+    ArchConfig, MoEConfig, SSMConfig, ShapeConfig, SHAPES,
+    shape_applicable, smoke_config,
+)
+from repro.configs.fmmu_paper import PAPER_SSD, SSDConfig, NAND_V1, NAND_V2
+
+from repro.configs import (
+    jamba_1_5_large_398b,
+    mamba2_1_3b,
+    qwen2_72b,
+    gemma2_9b,
+    llama3_2_1b,
+    glm4_9b,
+    seamless_m4t_large_v2,
+    dbrx_132b,
+    arctic_480b,
+    llava_next_mistral_7b,
+)
+
+_MODULES = [
+    jamba_1_5_large_398b,
+    mamba2_1_3b,
+    qwen2_72b,
+    gemma2_9b,
+    llama3_2_1b,
+    glm4_9b,
+    seamless_m4t_large_v2,
+    dbrx_132b,
+    arctic_480b,
+    llava_next_mistral_7b,
+]
+
+ARCHS = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+
+def arch_ids():
+    return list(ARCHS.keys())
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def all_cells():
+    """Every assigned (arch, shape) dry-run cell with applicability flag."""
+    out = []
+    for a in ARCHS.values():
+        for s in SHAPES.values():
+            ok, why = shape_applicable(a, s)
+            out.append((a, s, ok, why))
+    return out
+
+
+__all__ = [
+    "ArchConfig", "MoEConfig", "SSMConfig", "ShapeConfig", "SHAPES",
+    "shape_applicable", "smoke_config", "ARCHS", "arch_ids", "get_arch",
+    "get_shape", "all_cells", "PAPER_SSD", "SSDConfig", "NAND_V1", "NAND_V2",
+]

@@ -1,0 +1,27 @@
+"""Jamba-1.5-Large (398B total / ~94B active) — hybrid Mamba+attention MoE.
+
+[arXiv:2403.19887 + ai21labs/AI21-Jamba-1.5-Large; hf-verified tier]
+72 layers, d_model 8192, 64 Q heads (GQA kv=8), d_ff 24576, vocab 65536,
+MoE 16 experts top-2 on every 2nd layer, attention 1:7 interleave
+(attn_layer_period=8, attn_layer_offset=4), no RoPE (Mamba carries order).
+"""
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    use_rope=False,
+    moe=MoEConfig(n_experts=16, top_k=2, d_ff=24576, every=2, moe_offset=1),
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, chunk=256),
+    attn_every=8,
+    attn_offset=4,
+    norm_eps=1e-6,
+    source="arXiv:2403.19887; hf:ai21labs/AI21-Jamba-1.5-Large",
+)

@@ -1,0 +1,811 @@
+"""The FMMU as a jittable JAX state machine.
+
+Exact functional mirror of oracle.py (same deterministic policies, same
+packet/arbitration semantics) expressed in jax.lax control flow over the
+fixed-shape arrays of FMMUState. One ``step`` = one arbitration round =
+one packet (or one watermark flush/writeback action), like the hardware
+pipeline. ``run`` drives steps until quiescent/blocked via
+lax.while_loop. Property tests drive oracle and engine in lockstep.
+
+This is the paper's "hardware automation" rendered TPU-native: the
+control FSM is a compiled fixed-function pipeline rather than host
+software. The *batched* translate path that serving uses for throughput
+lives in batch.py; this engine is the architectural/correctness model
+and handles the sequential mutation paths (miss fills, flush, GC).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.fmmu import state as S
+from repro.core.fmmu.state import (BLOCKED, F_DIRTY, F_REF, F_TRANS, F_VALID,
+                                   IDLE, Q_CTP_REQ, Q_CTP_RESP, Q_FC_RESP,
+                                   Q_GCM, Q_HRM, WORKED, FMMUState)
+from repro.core.fmmu.types import (COND_UPDATE, FLUSH_BLK, FMMUGeometry,
+                                   LOAD, LOAD_RESP, LOOKUP, M_COND, M_FLUSH,
+                                   M_LOAD, M_LOOKUP, M_UPDATE, NIL, Request,
+                                   Response, ST_OK, ST_STALE, UPDATE)
+
+I = jnp.int32
+(ST_HIT, ST_MISS, ST_MERGE, ST_STALL, ST_FTV, ST_FBLK, ST_FC, ST_PROG,
+ ST_STEPS, ST_CHIT, ST_CMISS) = range(11)
+
+
+def _bump(st, idx):
+    return st._replace(stats=st.stats.at[idx].add(1))
+
+
+# ----------------------------------------------------------------------
+# queues
+# ----------------------------------------------------------------------
+def _qlen(st, q):
+    return st.qtail[q] - st.qhead[q]
+
+
+def _qpush(st, q, pkt):
+    cap = st.qbuf.shape[1]
+    pos = jnp.mod(st.qtail[q], cap)
+    return st._replace(qbuf=st.qbuf.at[q, pos].set(pkt),
+                       qtail=st.qtail.at[q].add(1))
+
+
+def _qpush_front(st, q, pkt):
+    cap = st.qbuf.shape[1]
+    pos = jnp.mod(st.qhead[q] - 1, cap)
+    return st._replace(qbuf=st.qbuf.at[q, pos].set(pkt),
+                       qhead=st.qhead.at[q].add(-1))
+
+
+def _qpop(st, q):
+    cap = st.qbuf.shape[1]
+    pkt = st.qbuf[q, jnp.mod(st.qhead[q], cap)]
+    return st._replace(qhead=st.qhead.at[q].add(1)), pkt
+
+
+def _pkt(g, kind, f1=NIL, f2=NIL, f3=NIL, f4=NIL, data=None):
+    head = jnp.stack([jnp.asarray(v, I) for v in (kind, f1, f2, f3, f4)])
+    if data is None:
+        data = jnp.full((g.cmt_entries,), NIL, I)
+    return jnp.concatenate([head, data.astype(I)])
+
+
+# ----------------------------------------------------------------------
+# outputs
+# ----------------------------------------------------------------------
+def _emit_resp(st, rid, kind, dppn, status):
+    cap = st.resp_buf.shape[0]
+    row = jnp.stack([rid, jnp.asarray(kind, I), dppn, jnp.asarray(status, I)])
+    return st._replace(resp_buf=st.resp_buf.at[jnp.mod(st.resp_n, cap)].set(row),
+                       resp_n=st.resp_n + 1)
+
+
+def _emit_fc(st, tppn, s, w):
+    cap = st.fc_buf.shape[0]
+    row = jnp.stack([tppn, jnp.asarray(s, I), jnp.asarray(w, I)])
+    st = st._replace(fc_buf=st.fc_buf.at[jnp.mod(st.fc_n, cap)].set(row),
+                     fc_n=st.fc_n + 1)
+    return _bump(st, ST_FC)
+
+
+def _emit_prog(st, tvpn, tppn):
+    cap = st.prog_buf.shape[0]
+    st = st._replace(prog_buf=st.prog_buf.at[jnp.mod(st.prog_n, cap)]
+                     .set(jnp.stack([tvpn, tppn])),
+                     prog_n=st.prog_n + 1)
+    return _bump(st, ST_PROG)
+
+
+def _stall(st, q, pkt, front=False):
+    st = _bump(st, ST_STALL)
+    st = st._replace(stalls_in_row=st.stalls_in_row + 1)
+    return _qpush_front(st, q, pkt) if front else _qpush(st, q, pkt)
+
+
+# ----------------------------------------------------------------------
+# second-chance victim selection (shared CMT/CTP)
+# ----------------------------------------------------------------------
+def _second_chance(flags_row, clock, n_ways: int):
+    """Returns (found, way, new_flags_row, new_clock) mirroring the
+    oracle: scan 2W slots from clock, clearing refbits until a clean,
+    non-transient, non-referenced block is found."""
+    def body(i, carry):
+        found, way, fl, done = carry
+        w = jnp.mod(clock + i, n_ways)
+        f = fl[w]
+        busy = (f & (F_DIRTY | F_TRANS)) != 0
+        has_ref = (f & F_REF) != 0
+        # selection only if not done, not busy, no refbit
+        select = (~done) & (~busy) & (~has_ref)
+        clear_ref = (~done) & (~busy) & has_ref
+        fl = jnp.where(clear_ref, fl.at[w].set(f & ~F_REF), fl)
+        found = found | select
+        way = jnp.where(select, w, way)
+        done = done | select
+        return (found, way, fl, done)
+
+    found, way, fl, _ = lax.fori_loop(
+        0, 2 * n_ways, body,
+        (jnp.asarray(False), jnp.asarray(0, I), flags_row,
+         jnp.asarray(False)))
+    new_clock = jnp.where(found, jnp.mod(way + 1, n_ways), clock)
+    return found, way, fl, new_clock
+
+
+# ----------------------------------------------------------------------
+# DTL
+# ----------------------------------------------------------------------
+def _dtl_find(st, tvpn):
+    match = (st.dtl_tvpn == tvpn)
+    return match.any(), jnp.argmax(match).astype(I)
+
+
+def _dtl_register(g, st, s, w, tvpn):
+    """Link CMT block (s,w) into the DTL chain for tvpn."""
+    p = (s * g.cmt_ways + w).astype(I)
+    found, idx = _dtl_find(st, tvpn)
+
+    def link(st):
+        st = st._replace(
+            cmt_next=st.cmt_next.at[s, w].set(st.dtl_head[idx]),
+            dtl_head=st.dtl_head.at[idx].set(p),
+            dtl_ndirty=st.dtl_ndirty.at[idx].add(1),
+            dtl_updated=st.dtl_updated.at[idx].set(1))
+        return st
+
+    def insert(st):
+        free = st.dtl_tvpn == NIL
+
+        def make_room(st):
+            # full: flush the oldest entry (min seq), like oracle dtl[0]
+            oldest = jnp.argmin(st.dtl_seq).astype(I)
+            return _flush_tvpn(g, st, oldest)
+
+        st = lax.cond(free.any(), lambda x: x, make_room, st)
+        free = st.dtl_tvpn == NIL
+        slot = jnp.argmax(free).astype(I)
+        st = st._replace(
+            cmt_next=st.cmt_next.at[s, w].set(NIL),
+            dtl_tvpn=st.dtl_tvpn.at[slot].set(tvpn),
+            dtl_head=st.dtl_head.at[slot].set(p),
+            dtl_ndirty=st.dtl_ndirty.at[slot].set(1),
+            dtl_updated=st.dtl_updated.at[slot].set(1),
+            dtl_seq=st.dtl_seq.at[slot].set(st.dtl_ctr),
+            dtl_ctr=st.dtl_ctr + 1)
+        return st
+
+    return lax.cond(found, link, insert, st)
+
+
+def _flush_tvpn(g, st, idx):
+    """Walk the next-link chain of DTL entry idx, emitting one FLUSH_BLK
+    per dirty block (paper's O(dirty) batch flush)."""
+    tvpn = st.dtl_tvpn[idx]
+    st = _bump(st, ST_FTV)
+
+    def cond(carry):
+        st_, p = carry
+        return p != NIL
+
+    def body(carry):
+        st_, p = carry
+        s = p // g.cmt_ways
+        w = jnp.mod(p, g.cmt_ways)
+        nxt = st_.cmt_next[s, w]
+        dirty = (st_.cmt_flags[s, w] & F_DIRTY) != 0
+
+        def do_flush(st_):
+            chunk = jnp.mod(st_.cmt_tag[s, w], g.chunks_per_tp)
+            pkt = _pkt(g, FLUSH_BLK, tvpn, chunk, data=st_.cmt_data[s, w])
+            st_ = _qpush(st_, Q_CTP_REQ, pkt)
+            st_ = st_._replace(
+                cmt_flags=st_.cmt_flags.at[s, w].set(
+                    st_.cmt_flags[s, w] & ~F_DIRTY),
+                cmt_next=st_.cmt_next.at[s, w].set(NIL),
+                cmt_dirty=st_.cmt_dirty - 1)
+            return _bump(st_, ST_FBLK)
+
+        st_ = lax.cond(dirty, do_flush, lambda x: x, st_)
+        return (st_, nxt)
+
+    st, _ = lax.while_loop(cond, body, (st, st.dtl_head[idx]))
+    st = st._replace(
+        dtl_tvpn=st.dtl_tvpn.at[idx].set(NIL),
+        dtl_head=st.dtl_head.at[idx].set(NIL),
+        dtl_ndirty=st.dtl_ndirty.at[idx].set(0),
+        dtl_updated=st.dtl_updated.at[idx].set(0),
+        dtl_seq=st.dtl_seq.at[idx].set(jnp.iinfo(jnp.int32).max))
+    return st
+
+
+def _pick_flush_victim(st):
+    """Greedy: max ndirty; tie -> oldest (min seq). Matches Python max()
+    over registration order."""
+    valid = st.dtl_tvpn != NIL
+    nd = jnp.where(valid, st.dtl_ndirty, -1)
+    best_nd = nd.max()
+    cand = valid & (nd == best_nd)
+    seq = jnp.where(cand, st.dtl_seq, jnp.iinfo(jnp.int32).max)
+    return jnp.argmin(seq).astype(I)
+
+
+# ----------------------------------------------------------------------
+# CMT
+# ----------------------------------------------------------------------
+def _cmt_apply(g, st, s, w, kind, off, rid, dppn, old):
+    """Hit/replay application of LOOKUP/UPDATE/COND_UPDATE to block (s,w)."""
+    cur = st.cmt_data[s, w, off]
+
+    def do_lookup(st):
+        return _emit_resp(st, rid, LOOKUP, cur, ST_OK)
+
+    def do_stale(st):
+        return _emit_resp(st, rid, COND_UPDATE, cur, ST_STALE)
+
+    def do_write(st):
+        st = st._replace(cmt_data=st.cmt_data.at[s, w, off].set(dppn))
+        was_dirty = (st.cmt_flags[s, w] & F_DIRTY) != 0
+
+        def mark(st):
+            st = st._replace(
+                cmt_flags=st.cmt_flags.at[s, w].set(st.cmt_flags[s, w] | F_DIRTY),
+                cmt_dirty=st.cmt_dirty + 1)
+            tvpn = st.cmt_tag[s, w] // g.chunks_per_tp
+            return _dtl_register(g, st, s, w, tvpn)
+
+        st = lax.cond(was_dirty, lambda x: x, mark, st)
+        return _emit_resp(st, rid, kind, dppn, ST_OK)
+
+    is_lookup = kind == LOOKUP
+    is_stale = (kind == COND_UPDATE) & (cur != old)
+    return lax.cond(is_lookup, do_lookup,
+                    lambda st: lax.cond(is_stale, do_stale, do_write, st), st)
+
+
+def _targeted_cmt_flush(g, st, s):
+    """Free a way in set s by flushing a TVPN owning a dirty block there."""
+    dirty = (st.cmt_flags[s] & F_DIRTY) != 0
+
+    def do(st):
+        w = jnp.argmax(dirty).astype(I)
+        tvpn = st.cmt_tag[s, w] // g.chunks_per_tp
+        found, idx = _dtl_find(st, tvpn)
+        return lax.cond(found, lambda st: _flush_tvpn(g, st, idx),
+                        lambda st: st, st)
+
+    return lax.cond(dirty.any(), do, lambda st: st, st)
+
+
+def _cmt_handle(g, st, pkt, qid):
+    kind, dlpn, dppn, old, rid = pkt[0], pkt[1], pkt[2], pkt[3], pkt[4]
+    block_id = dlpn // g.cmt_entries
+    s = jnp.mod(block_id, g.cmt_sets)
+    off = jnp.mod(dlpn, g.cmt_entries)
+    tags = st.cmt_tag[s]
+    flags = st.cmt_flags[s]
+    present = (tags == block_id) & ((flags & (F_VALID | F_TRANS)) != 0)
+    found = present.any()
+    way = jnp.argmax(present).astype(I)
+    is_trans = found & ((flags[way] & F_TRANS) != 0)
+    mkind = jnp.where(kind == LOOKUP, M_LOOKUP,
+                      jnp.where(kind == UPDATE, M_UPDATE, M_COND))
+    mshr_row = jnp.stack([mkind, off, rid, dppn, old])
+
+    def on_transient(st):
+        full = st.cmt_mshr_n[s, way] >= g.mshr_cap
+
+        def merge(st):
+            st = _bump(st, ST_MERGE)
+            n = st.cmt_mshr_n[s, way]
+            return st._replace(
+                cmt_mshr=st.cmt_mshr.at[s, way, n].set(mshr_row),
+                cmt_mshr_n=st.cmt_mshr_n.at[s, way].set(n + 1))
+
+        return lax.cond(full, lambda st: _stall(st, qid, pkt), merge, st)
+
+    def on_hit(st):
+        st = _bump(st, ST_HIT)
+        st = st._replace(cmt_flags=st.cmt_flags.at[s, way].set(
+            st.cmt_flags[s, way] | F_REF))
+        return _cmt_apply(g, st, s, way, kind, off, rid, dppn, old)
+
+    def on_miss(st):
+        st = _bump(st, ST_MISS)
+        ok, vic, new_flags_row, new_clock = _second_chance(
+            st.cmt_flags[s], st.cmt_clock[s], g.cmt_ways)
+
+        def alloc(st):
+            st = st._replace(
+                cmt_flags=st.cmt_flags.at[s].set(new_flags_row),
+                cmt_clock=st.cmt_clock.at[s].set(new_clock))
+            fl = (F_TRANS | F_REF)
+            st = st._replace(
+                cmt_tag=st.cmt_tag.at[s, vic].set(block_id),
+                cmt_flags=st.cmt_flags.at[s, vic].set(fl),
+                cmt_next=st.cmt_next.at[s, vic].set(NIL),
+                cmt_mshr=st.cmt_mshr.at[s, vic, 0].set(mshr_row),
+                cmt_mshr_n=st.cmt_mshr_n.at[s, vic].set(1))
+            tvpn = dlpn // g.entries_per_tp
+            chunk = jnp.mod(dlpn, g.entries_per_tp) // g.cmt_entries
+            dest = s * g.cmt_ways + vic
+            return _qpush(st, Q_CTP_REQ, _pkt(g, LOAD, tvpn, chunk, dest))
+
+        def no_victim(st):
+            st = _targeted_cmt_flush(g, st, s)
+            return _stall(st, qid, pkt)
+
+        return lax.cond(ok, alloc, no_victim, st)
+
+    return lax.cond(is_trans, on_transient,
+                    lambda st: lax.cond(found, on_hit, on_miss, st), st)
+
+
+def _cmt_fill(g, st, pkt):
+    """LOAD_RESP from CTP: fill block, replay in-cache MSHRs in order."""
+    dest = pkt[3]
+    s = dest // g.cmt_ways
+    w = jnp.mod(dest, g.cmt_ways)
+    data = pkt[5:5 + g.cmt_entries]
+    st = st._replace(
+        cmt_data=st.cmt_data.at[s, w].set(data),
+        cmt_flags=st.cmt_flags.at[s, w].set(
+            (st.cmt_flags[s, w] & ~F_TRANS) | F_VALID))
+    n = st.cmt_mshr_n[s, w]
+    st = st._replace(cmt_mshr_n=st.cmt_mshr_n.at[s, w].set(0))
+
+    def body(i, st):
+        def replay(st):
+            row = st.cmt_mshr[s, w, i]
+            mk, off, rid, dppn, old = row[0], row[1], row[2], row[3], row[4]
+            kind = jnp.where(mk == M_LOOKUP, LOOKUP,
+                             jnp.where(mk == M_UPDATE, UPDATE, COND_UPDATE))
+            return _cmt_apply(g, st, s, w, kind, off, rid, dppn, old)
+
+        return lax.cond(i < n, replay, lambda x: x, st)
+
+    return lax.fori_loop(0, g.mshr_cap, body, st)
+
+
+def _cmt_flush_needed(g, st):
+    return ((g.cmt_blocks - st.cmt_dirty) < g.cmt_low()) & \
+        (st.dtl_tvpn != NIL).any()
+
+
+def _cmt_flush_one(g, st):
+    return _flush_tvpn(g, st, _pick_flush_victim(st))
+
+
+# ----------------------------------------------------------------------
+# CTP
+# ----------------------------------------------------------------------
+def _fifo_push(st, tvpn):
+    """Dedup'd push: a TVPN is queued at most once (bounds occupancy by
+    n_tvpns; matches oracle). Popped slots are NIL'd so the CAM scan over
+    the ring cannot false-positive."""
+    cap = st.fifo.shape[0]
+    present = (st.fifo == tvpn).any()
+
+    def push(st):
+        return st._replace(
+            fifo=st.fifo.at[jnp.mod(st.fifo_tail, cap)].set(tvpn),
+            fifo_tail=st.fifo_tail + 1)
+
+    return lax.cond(present, lambda x: x, push, st)
+
+
+def _ctp_apply(g, st, s, w, kind, chunk, dest, data):
+    ec = g.cmt_entries
+
+    def do_load(st):
+        sl = lax.dynamic_slice(st.ctp_data[s, w], (chunk * ec,), (ec,))
+        tvpn = st.ctp_tag[s, w]
+        return _qpush(st, Q_CTP_RESP, _pkt(g, LOAD_RESP, tvpn, chunk, dest,
+                                           data=sl))
+
+    def do_merge(st):
+        nd = lax.dynamic_update_slice(st.ctp_data[s, w], data.astype(I),
+                                      (chunk * ec,))
+        st = st._replace(ctp_data=st.ctp_data.at[s, w].set(nd))
+        was_dirty = (st.ctp_flags[s, w] & F_DIRTY) != 0
+
+        def mark(st):
+            st = st._replace(
+                ctp_flags=st.ctp_flags.at[s, w].set(
+                    st.ctp_flags[s, w] | F_DIRTY),
+                ctp_dirty=st.ctp_dirty + 1)
+            return _fifo_push(st, st.ctp_tag[s, w])
+
+        return lax.cond(was_dirty, lambda x: x, mark, st)
+
+    return lax.cond(kind == LOAD, do_load, do_merge, st)
+
+
+def _ctp_fill_data(g, st, s, w, page):
+    """Fill CTP block and replay its MSHRs in order."""
+    st = st._replace(
+        ctp_data=st.ctp_data.at[s, w].set(page),
+        ctp_flags=st.ctp_flags.at[s, w].set(
+            (st.ctp_flags[s, w] & ~F_TRANS) | F_VALID))
+    n = st.ctp_mshr_n[s, w]
+    st = st._replace(ctp_mshr_n=st.ctp_mshr_n.at[s, w].set(0))
+
+    def body(i, st):
+        def replay(st):
+            row = st.ctp_mshr[s, w, i]
+            mk, chunk, dest = row[0], row[1], row[2]
+            data = row[3:3 + g.cmt_entries]
+            kind = jnp.where(mk == M_LOAD, LOAD, FLUSH_BLK)
+            return _ctp_apply(g, st, s, w, kind, chunk, dest, data)
+
+        return lax.cond(i < n, replay, lambda x: x, st)
+
+    return lax.fori_loop(0, g.ctp_mshr_cap, body, st)
+
+
+def _targeted_ctp_writeback(g, st, s):
+    fl = st.ctp_flags[s]
+    dirty = ((fl & F_DIRTY) != 0) & ((fl & F_VALID) != 0)
+
+    def do(st):
+        w = jnp.argmax(dirty).astype(I)
+        return _writeback_block(g, st, s, w)
+
+    return lax.cond(dirty.any(), do, lambda x: x, st)
+
+
+def _writeback_block(g, st, s, w):
+    tppn = st.tppn_next
+    tvpn = st.ctp_tag[s, w]
+    st = st._replace(
+        flash_tp=st.flash_tp.at[tppn].set(st.ctp_data[s, w]),
+        gtd=st.gtd.at[tvpn].set(tppn),
+        tppn_next=st.tppn_next + 1,
+        ctp_flags=st.ctp_flags.at[s, w].set(st.ctp_flags[s, w] & ~F_DIRTY),
+        ctp_dirty=st.ctp_dirty - 1)
+    return _emit_prog(st, tvpn, tppn)
+
+
+def _ctp_handle(g, st, pkt):
+    kind, tvpn, chunk, dest = pkt[0], pkt[1], pkt[2], pkt[3]
+    data = pkt[5:5 + g.cmt_entries]
+    s = jnp.mod(tvpn, g.ctp_sets)
+    tags = st.ctp_tag[s]
+    flags = st.ctp_flags[s]
+    present = (tags == tvpn) & ((flags & (F_VALID | F_TRANS)) != 0)
+    found = present.any()
+    way = jnp.argmax(present).astype(I)
+    is_trans = found & ((flags[way] & F_TRANS) != 0)
+    mk = jnp.where(kind == LOAD, M_LOAD, M_FLUSH)
+    mshr_row = jnp.concatenate([jnp.stack([mk, chunk, dest]), data])
+
+    def on_transient(st):
+        full = st.ctp_mshr_n[s, way] >= g.ctp_mshr_cap
+
+        def merge(st):
+            st = _bump(st, ST_MERGE)
+            n = st.ctp_mshr_n[s, way]
+            return st._replace(
+                ctp_mshr=st.ctp_mshr.at[s, way, n].set(mshr_row),
+                ctp_mshr_n=st.ctp_mshr_n.at[s, way].set(n + 1))
+
+        return lax.cond(full,
+                        lambda st: _stall(st, Q_CTP_REQ, pkt, front=True),
+                        merge, st)
+
+    def on_hit(st):
+        st = _bump(st, ST_CHIT)
+        st = st._replace(ctp_flags=st.ctp_flags.at[s, way].set(
+            st.ctp_flags[s, way] | F_REF))
+        return _ctp_apply(g, st, s, way, kind, chunk, dest, data)
+
+    def on_miss(st):
+        st = _bump(st, ST_CMISS)
+        ok, vic, new_flags_row, new_clock = _second_chance(
+            st.ctp_flags[s], st.ctp_clock[s], g.ctp_ways)
+
+        def alloc(st):
+            st = st._replace(
+                ctp_flags=st.ctp_flags.at[s].set(new_flags_row),
+                ctp_clock=st.ctp_clock.at[s].set(new_clock))
+            st = st._replace(
+                ctp_tag=st.ctp_tag.at[s, vic].set(tvpn),
+                ctp_flags=st.ctp_flags.at[s, vic].set(F_TRANS | F_REF),
+                ctp_mshr=st.ctp_mshr.at[s, vic, 0].set(mshr_row),
+                ctp_mshr_n=st.ctp_mshr_n.at[s, vic].set(1))
+            tppn = st.gtd[tvpn]
+
+            def never_written(st):
+                page = jnp.full((g.entries_per_tp,), NIL, I)
+                return _ctp_fill_data(g, st, s, vic, page)
+
+            def flash_read(st):
+                return _emit_fc(st, tppn, s, vic)
+
+            return lax.cond(tppn == NIL, never_written, flash_read, st)
+
+        def no_victim(st):
+            st = _targeted_ctp_writeback(g, st, s)
+            return _stall(st, Q_CTP_REQ, pkt, front=True)
+
+        return lax.cond(ok, alloc, no_victim, st)
+
+    return lax.cond(is_trans, on_transient,
+                    lambda st: lax.cond(found, on_hit, on_miss, st), st)
+
+
+def _fc_handle(g, st, pkt):
+    """FC_READ_RESP: f1=tppn, f2=ctp_set, f3=ctp_way."""
+    tppn, s, w = pkt[1], pkt[2], pkt[3]
+    page = st.flash_tp[tppn]
+    return _ctp_fill_data(g, st, s, w, page)
+
+
+def _ctp_writeback_needed(g, st):
+    return ((g.ctp_blocks - st.ctp_dirty) < g.ctp_low()) & \
+        (st.fifo_tail > st.fifo_head)
+
+
+def _ctp_writeback_one(g, st):
+    """Pop stale FIFO entries until one dirty match is written back.
+    Returns (st, done)."""
+    cap = st.fifo.shape[0]
+
+    def cond(carry):
+        st, done = carry
+        return (~done) & (st.fifo_tail > st.fifo_head)
+
+    def body(carry):
+        st, done = carry
+        pos = jnp.mod(st.fifo_head, cap)
+        tvpn = st.fifo[pos]
+        st = st._replace(fifo_head=st.fifo_head + 1,
+                         fifo=st.fifo.at[pos].set(NIL))
+        s = jnp.mod(tvpn, g.ctp_sets)
+        fl = st.ctp_flags[s]
+        match = (st.ctp_tag[s] == tvpn) & ((fl & F_VALID) != 0) & \
+            ((fl & F_DIRTY) != 0)
+
+        def wb(st):
+            w = jnp.argmax(match).astype(I)
+            return _writeback_block(g, st, s, w), jnp.asarray(True)
+
+        return lax.cond(match.any(), wb, lambda st: (st, jnp.asarray(False)),
+                        st)
+
+    return lax.while_loop(cond, body, (st, jnp.asarray(False)))
+
+
+# ----------------------------------------------------------------------
+# arbitration + step
+# ----------------------------------------------------------------------
+def _arbitrate(g, st):
+    lens = st.qtail - st.qhead
+    nonempty = lens > 0
+    any_ne = nonempty.any()
+    all_zero = jnp.where(nonempty, st.credits <= 0, True).all()
+    credits = jnp.where(any_ne & all_zero, st.weights, st.credits)
+    ok = nonempty & (credits > 0)
+    qid = jnp.argmax(ok).astype(I)
+    picked = ok.any()
+    credits = jnp.where(picked, credits.at[qid].add(-1), credits)
+    return st._replace(credits=credits), picked & any_ne, qid
+
+
+def step(g: FMMUGeometry, st: FMMUState):
+    """One arbitration round. Returns (state, code)."""
+    st = _bump(st, ST_STEPS)
+
+    def try_ctp_wb(st):
+        st, done = _ctp_writeback_one(g, st)
+        return st, jnp.where(done, WORKED, -1)
+
+    def try_cmt_flush(st):
+        return _cmt_flush_one(g, st), jnp.asarray(WORKED, I)
+
+    def dispatch(st):
+        st, picked, qid = _arbitrate(g, st)
+
+        def idle(st):
+            return st, jnp.asarray(IDLE, I)
+
+        def guarded(st):
+            qlens = (st.qtail - st.qhead).sum()
+            blocked = st.stalls_in_row > qlens + 4
+
+            def do_block(st):
+                return st._replace(stalls_in_row=jnp.zeros((), I)), \
+                    jnp.asarray(BLOCKED, I)
+
+            def do_packet(st):
+                before = st.stalls_in_row
+                st, pkt = _qpop(st, qid)
+
+                st = lax.switch(
+                    jnp.clip(qid, 0, 4),
+                    [lambda st: _fc_handle(g, st, pkt),          # Q_FC_RESP
+                     lambda st: _cmt_fill(g, st, pkt),           # Q_CTP_RESP
+                     lambda st: _ctp_handle(g, st, pkt),         # Q_CTP_REQ
+                     lambda st: _cmt_handle(g, st, pkt, qid),    # Q_HRM
+                     lambda st: _cmt_handle(g, st, pkt, qid)],   # Q_GCM
+                    st)
+                st = st._replace(stalls_in_row=jnp.where(
+                    st.stalls_in_row == before, 0, st.stalls_in_row))
+                return st, jnp.asarray(WORKED, I)
+
+            return lax.cond(blocked, do_block, do_packet, st)
+
+        return lax.cond(picked, guarded, idle, st)
+
+    # watermark work first (mirrors oracle.step)
+    need_wb = _ctp_writeback_needed(g, st)
+    st, code = lax.cond(need_wb, try_ctp_wb,
+                        lambda st: (st, jnp.asarray(-1, I)), st)
+
+    def after_wb(st_code):
+        st, code = st_code
+        need_fl = _cmt_flush_needed(g, st)
+        return lax.cond(need_fl, try_cmt_flush, dispatch, st)
+
+    st, code = lax.cond(code == WORKED, lambda sc: sc, after_wb, (st, code))
+    return st, code
+
+
+def _deliver_fc(g, st):
+    """auto_flash: self-deliver all pending flash reads (zero latency)."""
+    cap = st.fc_buf.shape[0]
+
+    def body(i, st):
+        row = st.fc_buf[jnp.mod(i, cap)]
+        pkt = _pkt(g, 7, row[0], row[1], row[2])
+        return _qpush(st, Q_FC_RESP, pkt)
+
+    st = lax.fori_loop(st.fc_head, st.fc_n, body, st)
+    return st._replace(fc_head=st.fc_n)
+
+
+def run(g: FMMUGeometry, st: FMMUState, max_steps: int,
+        auto_flash: bool = False):
+    """Drive steps until quiescent/blocked (mirrors oracle.run)."""
+    def cond(carry):
+        st, n, cont = carry
+        return cont & (n < max_steps)
+
+    def body(carry):
+        st, n, _ = carry
+        st, code = step(g, st)
+        n = n + 1
+        worked = code == WORKED
+        if auto_flash:
+            can_deliver = (~worked) & (st.fc_n > st.fc_head)
+            st = lax.cond(can_deliver, lambda s: _deliver_fc(g, s),
+                          lambda s: s, st)
+            cont = worked | can_deliver
+        else:
+            cont = worked
+        return st, n, cont
+
+    st, n, _ = lax.while_loop(cond, body,
+                              (st, jnp.asarray(0, I), jnp.asarray(True)))
+    return st, n
+
+
+# ======================================================================
+# Host-side wrapper with the same driver API as the oracle
+# ======================================================================
+class FMMUEngine:
+    """Jitted FMMU with oracle-compatible driver API for lockstep tests
+    and integration into the serving runtime."""
+
+    def __init__(self, geom: FMMUGeometry):
+        self.g = geom
+        self.state = S.init_state(geom)
+        self._run = jax.jit(functools.partial(run, geom),
+                            static_argnames=("max_steps", "auto_flash"))
+
+    # -- pushes are host-side numpy edits batched through jnp updates --
+    def push_request(self, r: Request):
+        q = Q_GCM if r.src else Q_HRM
+        pkt = np.full((self.g.pkt_width,), NIL, np.int32)
+        pkt[0:5] = (r.kind, r.dlpn, r.dppn, r.old_dppn, r.req_id)
+        self._push(q, pkt)
+
+    def push_flash_response(self, tppn: int, ctp_set: int, ctp_way: int):
+        pkt = np.full((self.g.pkt_width,), NIL, np.int32)
+        pkt[0:5] = (7, tppn, ctp_set, ctp_way, NIL)
+        self._push(Q_FC_RESP, pkt)
+
+    def _push(self, q: int, pkt: np.ndarray):
+        st = self.state
+        cap = self.g.queue_cap
+        assert int(st.qtail[q] - st.qhead[q]) < cap, "queue overflow"
+        pos = int(st.qtail[q]) % cap
+        self.state = st._replace(
+            qbuf=st.qbuf.at[q, pos].set(jnp.asarray(pkt)),
+            qtail=st.qtail.at[q].add(1))
+
+    def pending_work(self) -> bool:
+        return bool((self.state.qtail - self.state.qhead).sum() > 0)
+
+    def run(self, max_steps: int = 100_000, auto_flash: bool = False) -> int:
+        self.state, n = self._run(self.state, max_steps=max_steps,
+                                  auto_flash=auto_flash)
+        return int(n)
+
+    def drain_outputs(self):
+        st = self.state
+        r0, f0, p0 = int(st.resp_head), int(st.fc_head), int(st.prog_head)
+        rn, fn, pn = int(st.resp_n), int(st.fc_n), int(st.prog_n)
+        rbuf = np.asarray(st.resp_buf)
+        fbuf = np.asarray(st.fc_buf)
+        pbuf = np.asarray(st.prog_buf)
+        resps = [Response(*map(int, rbuf[i % rbuf.shape[0]]))
+                 for i in range(r0, rn)]
+        fcs = [tuple(map(int, fbuf[i % fbuf.shape[0]])) for i in range(f0, fn)]
+        progs = [tuple(map(int, pbuf[i % pbuf.shape[0]])) for i in range(p0, pn)]
+        self.state = st._replace(
+            resp_head=jnp.asarray(rn, jnp.int32),
+            fc_head=jnp.asarray(fn, jnp.int32),
+            prog_head=jnp.asarray(pn, jnp.int32))
+        return resps, fcs, progs
+
+    # -- shutdown path -------------------------------------------------
+    def flush_all(self, max_rounds: int = 1000):
+        g = self.g
+
+        @jax.jit
+        def force_flush_one(st):
+            any_dtl = (st.dtl_tvpn != NIL).any()
+            oldest = jnp.argmin(st.dtl_seq).astype(I)
+            return lax.cond(any_dtl,
+                            lambda st: _flush_tvpn(g, st, oldest),
+                            lambda st: st, st)
+
+        @jax.jit
+        def force_wb(st):
+            st, done = _ctp_writeback_one(g, st)
+            return st, done
+
+        for _ in range(max_rounds):
+            dtl_left = bool((np.asarray(self.state.dtl_tvpn) != NIL).any())
+            fifo_left = int(self.state.fifo_tail - self.state.fifo_head) > 0
+            if not (dtl_left or fifo_left or self.pending_work()):
+                break
+            if dtl_left:
+                self.state = force_flush_one(self.state)
+            self.run(auto_flash=True)
+            while int(self.state.fifo_tail - self.state.fifo_head) > 0:
+                self.state, done = force_wb(self.state)
+                if not bool(done):
+                    break
+            self.run(auto_flash=True)
+
+    # -- inspection ------------------------------------------------------
+    def stats(self) -> dict:
+        return dict(zip(S.STAT_NAMES, map(int, np.asarray(self.state.stats))))
+
+    def resolve(self, dlpn: int) -> int:
+        g = self.g
+        st = self.state
+        block_id = dlpn // g.cmt_entries
+        s = block_id % g.cmt_sets
+        tags = np.asarray(st.cmt_tag[s])
+        fl = np.asarray(st.cmt_flags[s])
+        for w in range(g.cmt_ways):
+            if tags[w] == block_id and (fl[w] & F_VALID):
+                return int(st.cmt_data[s, w, dlpn % g.cmt_entries])
+        tvpn = dlpn // g.entries_per_tp
+        ts = tvpn % g.ctp_sets
+        ttags = np.asarray(st.ctp_tag[ts])
+        tfl = np.asarray(st.ctp_flags[ts])
+        for w in range(g.ctp_ways):
+            if ttags[w] == tvpn and (tfl[w] & F_VALID):
+                return int(st.ctp_data[ts, w, dlpn % g.entries_per_tp])
+        tppn = int(st.gtd[tvpn])
+        if tppn == NIL:
+            return NIL
+        return int(st.flash_tp[tppn, dlpn % g.entries_per_tp])

@@ -1,0 +1,133 @@
+"""FMMUState: the engine's state as a flat pytree of fixed-shape arrays.
+
+Cache flags are bit-packed per block: VALID|DIRTY|TRANSIENT|REF.
+Queues are ring buffers with monotonic head/tail counters (head can move
+backwards one slot for head-of-line re-insertion on CTP stalls).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.fmmu.types import FMMUGeometry, NIL
+
+F_VALID, F_DIRTY, F_TRANS, F_REF = 1, 2, 4, 8
+
+# queue ids (must match oracle.py)
+Q_FC_RESP, Q_CTP_RESP, Q_CTP_REQ, Q_HRM, Q_GCM = range(5)
+
+# engine step return codes
+WORKED, IDLE, BLOCKED = 0, 1, 2
+
+
+class FMMUState(NamedTuple):
+    # --- CMT ---
+    cmt_tag: jnp.ndarray      # [S,W]
+    cmt_flags: jnp.ndarray    # [S,W]
+    cmt_data: jnp.ndarray     # [S,W,E]
+    cmt_next: jnp.ndarray     # [S,W]
+    cmt_mshr: jnp.ndarray     # [S,W,M,5] kind,off,req_id,dppn,old
+    cmt_mshr_n: jnp.ndarray   # [S,W]
+    cmt_clock: jnp.ndarray    # [S]
+    cmt_dirty: jnp.ndarray    # scalar
+    # --- CTP ---
+    ctp_tag: jnp.ndarray
+    ctp_flags: jnp.ndarray
+    ctp_data: jnp.ndarray     # [S2,W2,Et]
+    ctp_mshr: jnp.ndarray     # [S2,W2,M2,3+E] kind,chunk,dest,data
+    ctp_mshr_n: jnp.ndarray
+    ctp_clock: jnp.ndarray
+    ctp_dirty: jnp.ndarray
+    # --- DTL ---
+    dtl_tvpn: jnp.ndarray     # [D]
+    dtl_head: jnp.ndarray     # [D]
+    dtl_ndirty: jnp.ndarray   # [D]
+    dtl_updated: jnp.ndarray  # [D]
+    dtl_seq: jnp.ndarray      # [D] registration order; NIL slot = invalid
+    dtl_ctr: jnp.ndarray      # scalar monotonic
+    # --- CTP flush FIFO ---
+    fifo: jnp.ndarray         # [F]
+    fifo_head: jnp.ndarray
+    fifo_tail: jnp.ndarray
+    # --- GTD / flash ---
+    gtd: jnp.ndarray          # [n_tvpns]
+    flash_tp: jnp.ndarray     # [tppn_cap, Et]
+    tppn_next: jnp.ndarray
+    # --- queues ---
+    qbuf: jnp.ndarray         # [5, cap, PW]
+    qhead: jnp.ndarray        # [5]
+    qtail: jnp.ndarray        # [5]
+    credits: jnp.ndarray      # [5]
+    weights: jnp.ndarray      # [5] (runtime-adjustable, §4.6)
+    stalls_in_row: jnp.ndarray
+    # --- outputs ---
+    resp_buf: jnp.ndarray     # [cap,4] req_id,kind,dppn,status
+    resp_n: jnp.ndarray       # tail (monotonic)
+    resp_head: jnp.ndarray    # drained-up-to pointer
+    fc_buf: jnp.ndarray       # [cap,3] tppn,set,way
+    fc_n: jnp.ndarray
+    fc_head: jnp.ndarray
+    prog_buf: jnp.ndarray     # [cap,2] tvpn,new_tppn
+    prog_n: jnp.ndarray
+    prog_head: jnp.ndarray
+    # --- stats (order: hit,miss,mshr_merge,stall,flush_tvpns,flush_blocks,
+    #            fc_reads,programs,steps,ctp_hit,ctp_miss) ---
+    stats: jnp.ndarray        # [11]
+
+
+STAT_NAMES = ("hit", "miss", "mshr_merge", "stall", "flush_tvpns",
+              "flush_blocks", "fc_reads", "programs", "steps", "ctp_hit",
+              "ctp_miss")
+
+
+def init_state(g: FMMUGeometry) -> FMMUState:
+    i32 = jnp.int32
+    pw = g.pkt_width
+    m2w = 3 + g.cmt_entries
+    cap = g.queue_cap
+    return FMMUState(
+        cmt_tag=jnp.full((g.cmt_sets, g.cmt_ways), NIL, i32),
+        cmt_flags=jnp.zeros((g.cmt_sets, g.cmt_ways), i32),
+        cmt_data=jnp.full((g.cmt_sets, g.cmt_ways, g.cmt_entries), NIL, i32),
+        cmt_next=jnp.full((g.cmt_sets, g.cmt_ways), NIL, i32),
+        cmt_mshr=jnp.full((g.cmt_sets, g.cmt_ways, g.mshr_cap, 5), NIL, i32),
+        cmt_mshr_n=jnp.zeros((g.cmt_sets, g.cmt_ways), i32),
+        cmt_clock=jnp.zeros((g.cmt_sets,), i32),
+        cmt_dirty=jnp.zeros((), i32),
+        ctp_tag=jnp.full((g.ctp_sets, g.ctp_ways), NIL, i32),
+        ctp_flags=jnp.zeros((g.ctp_sets, g.ctp_ways), i32),
+        ctp_data=jnp.full((g.ctp_sets, g.ctp_ways, g.entries_per_tp), NIL, i32),
+        ctp_mshr=jnp.full((g.ctp_sets, g.ctp_ways, g.ctp_mshr_cap, m2w), NIL, i32),
+        ctp_mshr_n=jnp.zeros((g.ctp_sets, g.ctp_ways), i32),
+        ctp_clock=jnp.zeros((g.ctp_sets,), i32),
+        ctp_dirty=jnp.zeros((), i32),
+        dtl_tvpn=jnp.full((g.dtl_entries,), NIL, i32),
+        dtl_head=jnp.full((g.dtl_entries,), NIL, i32),
+        dtl_ndirty=jnp.zeros((g.dtl_entries,), i32),
+        dtl_updated=jnp.zeros((g.dtl_entries,), i32),
+        dtl_seq=jnp.full((g.dtl_entries,), jnp.iinfo(jnp.int32).max, i32),
+        dtl_ctr=jnp.zeros((), i32),
+        fifo=jnp.full((max(16, g.n_tvpns + 1, 2 * g.ctp_blocks),), NIL, i32),
+        fifo_head=jnp.zeros((), i32),
+        fifo_tail=jnp.zeros((), i32),
+        gtd=jnp.full((g.n_tvpns,), NIL, i32),
+        flash_tp=jnp.full((g.tppn_cap, g.entries_per_tp), NIL, i32),
+        tppn_next=jnp.zeros((), i32),
+        qbuf=jnp.zeros((5, cap, pw), i32),
+        qhead=jnp.zeros((5,), i32),
+        qtail=jnp.zeros((5,), i32),
+        credits=jnp.asarray(g.wrr_weights, i32),
+        weights=jnp.asarray(g.wrr_weights, i32),
+        stalls_in_row=jnp.zeros((), i32),
+        resp_buf=jnp.zeros((cap, 4), i32),
+        resp_n=jnp.zeros((), i32),
+        resp_head=jnp.zeros((), i32),
+        fc_buf=jnp.zeros((cap, 3), i32),
+        fc_n=jnp.zeros((), i32),
+        fc_head=jnp.zeros((), i32),
+        prog_buf=jnp.zeros((cap, 2), i32),
+        prog_n=jnp.zeros((), i32),
+        prog_head=jnp.zeros((), i32),
+        stats=jnp.zeros((11,), i32),
+    )

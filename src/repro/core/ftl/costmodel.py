@@ -1,0 +1,57 @@
+"""Micro-op cost model for map-cache execution time (Fig. 10 reproduction).
+
+The paper measures DFTL/CDFTL on a 400MHz Cortex-R4 in gem5 and FMMU via
+HLS at the same clock. Offline we cannot run gem5/HLS, so each scheme
+counts its primitive operations and multiplies by the per-op cycle costs
+below. The constants were calibrated ONCE against the paper's reported
+anchors (DFTL hit 1.5us/1-core, CDFTL CMT-miss-CTP-hit 4us/1-core, FMMU
+0.16us, T_FTL_cmd 0.2us, DFTL miss ~3x hit, FMMU flush <=10us) and are
+held fixed for every other experiment; benchmarks/fig10 reports the
+achieved match (all anchors within ~12%).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+CLOCK_MHZ = 400.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SwCosts:
+    """Software FTL (per-op cycles on the embedded core)."""
+    dispatch: int = 150        # request dequeue, decode, function dispatch
+    probe_way: int = 25        # tag load + compare per way
+    entry_rw: int = 8          # read/write one mapping entry
+    lru: int = 342             # LRU/second-chance list maintenance per hit
+    sc_pass: int = 60          # second-chance scan per way pass
+    fill_entry: int = 5        # copy one entry on fill
+    fill_book: int = 60        # fill bookkeeping
+    miss_book: int = 900       # pend/blocked-request management on miss
+    l2_book: int = 750         # CDFTL two-level list bookkeeping on CMT miss
+    issue: int = 80            # NAND command generation (T_FTL_cmd ~= 0.2us)
+    flush_scan_blk: float = 3.5  # per cache block scanned looking for
+    #                              same-TVPN dirty blocks (DFTL/CDFTL)
+    flush_blk: int = 40        # per dirty block merged into the TP
+    tp_rmw: int = 200          # read-modify-write assembly of a TP
+
+
+@dataclasses.dataclass(frozen=True)
+class HwCosts:
+    """FMMU hardware pipeline (cycles at the same 400MHz clock)."""
+    cmt_packet: int = 64       # full CMT pipeline pass (probe+apply+resp)
+    ctp_packet: int = 40       # CTP pipeline pass
+    fc_issue: int = 24         # flash command generation
+    mshr_log: int = 8          # in-cache MSHR append
+    flush_base: int = 64       # DTL victim selection
+    flush_blk: int = 24        # per chained dirty block (next-link walk)
+    pipeline_ii: int = 16      # initiation interval: the FMMU pipeline
+    #                            accepts a new packet every II cycles;
+    #                            plan.cycles is end-to-end latency
+
+
+SW = SwCosts()
+HW = HwCosts()
+
+
+def us(cycles: float) -> float:
+    return cycles / CLOCK_MHZ

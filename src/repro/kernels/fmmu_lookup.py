@@ -1,0 +1,88 @@
+"""Pallas TPU kernel for the FMMU's hot path: batched CMT probe.
+
+Hardware adaptation (DESIGN.md §2): the paper's CAM-style parallel tag
+compare becomes a *one-hot matmul gather* — set indices are expanded to
+a one-hot [blk, S] matrix and multiplied against the VMEM-resident tag /
+data arrays, turning the irregular per-request set lookup into two MXU
+matmuls (TPUs have no CAM, but they have a 128x128 systolic array).
+The whole CMT (paper geometry: 512 sets x 4 ways x 8 entries x 4B ≈
+64KB tags+data) fits in VMEM, exactly like the SRAM block of the
+hardware unit; only the request vector streams through the grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fl_kernel(tags_ref, valid_ref, data_ref, dlpn_ref, hit_ref, dppn_ref,
+               set_ref, way_ref, *, entries_per_block, n_sets, n_ways,
+               blk):
+    dlpns = dlpn_ref[...]                              # [blk]
+    block_id = dlpns // entries_per_block
+    offset = jnp.mod(dlpns, entries_per_block)
+    set_idx = jnp.mod(block_id, n_sets)
+    active = dlpns >= 0
+
+    # one-hot gather of the probe sets via the MXU
+    onehot = (set_idx[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (blk, n_sets), 1)
+              ).astype(jnp.float32)                    # [blk, S]
+    tags = tags_ref[...].astype(jnp.float32)           # [S, W]
+    valid = valid_ref[...].astype(jnp.float32)         # [S, W]
+    row_tags = jax.lax.dot(onehot, tags,
+                           preferred_element_type=jnp.float32)
+    row_valid = jax.lax.dot(onehot, valid,
+                            preferred_element_type=jnp.float32)
+    match = (row_tags == block_id[:, None].astype(jnp.float32)) & \
+        (row_valid > 0.5)                              # [blk, W]
+    hit = match.any(axis=1) & active
+    way = jnp.argmax(match, axis=1).astype(jnp.int32)
+
+    e = entries_per_block
+    data2d = data_ref[...].reshape(n_sets, n_ways * e).astype(jnp.float32)
+    row_data = jax.lax.dot(onehot, data2d,
+                           preferred_element_type=jnp.float32)  # [blk, W*E]
+    col = way * e + offset
+    picked = jnp.take_along_axis(row_data, col[:, None], axis=1)[:, 0]
+    dppn = jnp.where(hit, picked.astype(jnp.int32), -1)
+
+    hit_ref[...] = hit.astype(jnp.int32)
+    dppn_ref[...] = dppn
+    set_ref[...] = set_idx.astype(jnp.int32)
+    way_ref[...] = way
+
+
+def fmmu_lookup(tags, valid, data, dlpns, *, entries_per_block,
+                block_size=256, interpret=False):
+    """tags [S,W] int32; valid [S,W] bool; data [S,W,E] int32;
+    dlpns [Bq] int32 -> (hit bool, dppn, set, way)."""
+    n_sets, n_ways = tags.shape
+    bq = dlpns.shape[0]
+    blk = min(block_size, bq)
+    bq_p = -(-bq // blk) * blk
+    if bq_p != bq:
+        dlpns = jnp.pad(dlpns, (0, bq_p - bq), constant_values=-1)
+    kernel = functools.partial(
+        _fl_kernel, entries_per_block=entries_per_block, n_sets=n_sets,
+        n_ways=n_ways, blk=blk)
+    full = lambda *_: tuple(0 for _ in range(2))
+    hit, dppn, set_idx, way = pl.pallas_call(
+        kernel,
+        grid=(bq_p // blk,),
+        in_specs=[
+            pl.BlockSpec((n_sets, n_ways), lambda i: (0, 0)),
+            pl.BlockSpec((n_sets, n_ways), lambda i: (0, 0)),
+            pl.BlockSpec((n_sets, n_ways, entries_per_block),
+                         lambda i: (0, 0, 0)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=[pl.BlockSpec((blk,), lambda i: (i,))] * 4,
+        out_shape=[jax.ShapeDtypeStruct((bq_p,), jnp.int32)] * 4,
+        interpret=interpret,
+    )(tags, valid.astype(jnp.int32), data, dlpns)
+    return (hit[:bq].astype(bool), dppn[:bq], set_idx[:bq], way[:bq])

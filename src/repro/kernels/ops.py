@@ -1,0 +1,109 @@
+"""Jit'd dispatch wrappers for the compute hot-spots.
+
+``impl`` selects the lowering:
+  auto             — Pallas on TPU, blocked-jnp elsewhere (CPU dry-run /
+                     tests). This keeps .lower().compile() working on the
+                     512-virtual-device CPU mesh while targeting Mosaic
+                     on real hardware.
+  pallas           — pl.pallas_call, native (TPU)
+  pallas_interpret — pl.pallas_call(interpret=True): kernel body
+                     executed by the Pallas interpreter on CPU; used by
+                     the per-kernel allclose tests.
+  blocked          — chunked pure-jnp engine (same tiling as the kernel)
+  naive            — O(S^2) oracle (tests only)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _default_impl(impl: Optional[str]) -> str:
+    if impl not in (None, "auto"):
+        return impl
+    platform = jax.default_backend()
+    return "pallas" if platform == "tpu" else "blocked"
+
+
+# ----------------------------------------------------------------------
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    segment_ids=None, bidirectional=False, impl=None,
+                    q_chunk=512, kv_chunk=512):
+    sel = _default_impl(impl)
+    if sel in ("pallas", "pallas_interpret") and segment_ids is not None:
+        sel = "blocked"   # packing masks: blocked lowering handles segments
+    if sel in ("pallas", "pallas_interpret"):
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            segment_ids=segment_ids, bidirectional=bidirectional,
+            interpret=(sel == "pallas_interpret"))
+    if sel == "blocked":
+        return ref.flash_attention_blocked(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            segment_ids=segment_ids, bidirectional=bidirectional,
+            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return ref.attention_naive(q, k, v, causal=causal, window=window,
+                               softcap=softcap, segment_ids=segment_ids,
+                               bidirectional=bidirectional)
+
+
+# ----------------------------------------------------------------------
+def paged_attention(q, k_pool, v_pool, block_table, ctx_lens, *,
+                    softcap=0.0, window=0, page_mask=None,
+                    return_stats=False, impl=None, pages_per_chunk=8):
+    sel = _default_impl(impl)
+    if sel in ("pallas", "pallas_interpret") and page_mask is not None:
+        sel = "blocked"   # striped-page masking: blocked lowering
+    if sel in ("pallas", "pallas_interpret"):
+        from repro.kernels import paged_attention as pa
+        return pa.paged_attention(
+            q, k_pool, v_pool, block_table, ctx_lens, softcap=softcap,
+            window=window, return_stats=return_stats,
+            interpret=(sel == "pallas_interpret"))
+    if sel == "blocked":
+        return ref.paged_attention_blocked(
+            q, k_pool, v_pool, block_table, ctx_lens, softcap=softcap,
+            window=window, page_mask=page_mask,
+            pages_per_chunk=pages_per_chunk, return_stats=return_stats)
+    return ref.paged_attention_naive(q, k_pool, v_pool, block_table,
+                                     ctx_lens, softcap=softcap,
+                                     window=window, page_mask=page_mask,
+                                     return_stats=return_stats)
+
+
+# ----------------------------------------------------------------------
+def mamba_chunk_scan(x, dt, A, B, C, D, *, chunk=256, initial_state=None,
+                     impl=None):
+    sel = _default_impl(impl)
+    if sel in ("pallas", "pallas_interpret"):
+        from repro.kernels import mamba_scan as ms
+        return ms.mamba_chunk_scan(
+            x, dt, A, B, C, D, chunk=chunk, initial_state=initial_state,
+            interpret=(sel == "pallas_interpret"))
+    if sel == "blocked":
+        return ref.mamba_chunk_scan_blocked(x, dt, A, B, C, D, chunk=chunk,
+                                            initial_state=initial_state)
+    return ref.mamba_chunk_scan_naive(x, dt, A, B, C, D, chunk=chunk,
+                                      initial_state=initial_state)
+
+
+# ----------------------------------------------------------------------
+def fmmu_lookup(tags, valid, data, dlpns, *, entries_per_block, impl=None):
+    sel = _default_impl(impl)
+    if sel in ("pallas", "pallas_interpret"):
+        from repro.kernels import fmmu_lookup as fl
+        return fl.fmmu_lookup(tags, valid, data, dlpns,
+                              entries_per_block=entries_per_block,
+                              interpret=(sel == "pallas_interpret"))
+    return ref.fmmu_lookup_ref(tags, valid, data, dlpns,
+                               entries_per_block=entries_per_block)
+
+
+combine_partial_attention = ref.combine_partial_attention
+mamba_decode_step = ref.mamba_decode_step

@@ -1,0 +1,129 @@
+"""Pallas TPU paged decode attention over FMMU block tables.
+
+The block table (the FMMU's translation output: logical page -> physical
+block) rides in as a *scalar-prefetch* operand, so each grid step's KV
+tile is DMA'd straight from the physical block the table names —
+`k_pool[table[b, i]]` is expressed in the BlockSpec index_map and the
+Mosaic pipeline overlaps tile i+1's DMA with tile i's compute. This is
+the TPU rendering of the paper's "FMMU keeps all flash channels busy":
+the map unit's output drives the memory pipeline directly.
+
+Grid = (batch, n_pages); online-softmax stats carried in VMEM scratch
+across the page axis; per-sequence length masking from a prefetched
+ctx_lens vector. Returns optional (m, l) stats for the cross-shard
+flash-decoding combine used by sequence-parallel 500k decode.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _pa_kernel(table_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
+               l_ref, macc, lacc, acc, *, scale, softcap, window, page, kv,
+               group):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    np_ = pl.num_programs(1)
+
+    @pl.when(i == 0)
+    def _init():
+        macc[...] = jnp.full_like(macc, NEG_INF)
+        lacc[...] = jnp.zeros_like(lacc)
+        acc[...] = jnp.zeros_like(acc)
+
+    ctx = ctx_ref[b]
+    # page i covers positions [i*page, (i+1)*page)
+    live = i * page < ctx
+    if window and window > 0:   # pages wholly below the window: skip DMA'd tile
+        live &= (i + 1) * page > ctx - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale        # [H, D]
+        k = k_ref[0].astype(jnp.float32)                # [page, KV, D]
+        v = v_ref[0].astype(jnp.float32)
+        h, d = q.shape
+        qg = q.reshape(kv, group, d)
+        s = jax.lax.dot_general(qg, k, (((2,), (2,)), ((0,), (1,))),
+                                preferred_element_type=jnp.float32)
+        # s: [KV, G, page]
+        if softcap and softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        pos = i * page + jax.lax.broadcasted_iota(
+            jnp.int32, (kv, group, page), 2)
+        valid = pos < ctx
+        if window and window > 0:
+            valid &= pos >= ctx - window
+        s = jnp.where(valid, s, NEG_INF)
+        s = s.reshape(h, page)
+        m_prev = macc[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                          # [H, page]
+        lacc[...] = lacc[...] * alpha + p.sum(axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.reshape(kv, group, page), v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)         # [KV, G, D]
+        acc[...] = acc[...] * alpha + pv.reshape(h, d)
+        macc[...] = m_new
+
+    @pl.when(i == np_ - 1)
+    def _finish():
+        o_ref[0] = (acc[...] / jnp.maximum(lacc[...], 1e-30)).astype(o_ref.dtype)
+        m_ref[0] = macc[...][:, 0]
+        l_ref[0] = lacc[...][:, 0]
+
+
+def paged_attention(q, k_pool, v_pool, block_table, ctx_lens, *,
+                    softcap=0.0, window=0, return_stats=False,
+                    interpret=False):
+    """q [B,H,D]; pools [NB,P,KV,D]; block_table [B,MAXP] int32;
+    ctx_lens [B] int32 -> [B,H,D] (+ (m,l) [B,H] fp32)."""
+    b, h, d = q.shape
+    nb, page, kv, _ = k_pool.shape
+    maxp = block_table.shape[1]
+    group = h // kv
+    kernel = functools.partial(
+        _pa_kernel, scale=1.0 / math.sqrt(d), softcap=softcap,
+        window=window, page=page, kv=kv, group=group)
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, maxp),
+            in_specs=[
+                pl.BlockSpec((1, h, d), lambda bi, i, tbl, ctx: (bi, 0, 0)),
+                pl.BlockSpec((1, page, kv, d),
+                             lambda bi, i, tbl, ctx: (tbl[bi, i], 0, 0, 0)),
+                pl.BlockSpec((1, page, kv, d),
+                             lambda bi, i, tbl, ctx: (tbl[bi, i], 0, 0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, h, d), lambda bi, i, tbl, ctx: (bi, 0, 0)),
+                pl.BlockSpec((1, h), lambda bi, i, tbl, ctx: (bi, 0)),
+                pl.BlockSpec((1, h), lambda bi, i, tbl, ctx: (bi, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((h, 1), jnp.float32),
+                pltpu.VMEM((h, 1), jnp.float32),
+                pltpu.VMEM((h, d), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_table, ctx_lens, q, k_pool, v_pool)
+    if return_stats:
+        return out, (m, l)
+    return out

@@ -1,0 +1,110 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the sweep's
+JSON records.
+
+  PYTHONPATH=src python -m repro.launch.report --dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_bytes(n):
+    if n is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def load(dir_):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        if p.endswith("summary.json"):
+            continue
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    lines = ["| arch | shape | mesh | status | compile | arg/dev | temp/dev | collectives |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if not r.get("applicable", True):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"skip ({r['skip_reason'][:40]}…) | - | - | - | - |")
+            continue
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"**FAIL** | - | - | - | - |")
+            continue
+        mem = r.get("memory", {})
+        coll = r.get("collectives", {}).get("counts", {})
+        cstr = " ".join(f"{k.split('-')[1] if '-' in k else k}:{v}"
+                        for k, v in sorted(coll.items())) or "none"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r.get('compile_s', '-')}s | "
+            f"{fmt_bytes(mem.get('argument_bytes'))} | "
+            f"{fmt_bytes(mem.get('temp_bytes'))} | {cstr} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs) -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | useful | bound-by note |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != "16x16" or not r.get("ok"):
+            continue
+        ro = r.get("roofline")
+        if not ro:
+            continue
+        dom = ro["dominant"]
+        note = {
+            "compute": "MXU-bound: raise arithmetic intensity or accept",
+            "memory": "HBM-bound: fuse/recompute less, shrink dtypes, "
+                      "bigger tiles",
+            "collective": "ICI-bound: reshard, overlap, or compress",
+        }[dom]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.4f} | "
+            f"{ro['memory_s']:.4f} | {ro['collective_s']:.4f} | "
+            f"**{dom}** | {ro['useful_ratio']:.2f} | {note} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    recs = load(args.dir)
+    pod = [r for r in recs if r.get("mesh") == "16x16"]
+    mp = [r for r in recs if r.get("mesh") == "2x16x16"]
+    ok = sum(1 for r in recs if r.get("ok"))
+    skip = sum(1 for r in recs if not r.get("applicable", True))
+    fail = len(recs) - ok - skip
+    out = []
+    out.append(f"### Dry-run status: {ok} compiled ok, {skip} skipped "
+               f"(by design), {fail} failed\n")
+    out.append("#### Single-pod (16x16 = 256 chips)\n")
+    out.append(dryrun_table(pod))
+    out.append("\n#### Multi-pod (2x16x16 = 512 chips)\n")
+    out.append(dryrun_table(mp))
+    out.append("\n### Roofline (single-pod)\n")
+    out.append(roofline_table(recs))
+    text = "\n".join(out)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

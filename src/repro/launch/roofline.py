@@ -1,0 +1,143 @@
+"""Roofline-term extraction from a lowered/compiled dry-run artifact.
+
+compute term    = HLO_FLOPs_per_device / peak_FLOPs
+memory term     = HLO_bytes_per_device / HBM_bw
+collective term = collective_bytes_per_device / link_bw
+
+cost_analysis() reports the per-partition (per-chip) SPMD module, so the
+per-chip terms above equal the spec's global/(chips x rate) form.
+Collective bytes are not in cost_analysis: we parse the compiled HLO and
+sum operand bytes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute. Result-shape bytes are used as operand
+proxy (exact for all-reduce/all-to-all/permute); all-gather operand =
+result/group, reduce-scatter operand = result (input side), both
+corrected with the parsed replica-group size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, Optional
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\(?[\w\[\],\s{}:]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Per-device bytes by collective kind (operand-side accounting)."""
+    out: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue  # start/done pairs: count the start only
+        shapes, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shapes)
+        g = _GROUPS_RE.search(line)
+        group = len(g.group(1).split(",")) if g else 1
+        if kind == "all-gather" and group > 0:
+            nbytes = nbytes // max(group, 1)   # operand = result / group
+        out[kind] = out.get(kind, 0) + nbytes
+        counts[kind] = counts.get(kind, 0) + 1
+    return {"bytes_by_kind": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def extrapolate(c1: dict, c2: dict, n_periods: int) -> dict:
+    """Exact linear-in-depth cost reconstruction from 1-period and
+    2-period unrolled compiles: total(n) = c1 + (n-1) * (c2 - c1).
+    Works for flops / bytes / collective bytes (layer costs are additive;
+    embedding+head appear in both and cancel in the delta)."""
+    out = {}
+    for k in set(c1) | set(c2):
+        a = float(c1.get(k, 0.0) or 0.0)
+        b = float(c2.get(k, 0.0) or 0.0)
+        out[k] = a + (n_periods - 1) * (b - a)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops_global: float
+    useful_ratio: float          # MODEL_FLOPS / (HLO_FLOPs * chips)
+    dominant: str
+    note: str = ""
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(cost: Dict[str, float], coll: Dict[str, Any], *,
+            n_devices: int, model_flops_global: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(coll.get("total_bytes", 0.0))
+    terms = {
+        "compute": flops / PEAK_FLOPS_BF16,
+        "memory": nbytes / HBM_BW,
+        "collective": cbytes / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    hlo_global = flops * n_devices
+    ratio = model_flops_global / hlo_global if hlo_global else 0.0
+    return Roofline(
+        compute_s=terms["compute"], memory_s=terms["memory"],
+        collective_s=terms["collective"], flops_per_device=flops,
+        bytes_per_device=nbytes, coll_bytes_per_device=cbytes,
+        model_flops_global=model_flops_global, useful_ratio=ratio,
+        dominant=dominant)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D for training, 2·N·D for inference forward passes (N =
+    active params; D = tokens processed in the step). Decode attention's
+    KV-scan flops are additionally counted (2·ctx·kvdim per layer·token)."""
+    total, active = cfg.count_params()
+    if shape.kind == "train":
+        return 6.0 * active * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * active * shape.seq_len * shape.global_batch
+    # decode: one token per sequence + attention over the KV history
+    d = 2.0 * active * shape.global_batch
+    attn_kv = (2 * 2 * cfg.n_attn_layers * cfg.n_kv_heads * cfg.head_dim
+               * (cfg.n_heads // max(cfg.n_kv_heads, 1)))
+    d += attn_kv * shape.seq_len * shape.global_batch
+    return d

@@ -1,0 +1,123 @@
+"""Dry-run sweep driver: every (arch x shape) cell on both production
+meshes, one subprocess per cell (fresh XLA state), JSON per cell +
+rollup summary.
+
+  PYTHONPATH=src python -m repro.launch.sweep --out experiments/dryrun
+  PYTHONPATH=src python -m repro.launch.sweep --only llama3.2-1b
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import ARCHS, SHAPES, shape_applicable
+
+
+def cell_id(arch, shape, mesh):
+    return f"{arch}_{shape}_{mesh}".replace(".", "_")
+
+
+def run_cell(arch, shape, mesh, out_dir, *, extrapolate=True, fsdp=False,
+             timeout=3600):
+    path = os.path.join(out_dir, cell_id(arch, shape, mesh) + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("ok") or not rec.get("applicable", True):
+            return rec, True  # cached
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--mesh", mesh,
+           "--out", path]
+    if not extrapolate:
+        cmd.append("--no-extrapolate")
+    if fsdp:
+        cmd.append("--fsdp")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env)
+        if os.path.exists(path):
+            with open(path) as f:
+                return json.load(f), False
+        rec = {"arch": arch, "shape": shape, "mesh": mesh, "ok": False,
+               "error": proc.stderr[-1500:], "wall_s": time.time() - t0}
+    except subprocess.TimeoutExpired:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh, "ok": False,
+               "error": f"timeout after {timeout}s"}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    return rec, False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--only", default=None, help="arch filter substring")
+    ap.add_argument("--shapes", default=None, help="comma-separated")
+    ap.add_argument("--meshes", default="pod,multipod")
+    ap.add_argument("--timeout", type=int, default=3600)
+    # FSDP for models whose fp32 state exceeds HBM on pure TP
+    ap.add_argument("--fsdp-archs",
+                    default="jamba-1.5-large-398b,arctic-480b,dbrx-132b,"
+                            "qwen2-72b")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    fsdp_archs = set(args.fsdp_archs.split(","))
+    shapes = (args.shapes.split(",") if args.shapes else list(SHAPES))
+    meshes = args.meshes.split(",")
+    results = []
+    t0 = time.time()
+    for arch in ARCHS:
+        if args.only and args.only not in arch:
+            continue
+        for shape in shapes:
+            ok, why = shape_applicable(ARCHS[arch], SHAPES[shape])
+            for mesh in meshes:
+                if not ok:
+                    path = os.path.join(args.out,
+                                        cell_id(arch, shape, mesh) + ".json")
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh,
+                           "applicable": False, "skip_reason": why}
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=2)
+                    results.append(rec)
+                    print(f"SKIP {arch:24s} {shape:12s} {mesh}: {why}",
+                          flush=True)
+                    continue
+                t1 = time.time()
+                rec, cached = run_cell(
+                    arch, shape, mesh, args.out,
+                    extrapolate=(mesh == "pod"),
+                    fsdp=(arch in fsdp_archs and shape == "train_4k"),
+                    timeout=args.timeout)
+                results.append(rec)
+                status = "ok" if rec.get("ok") else "FAIL"
+                extra = ""
+                if rec.get("roofline"):
+                    r = rec["roofline"]
+                    extra = (f" dom={r['dominant']}"
+                             f" c={r['compute_s']:.3f}s"
+                             f" m={r['memory_s']:.3f}s"
+                             f" n={r['collective_s']:.3f}s"
+                             f" useful={r['useful_ratio']:.2f}")
+                print(f"{status:4s} {arch:24s} {shape:12s} {mesh:8s} "
+                      f"[{time.time() - t1:5.0f}s{' cached' if cached else ''}]"
+                      f"{extra}", flush=True)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    n_skip = sum(1 for r in results if not r.get("applicable", True))
+    n_fail = len(results) - n_ok - n_skip
+    summary = {"ok": n_ok, "skipped": n_skip, "failed": n_fail,
+               "wall_s": round(time.time() - t0)}
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(summary, f, indent=2)
+    print(json.dumps(summary), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \\
+      --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Full-config launches on real hardware use the same entry point without
+--smoke; the mesh is chosen from the visible device count (TP fixed per
+arch, data axis absorbs the rest; multi-pod adds the 'pod' axis)."""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, smoke_config
+from repro.data.pipeline import DataConfig, data_iter
+from repro.models import Runtime, build_model
+from repro.parallel.sharding import trivial_ctx
+from repro.training import optimizer as opt
+from repro.training.elastic import make_ctx
+from repro.training.train_loop import TrainerConfig, train
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config for CPU runs")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=0,
+                    help="model-parallel size (0 = single device)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--fp32", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    ctx = (make_ctx(len(jax.devices()), model_parallel=args.tp)
+           if args.tp else trivial_ctx())
+    rt = Runtime(
+        compute_dtype=jnp.float32 if args.fp32 else jnp.bfloat16,
+        param_dtype=jnp.float32, remat=args.remat)
+    model = build_model(cfg, rt, ctx)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch)
+    it = data_iter(dcfg)
+    ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                           decay_steps=args.steps)
+    tcfg = TrainerConfig(total_steps=args.steps, log_every=args.log_every,
+                         ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+                         grad_accum=args.grad_accum)
+
+    def on_step(step, metrics):
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.2f}", flush=True)
+
+    state, summary = train(model, it, ocfg, tcfg, on_step=on_step)
+    if hasattr(it, "close"):
+        it.close()
+    print(json.dumps({
+        "final_loss": summary["history"][-1][1],
+        "first_loss": summary["history"][0][1],
+        "mean_step_s": round(summary["mean_step_s"], 4),
+        "stragglers": len(summary["stragglers"]),
+    }))
+    return state, summary
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.common import Runtime
+from repro.models.model import Model, build_model

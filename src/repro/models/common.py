@@ -1,0 +1,113 @@
+"""Shared model building blocks (pure functional, params = nested dicts).
+
+Every ``init_*`` has a matching ``*_specs`` returning an identically
+structured tree of ``jax.sharding.PartitionSpec`` with *logical* mesh
+axis names ('data', 'model'); parallel/sharding.py resolves them onto a
+concrete mesh (mapping 'data' -> ('pod','data') on the multi-pod mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Execution-policy knobs, orthogonal to the architecture."""
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    param_dtype: jnp.dtype = jnp.float32
+    remat: str = "dots"          # 'none' | 'dots' | 'full'
+    scan_layers: bool = True
+    kernel_impl: Optional[str] = None   # ops.py impl selector (None = auto)
+    page_size: int = 256         # tokens per KV page
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    capacity_factor: Optional[float] = None
+    zloss: float = 0.0
+    # sharding toggles (hillclimb levers)
+    shard_kv_pool_pages: bool = False  # long-context: stripe pages over data
+    seq_shard_acts: bool = False       # shard sequence dim of activations (SP)
+
+
+def cast(x, dtype):
+    return x.astype(dtype) if x.dtype != dtype else x
+
+
+# ----------------------------------------------------------------------
+def init_dense(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / (d_in ** 0.5)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def rms_norm(x, w, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_rms_norm(d: int, dtype):
+    return jnp.zeros((d,), dtype)  # stored as (1 + w) offset form
+
+
+# ----------------------------------------------------------------------
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions [...,S] -> (cos, sin) [...,S, head_dim//2] fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [B,S,H,D]; cos/sin [B,S,half] or [S,half]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    xf1 = x1.astype(jnp.float32)
+    xf2 = x2.astype(jnp.float32)
+    o1 = xf1 * cos - xf2 * sin
+    o2 = xf2 * cos + xf1 * sin
+    return jnp.concatenate([o1, o2], axis=-1).astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    if cap and cap > 0:
+        return cap * jnp.tanh(x / cap)
+    return x
+
+
+def activation(x, kind: str):
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.silu(x)
+
+
+# ----------------------------------------------------------------------
+def tree_stack(trees):
+    """Stack a list of identical pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def stacked_specs(specs):
+    """Prepend a None (layer-stack) axis to every PartitionSpec leaf."""
+    return jax.tree.map(
+        lambda s: P(None, *s), specs,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def remat_policy(name: str):
+    if name == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "dots":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint_policies.everything_saveable

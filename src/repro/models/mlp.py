@@ -1,0 +1,35 @@
+"""Gated FFN (SwiGLU / GeGLU) with tensor-parallel specs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common
+from repro.models.common import Runtime
+
+
+def init_mlp(key, cfg, dtype, d_ff=None):
+    d = cfg.d_model
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": common.init_dense(k1, d, ff, dtype),
+        "wu": common.init_dense(k2, d, ff, dtype),
+        "wd": common.init_dense(k3, ff, d, dtype),
+    }
+
+
+def mlp_specs(cfg):
+    return {
+        "wg": P(None, "model"),
+        "wu": P(None, "model"),
+        "wd": P("model", None),
+    }
+
+
+def apply_mlp(params, x, cfg, rt: Runtime):
+    cd = rt.compute_dtype
+    g = common.activation(x @ common.cast(params["wg"], cd), cfg.act)
+    u = x @ common.cast(params["wu"], cd)
+    return (g * u) @ common.cast(params["wd"], cd)

@@ -1,0 +1,172 @@
+"""KV page manager: the FMMU integrated as the serving page-table engine.
+
+Logical address: DLPN = slot * max_pages + logical_page (slot = batch
+slot of a live sequence). Physical: tier-tagged block id in the KV pool.
+The mapping lives in the batched FMMU (core/fmmu/batch): lookups build
+the block tables consumed by the paged-attention kernels; updates back
+new allocations; CondUpdate arbitrates swap/relocation races exactly as
+the paper's GC path does (a relocation only commits if the mapping still
+points at the old block).
+
+Data movement between tiers operates on the pool tensors via jitted
+gather/scatter (device<->host offload copies on real hardware).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fmmu import batch as fb
+from repro.core.fmmu.types import FMMUGeometry, NIL
+from repro.paging.pool import HOST_BASE, BlockPool, OutOfBlocks
+
+
+def _move_rows(pool, src, dst, axis: int):
+    """pool[..., dst, ...] = pool[..., src, ...] along `axis`."""
+    taken = jnp.take(pool, src, axis=axis)
+    pm = jnp.moveaxis(pool, axis, 0)
+    pm = pm.at[dst].set(jnp.moveaxis(taken, axis, 0))
+    return jnp.moveaxis(pm, 0, axis)
+
+
+def _geometry(n_slots: int, max_pages: int) -> FMMUGeometry:
+    n_dlpns = n_slots * max_pages
+    ept = max(64, min(4096, max_pages))
+    return FMMUGeometry(
+        cmt_sets=max(8, min(512, n_dlpns // 64)),
+        cmt_ways=4,
+        cmt_entries=8,
+        ctp_sets=8, ctp_ways=4,
+        entries_per_tp=ept,
+        n_tvpns=-(-n_dlpns // ept),
+        queue_cap=64,
+    )
+
+
+class KVPageManager:
+    """Host-driven control plane; device-resident map + pools."""
+
+    def __init__(self, n_slots: int, max_pages: int, n_device_blocks: int,
+                 n_host_blocks: int = 0):
+        self.n_slots = n_slots
+        self.max_pages = max_pages
+        self.geom = _geometry(n_slots, max_pages)
+        self.fns = fb.make_jitted(self.geom)
+        self.state = fb.init_batch_state(self.geom)
+        self.pool = BlockPool(n_device_blocks, n_host_blocks)
+        self.seq_pages: Dict[int, List[int]] = {}   # slot -> block ids
+        self._table_fn = jax.jit(functools.partial(self._tables, self.geom),
+                                 static_argnums=(1, 2))
+
+    # ----------------------------------------------------------- helpers
+    def _dlpns(self, slot: int, pages: range) -> np.ndarray:
+        return np.asarray([slot * self.max_pages + p for p in pages],
+                          np.int32)
+
+    @staticmethod
+    def _tables(geom, state, n_slots, max_pages):
+        """Translate every (slot, page) through the FMMU -> block table."""
+        dl = jnp.arange(n_slots * max_pages, dtype=jnp.int32)
+        state, out = fb.lookup_batch(geom, state, dl)
+        return state, out.reshape(n_slots, max_pages)
+
+    # ----------------------------------------------------------- API
+    def new_seq(self, slot: int, n_pages: int) -> List[int]:
+        assert slot not in self.seq_pages, f"slot {slot} busy"
+        blocks = self.pool.alloc(n_pages)
+        dl = self._dlpns(slot, range(n_pages))
+        self.state = self.fns["update"](self.state, jnp.asarray(dl),
+                                        jnp.asarray(blocks, jnp.int32))
+        self.seq_pages[slot] = list(blocks)
+        return blocks
+
+    def extend_seq(self, slot: int, n_new: int) -> List[int]:
+        cur = self.seq_pages[slot]
+        blocks = self.pool.alloc(n_new)
+        dl = self._dlpns(slot, range(len(cur), len(cur) + n_new))
+        self.state = self.fns["update"](self.state, jnp.asarray(dl),
+                                        jnp.asarray(blocks, jnp.int32))
+        cur.extend(blocks)
+        return blocks
+
+    def free_seq(self, slot: int):
+        blocks = self.seq_pages.pop(slot)
+        dl = self._dlpns(slot, range(len(blocks)))
+        self.state = self.fns["update"](
+            self.state, jnp.asarray(dl),
+            jnp.full((len(blocks),), NIL, jnp.int32))
+        self.pool.free(blocks)
+
+    def block_tables(self) -> jnp.ndarray:
+        """[n_slots, max_pages] int32; NIL for unmapped; host-tier blocks
+        appear tagged (callers must swap in before attention)."""
+        self.state, tables = self._table_fn(self.state, self.n_slots,
+                                            self.max_pages)
+        return tables
+
+    # ----------------------------------------------------------- swapping
+    def swap_out(self, slot: int, pools: List[jnp.ndarray],
+                 block_axis: int = 0) -> Tuple[List[jnp.ndarray], int]:
+        """Relocate all device blocks of `slot` to the host tier.
+        pools: list of [NB_dev(+host), ...] tensors (k & v per layer
+        group); host region lives at [n_device:]. Returns updated pools
+        and the number of relocated blocks. CondUpdate guards each move."""
+        blocks = self.seq_pages[slot]
+        dev = [b for b in blocks if not BlockPool.is_host(b)]
+        if not dev:
+            return pools, 0
+        host = self.pool.alloc(len(dev), host=True)
+        dl = []
+        for i, b in enumerate(blocks):
+            if not BlockPool.is_host(b):
+                dl.append(slot * self.max_pages + i)
+        dl = jnp.asarray(dl, jnp.int32)
+        olds = jnp.asarray(dev, jnp.int32)
+        news = jnp.asarray(host, jnp.int32)
+        self.state, ok = self.fns["cond_update"](self.state, dl, news, olds)
+        okh = np.asarray(ok)
+        assert okh.all(), "swap_out raced with a concurrent relocation"
+        # move data: host block h stored at row n_device + (h - HOST_BASE)
+        src = jnp.asarray(dev, jnp.int32)
+        dst = jnp.asarray([self.pool.n_device + (h - HOST_BASE)
+                           for h in host], jnp.int32)
+        pools = [_move_rows(p, src, dst, block_axis) for p in pools]
+        self.pool.free(dev)
+        self.seq_pages[slot] = [
+            host[dev.index(b)] if b in dev else b for b in blocks]
+        self.pool.stats.swaps_out += len(dev)
+        return pools, len(dev)
+
+    def swap_in(self, slot: int, pools: List[jnp.ndarray],
+                block_axis: int = 0) -> Tuple[List[jnp.ndarray], int]:
+        """Bring a swapped-out sequence back to device blocks."""
+        blocks = self.seq_pages[slot]
+        hostb = [b for b in blocks if BlockPool.is_host(b)]
+        if not hostb:
+            return pools, 0
+        dev = self.pool.alloc(len(hostb))
+        dl = jnp.asarray([slot * self.max_pages + i
+                          for i, b in enumerate(blocks)
+                          if BlockPool.is_host(b)], jnp.int32)
+        self.state, ok = self.fns["cond_update"](
+            self.state, dl, jnp.asarray(dev, jnp.int32),
+            jnp.asarray(hostb, jnp.int32))
+        assert np.asarray(ok).all()
+        src = jnp.asarray([self.pool.n_device + (h - HOST_BASE)
+                           for h in hostb], jnp.int32)
+        dst = jnp.asarray(dev, jnp.int32)
+        pools = [_move_rows(p, src, dst, block_axis) for p in pools]
+        self.pool.free(hostb)
+        self.seq_pages[slot] = [
+            dev[hostb.index(b)] if b in hostb else b for b in blocks]
+        self.pool.stats.swaps_in += len(hostb)
+        return pools, len(hostb)
+
+    def hit_stats(self) -> dict:
+        s = np.asarray(self.state.stats)
+        return {"hits": int(s[0]), "misses": int(s[1]),
+                "fills": int(s[2]), "updates": int(s[3])}

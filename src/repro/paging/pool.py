@@ -1,0 +1,67 @@
+"""Physical KV block pool allocator (the serving BM analogue).
+
+Two tiers: device (HBM) blocks consumed by attention kernels, and a host
+("flash"-analogue) overflow tier used for swapped-out sequences. Block
+ids are tier-tagged: device blocks are [0, n_device); host blocks are
+[HOST_BASE, HOST_BASE + n_host). The allocator is host-side (scheduler
+thread), like the BM in the paper; the FMMU map holds the tier-tagged
+physical ids and CondUpdate arbitrates relocation races.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+HOST_BASE = 1 << 24
+
+
+class OutOfBlocks(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class PoolStats:
+    allocs: int = 0
+    frees: int = 0
+    swaps_out: int = 0
+    swaps_in: int = 0
+    peak_used: int = 0
+
+
+class BlockPool:
+    def __init__(self, n_device: int, n_host: int = 0):
+        self.n_device = n_device
+        self.n_host = n_host
+        self._free_dev: List[int] = list(range(n_device))[::-1]
+        self._free_host: List[int] = [HOST_BASE + i
+                                      for i in range(n_host)][::-1]
+        self.stats = PoolStats()
+
+    @staticmethod
+    def is_host(block: int) -> bool:
+        return block >= HOST_BASE
+
+    @property
+    def free_device(self) -> int:
+        return len(self._free_dev)
+
+    @property
+    def free_host(self) -> int:
+        return len(self._free_host)
+
+    def alloc(self, n: int, *, host: bool = False) -> List[int]:
+        pool = self._free_host if host else self._free_dev
+        if len(pool) < n:
+            raise OutOfBlocks(
+                f"need {n} {'host' if host else 'device'} blocks, "
+                f"have {len(pool)}")
+        out = [pool.pop() for _ in range(n)]
+        self.stats.allocs += n
+        used = self.n_device - len(self._free_dev)
+        self.stats.peak_used = max(self.stats.peak_used, used)
+        return out
+
+    def free(self, blocks: List[int]):
+        for b in blocks:
+            (self._free_host if self.is_host(b) else self._free_dev).append(b)
+        self.stats.frees += len(blocks)

@@ -1,0 +1,1 @@
+from repro.parallel.sharding import ParallelCtx, make_mesh, trivial_ctx, test_ctx

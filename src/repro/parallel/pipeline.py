@@ -1,0 +1,92 @@
+"""GPipe-style pipeline parallelism over a 'pipe' mesh axis.
+
+The layer stack is split into S stages (S = pipe axis size); microbatches
+stream through stages with collective_permute handoffs inside a
+shard_map. Schedule: standard GPipe fill/drain — T = M + S - 1 ticks for
+M microbatches; each tick every stage processes (at most) one resident
+microbatch, then activations rotate one stage down the ring.
+
+Used as an optional wrapper for depth-dominated models when the 2D
+(data, model) mesh runs out of efficient TP width; off by default for
+the assigned meshes (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(mesh, stage_fn: Callable, stage_params: Any, x, *,
+                   n_microbatches: int, axis: str = "pipe"):
+    """Run x through S pipeline stages.
+
+    stage_fn(params_slice, x_mb) -> x_mb     (one stage's layers)
+    stage_params: pytree with leading [S] axis (stage slices)
+    x [B, ...] with B % n_microbatches == 0
+    Returns stage_fn applied S times to every microbatch, with GPipe
+    scheduling across the 'pipe' mesh axis.
+    """
+    s = mesh.shape[axis]
+    b = x.shape[0]
+    assert b % n_microbatches == 0
+    mb = b // n_microbatches
+
+    def staged(params_local, x_all):
+        # params_local: this stage's slice [1, ...] -> squeeze
+        params_local = jax.tree.map(lambda t: t[0], params_local)
+        sid = jax.lax.axis_index(axis)
+        n_ticks = n_microbatches + s - 1
+        xs = x_all.reshape(n_microbatches, mb, *x_all.shape[1:])
+        # circular buffer of the activation each stage currently holds
+        hold = jnp.zeros((mb,) + x_all.shape[1:], x_all.dtype)
+        outs = jnp.zeros_like(xs)
+
+        def tick(carry, t):
+            hold, outs = carry
+            # stage 0 ingests microbatch t (if in range)
+            take = (sid == 0) & (t < n_microbatches)
+            mb_in = xs[jnp.clip(t, 0, n_microbatches - 1)]
+            hold = jnp.where(take, mb_in, hold)
+            # every stage runs its layers on what it holds
+            hold = stage_fn(params_local, hold)
+            # last stage emits microbatch t - (s - 1)
+            out_idx = t - (s - 1)
+            emit = (sid == s - 1) & (out_idx >= 0)
+            outs = jax.lax.cond(
+                emit,
+                lambda o: o.at[jnp.clip(out_idx, 0, n_microbatches - 1)]
+                .set(hold),
+                lambda o: o, outs)
+            # rotate activations one stage down the ring
+            perm = [(i, (i + 1) % s) for i in range(s)]
+            hold = jax.lax.ppermute(hold, axis, perm)
+            return (hold, outs), None
+
+        (hold, outs), _ = jax.lax.scan(tick, (hold, outs),
+                                       jnp.arange(n_ticks))
+        # outs live on the last stage; broadcast to all so out_specs can
+        # be replicated over the pipe axis
+        outs = jax.lax.psum(
+            jnp.where(sid == s - 1, outs, jnp.zeros_like(outs)), axis)
+        return outs.reshape(b, *x_all.shape[1:])
+
+    fn = jax.shard_map(
+        staged, mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_vma=False)
+    return fn(stage_params, x)
+
+
+def split_stages(params_stacked: Any, n_stages: int) -> Any:
+    """Reshape a [L, ...]-stacked layer pytree into [S, L//S, ...]."""
+    def one(t):
+        l = t.shape[0]
+        assert l % n_stages == 0, f"{l} layers not divisible by {n_stages}"
+        return t.reshape(n_stages, l // n_stages, *t.shape[1:])
+
+    return jax.tree.map(one, params_stacked)

@@ -1,0 +1,293 @@
+"""Serving engine: continuous batching over a fixed slot grid, with the
+FMMU page manager owning logical->physical KV translation.
+
+Prefill writes each request's KV into pool blocks named by the FMMU
+block table; decode steps run the whole slot batch through
+Model.decode_step with tables rebuilt by the FMMU on every admission /
+relocation (cheap: one batched translate). Pool exhaustion preempts the
+longest victim sequence to the host tier (swap_out, CondUpdate-guarded)
+— the serving analogue of the paper's GC path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+from repro.models.common import Runtime
+from repro.models.model import Model, _src_len
+from repro.paging.kv_manager import KVPageManager
+from repro.paging.pool import OutOfBlocks
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    src_emb: Optional[jnp.ndarray] = None
+    prefix_emb: Optional[jnp.ndarray] = None
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, n_slots: int,
+                 max_ctx: int, n_device_blocks: Optional[int] = None,
+                 n_host_blocks: int = 0, eos_id: int = -1):
+        self.m = model
+        self.cfg = model.cfg
+        self.rt = model.rt
+        self.params = params
+        self.n_slots = n_slots
+        self.page = self.rt.page_size
+        self.max_pages = -(-max_ctx // self.page)
+        n_dev = n_device_blocks or (n_slots * self.max_pages)
+        self.kvm = KVPageManager(n_slots, self.max_pages, n_dev,
+                                 n_host_blocks)
+        src_len = _src_len(self.cfg, max_ctx)
+        # +1 scratch block: unmapped table entries (inactive slots) write
+        # their garbage KV there instead of corrupting block 0
+        self.scratch_block = n_dev + n_host_blocks
+        self.caches = transformer.init_decode_caches(
+            self.cfg, self.rt, n_slots, self.max_pages,
+            n_dev + n_host_blocks + 1, self.rt.compute_dtype,
+            src_len=src_len)
+        self.ctx_lens = np.zeros(n_slots, np.int64)
+        self.src_cap = src_len
+        self.src_lens = np.zeros(n_slots, np.int64)
+        self.active: Dict[int, Request] = {}
+        self.eos_id = eos_id
+        self.queue: List[Request] = []
+        self._rid = 0
+        self._decode = jax.jit(self._decode_fn)
+        self._prefill = jax.jit(self._prefill_fn)
+        self.metrics = {"prefills": 0, "decode_steps": 0, "preemptions": 0,
+                        "generated": 0}
+
+    # ------------------------------------------------------------- API
+    def submit(self, tokens: List[int], max_new: int = 16, *,
+               src_emb=None, prefix_emb=None) -> int:
+        rid = self._rid
+        self._rid += 1
+        self.queue.append(Request(rid, list(tokens), max_new,
+                                  src_emb=src_emb, prefix_emb=prefix_emb))
+        return rid
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        done: Dict[int, List[int]] = {}
+        for _ in range(max_steps):
+            if not self.step(done):
+                break
+        return done
+
+    # ------------------------------------------------------------- steps
+    def step(self, done: Dict[int, List[int]]) -> bool:
+        self._admit()
+        if not self.active:
+            return bool(self.queue)
+        self._decode_step(done)
+        return bool(self.active or self.queue)
+
+    def _free_slots(self) -> List[int]:
+        used = {r.slot for r in self.active.values()}
+        return [s for s in range(self.n_slots) if s not in used]
+
+    def _admit(self):
+        free = self._free_slots()
+        while self.queue and free:
+            req = self.queue[0]
+            slot = free[0]
+            n_prefix = (req.prefix_emb.shape[0]
+                        if req.prefix_emb is not None else 0)
+            n_pages = -(-(len(req.tokens) + n_prefix + req.max_new)
+                        // self.page)
+            n_pages = min(n_pages, self.max_pages)
+            try:
+                self.kvm.new_seq(slot, n_pages)
+            except OutOfBlocks:
+                if not self._preempt(exclude=slot):
+                    return
+                continue
+            self.queue.pop(0)
+            free.pop(0)
+            req.slot = slot
+            self.active[req.rid] = req
+            self._do_prefill(req)
+
+    def _preempt(self, exclude: int) -> bool:
+        """Swap the longest active sequence out to the host tier."""
+        victims = [r for r in self.active.values() if r.slot != exclude]
+        if not victims or self.kvm.pool.n_host == 0:
+            return False
+        victim = max(victims, key=lambda r: self.ctx_lens[r.slot])
+        pools = [self.caches["pool_k"], self.caches["pool_v"]]
+        pools, moved = self.kvm.swap_out(victim.slot, pools, block_axis=2)
+        self.caches["pool_k"], self.caches["pool_v"] = pools
+        self.metrics["preemptions"] += 1
+        return moved > 0
+
+    def _is_resident(self, slot: int) -> bool:
+        return not any(b >= (1 << 24)
+                       for b in self.kvm.seq_pages.get(slot, []))
+
+    def _ensure_resident(self):
+        """Swap in any host-tier pages of active sequences (before decode).
+        Sequences that cannot come back yet PAUSE (they are excluded from
+        the decode batch) until device blocks free up."""
+        for r in sorted(self.active.values(),
+                        key=lambda r: len(self.kvm.seq_pages.get(r.slot, []))):
+            if not self._is_resident(r.slot):
+                try:
+                    pools = [self.caches["pool_k"], self.caches["pool_v"]]
+                    pools, _ = self.kvm.swap_in(r.slot, pools,
+                                                block_axis=2)
+                    self.caches["pool_k"], self.caches["pool_v"] = pools
+                except OutOfBlocks:
+                    pass  # stays swapped & paused; retried next round
+
+    # ------------------------------------------------------------- prefill
+    def _prefill_fn(self, params, batch, caches, table_row, slot):
+        logits, cols = self.m.prefill(params, batch)
+        caches = _scatter_prefill(self.cfg, self.rt, caches, cols,
+                                  table_row, slot)
+        return logits, caches
+
+    def _do_prefill(self, req: Request):
+        toks = jnp.asarray(req.tokens, jnp.int32)[None]
+        batch = {"tokens": toks}
+        if req.prefix_emb is not None:
+            batch["prefix_emb"] = req.prefix_emb[None]
+        if req.src_emb is not None:
+            batch["src_emb"] = req.src_emb[None]
+            batch["src_valid"] = jnp.ones(req.src_emb.shape[:1], jnp.int32)[None]
+        tables = np.asarray(self.kvm.block_tables())
+        row = jnp.asarray(tables[req.slot], jnp.int32)
+        logits, self.caches = self._prefill(self.params, batch, self.caches,
+                                            row, req.slot)
+        n_ctx = len(req.tokens) + (req.prefix_emb.shape[0]
+                                   if req.prefix_emb is not None else 0)
+        self.ctx_lens[req.slot] = n_ctx
+        if req.src_emb is not None:
+            self.src_lens[req.slot] = req.src_emb.shape[0]
+        tok = int(jnp.argmax(logits[0]))
+        req.out.append(tok)
+        self.metrics["prefills"] += 1
+        self.metrics["generated"] += 1
+
+    # ------------------------------------------------------------- decode
+    def _decode_fn(self, params, tokens, caches, ctx_lens, tables,
+                   src_valid=None):
+        logits, caches = self.m.decode_step(
+            params, tokens, caches, ctx_lens=ctx_lens, block_table=tables,
+            src_valid=src_valid)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+    def _decode_step(self, done: Dict[int, List[int]]):
+        self._ensure_resident()
+        residents = [r for r in self.active.values()
+                     if self._is_resident(r.slot)]
+        if not residents:
+            return
+        resident_slots = {r.slot for r in residents}
+        tokens = np.zeros(self.n_slots, np.int32)
+        for r in residents:
+            tokens[r.slot] = r.out[-1] if r.out else r.tokens[-1]
+        tables = self.kvm.block_tables()
+        # grow pages for sequences crossing a page boundary
+        for r in residents:
+            need = -(-int(self.ctx_lens[r.slot] + 1) // self.page)
+            have = len(self.kvm.seq_pages[r.slot])
+            if need > have and have < self.max_pages:
+                try:
+                    self.kvm.extend_seq(r.slot, need - have)
+                except OutOfBlocks:
+                    if self._preempt(exclude=r.slot):
+                        self.kvm.extend_seq(r.slot, need - have)
+                tables = self.kvm.block_tables()
+        src_valid = None
+        if self.cfg.n_enc_layers:
+            src_valid = (np.arange(self.src_cap)[None, :]
+                         < self.src_lens[:, None]).astype(np.int32)
+            src_valid = jnp.asarray(src_valid)
+        # paused / inactive slots: zero ctx + scratch table rows (their
+        # garbage KV write lands in the scratch block)
+        tables = np.array(tables)
+        step_ctx = np.asarray(self.ctx_lens, np.int64).copy()
+        for slot in range(self.n_slots):
+            if slot not in resident_slots:
+                tables[slot, :] = self.scratch_block
+                step_ctx[slot] = 0
+        tables = np.where((tables < 0) | (tables >= self.scratch_block),
+                          self.scratch_block, tables)
+        next_tok, self.caches = self._decode(
+            self.params, jnp.asarray(tokens), self.caches,
+            jnp.asarray(step_ctx, jnp.int32), jnp.asarray(tables),
+            src_valid)
+        next_tok = np.asarray(next_tok)
+        self.metrics["decode_steps"] += 1
+        for r in list(residents):
+            self.ctx_lens[r.slot] += 1
+            tok = int(next_tok[r.slot])
+            r.out.append(tok)
+            self.metrics["generated"] += 1
+            if len(r.out) >= r.max_new or tok == self.eos_id:
+                done[r.rid] = r.out[:r.max_new]
+                self.kvm.free_seq(r.slot)
+                self.ctx_lens[r.slot] = 0
+                del self.active[r.rid]
+
+
+# ----------------------------------------------------------------------
+def _scatter_prefill(cfg: ArchConfig, rt: Runtime, caches, cols, table_row,
+                     slot):
+    """Write one request's prefill caches (B=1) into the slot grid.
+    cols: per-period list of dicts with leaves stacked [NP, ...]."""
+    period = cfg.period
+    attn_js = [j for j in range(period) if cfg.layer_kind(j) == "attn"]
+    ssm_js = [j for j in range(period) if cfg.layer_kind(j) == "mamba"]
+    a_of = {j: i for i, j in enumerate(attn_js)}
+    s_of = {j: i for i, j in enumerate(ssm_js)}
+    page = rt.page_size
+    caches = dict(caches)
+    for j in range(period):
+        col = cols[j]
+        if "kv" in col:
+            k, v = col["kv"]                  # [NP, 1, S, KV, hd]
+            np_, _, s, kvh, hd = k.shape
+            npages = -(-s // page)
+            pad = npages * page - s
+            kp = jnp.pad(k[:, 0], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vp = jnp.pad(v[:, 0], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            kp = kp.reshape(np_, npages, page, kvh, hd)
+            vp = vp.reshape(np_, npages, page, kvh, hd)
+            rows = table_row[:npages]
+            ai = a_of[j]
+            # scatter: pool [NP, A, NB, P, KV, hd]
+            caches["pool_k"] = caches["pool_k"].at[:, ai, rows].set(
+                kp.astype(caches["pool_k"].dtype).transpose(0, 1, 2, 3, 4),
+                mode="drop")
+            caches["pool_v"] = caches["pool_v"].at[:, ai, rows].set(
+                vp.astype(caches["pool_v"].dtype), mode="drop")
+        if "ssm" in col:
+            conv, ssm_st = col["ssm"]         # [NP,1,k,C], [NP,1,nh,hd,N]
+            si = s_of[j]
+            caches["conv"] = caches["conv"].at[:, si, slot].set(
+                conv[:, 0].astype(caches["conv"].dtype))
+            caches["ssm"] = caches["ssm"].at[:, si, slot].set(ssm_st[:, 0])
+        if "cross_kv" in col:
+            ck, cv = col["cross_kv"]          # [NP,1,Ss,KV,hd]
+            cap = caches["cross_k"].shape[3]
+            pad = cap - ck.shape[2]
+            ckp = jnp.pad(ck[:, 0], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cvp = jnp.pad(cv[:, 0], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            caches["cross_k"] = caches["cross_k"].at[:, j, slot].set(
+                ckp.astype(caches["cross_k"].dtype))
+            caches["cross_v"] = caches["cross_v"].at[:, j, slot].set(
+                cvp.astype(caches["cross_v"].dtype))
+    return caches

@@ -1,0 +1,19 @@
+"""Token sampling policies."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(logits, key, temp: float = 1.0, top_k: int = 0):
+    if temp <= 0:
+        return greedy(logits)
+    l = logits / temp
+    if top_k:
+        thresh = jax.lax.top_k(l, top_k)[0][..., -1:]
+        l = jnp.where(l < thresh, -1e30, l)
+    return jax.random.categorical(key, l).astype(jnp.int32)

@@ -1,0 +1,170 @@
+"""Sharded, manifest-driven checkpointing with async write, atomic
+commit, integrity hashes, keep-last-k retention, and ELASTIC restore
+(load onto a different mesh / device count than the writer's).
+
+Layout:
+  <dir>/step_000123/
+      manifest.json      tree structure, shapes, dtypes, logical specs,
+                         per-leaf crc32, step, mesh shape at save time
+      arrays/000.npy ... one file per leaf (host-gathered)
+  <dir>/step_000123.tmp -> renamed to step_000123 on commit (atomic)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def _spec_to_json(spec: P) -> list:
+    out = []
+    for s in spec:
+        if s is None:
+            out.append(None)
+        elif isinstance(s, (tuple, list)):
+            out.append(list(s))
+        else:
+            out.append(s)
+    return out
+
+
+def _spec_from_json(j) -> P:
+    return P(*[tuple(s) if isinstance(s, list) else s for s in j])
+
+
+@dataclasses.dataclass
+class SaveResult:
+    path: str
+    step: int
+    n_leaves: int
+    bytes: int
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.dir = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, specs: Any,
+             async_: bool = False) -> Optional[SaveResult]:
+        """Snapshot to host memory synchronously (cheap), write to disk
+        (optionally on a background thread), commit atomically."""
+        self.wait()
+        leaves, treedef = jax.tree.flatten(tree)
+        spec_leaves = jax.tree.leaves(
+            specs, is_leaf=lambda s: isinstance(s, P))
+        assert len(leaves) == len(spec_leaves), "specs/tree mismatch"
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        mesh_shape = {}
+        if leaves and hasattr(leaves[0], "sharding") and \
+                getattr(leaves[0].sharding, "mesh", None) is not None:
+            mesh_shape = dict(leaves[0].sharding.mesh.shape)
+
+        def work() -> SaveResult:
+            tmp = os.path.join(self.dir, f"step_{step:09d}.tmp")
+            final = os.path.join(self.dir, f"step_{step:09d}")
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(os.path.join(tmp, "arrays"))
+            manifest = {"step": step, "treedef": str(treedef),
+                        "mesh_shape": mesh_shape, "leaves": []}
+            total = 0
+            for i, (arr, spec) in enumerate(zip(host, spec_leaves)):
+                np.save(os.path.join(tmp, "arrays", f"{i:05d}.npy"), arr)
+                manifest["leaves"].append({
+                    "shape": list(arr.shape),
+                    "dtype": str(arr.dtype),
+                    "spec": _spec_to_json(spec),
+                    "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
+                })
+                total += arr.nbytes
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)            # atomic commit
+            self._retain()
+            return SaveResult(final, step, len(host), total)
+
+        if async_:
+            def run():
+                try:
+                    work()
+                except BaseException as e:   # surfaced on next wait()
+                    self._error = e
+
+            self._thread = threading.Thread(target=run, daemon=True)
+            self._thread.start()
+            return None
+        return work()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _retain(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep_last]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------ load
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, tree_like: Any, step: Optional[int] = None,
+                ctx=None, verify: bool = True) -> Tuple[Any, int]:
+        """Restore into the structure of `tree_like`. With a ParallelCtx,
+        leaves are device_put with shardings resolved from the SAVED
+        logical specs against the CURRENT mesh — elastic restore onto any
+        device count. Without ctx, plain host arrays are returned."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves_like, treedef = jax.tree.flatten(tree_like)
+        assert len(leaves_like) == len(manifest["leaves"]), (
+            f"checkpoint has {len(manifest['leaves'])} leaves, "
+            f"model expects {len(leaves_like)}")
+        out = []
+        for i, meta in enumerate(manifest["leaves"]):
+            arr = np.load(os.path.join(path, "arrays", f"{i:05d}.npy"))
+            if verify:
+                crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+                if crc != meta["crc32"]:
+                    raise IOError(f"corrupt leaf {i} in {path}")
+            if ctx is not None:
+                sh = ctx.sharding(_spec_from_json(meta["spec"]),
+                                  tuple(arr.shape))
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jnp.asarray(arr))
+        return treedef.unflatten(out), step

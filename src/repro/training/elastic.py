@@ -1,0 +1,43 @@
+"""Elastic scaling: rebuild the mesh after a device-count change and
+reshard training state from checkpoints (logical specs make layouts
+portable across any mesh that keeps the axis names)."""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+from repro.parallel.sharding import ParallelCtx, make_mesh
+
+
+def plan_mesh(n_devices: int, *, model_parallel: int,
+              pods: int = 1) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Choose a mesh shape for the available devices: model axis fixed
+    (weights must fit), data axis absorbs the change, pod axis kept if
+    divisible."""
+    assert n_devices % model_parallel == 0, (
+        f"{n_devices} devices not divisible by TP={model_parallel}")
+    rest = n_devices // model_parallel
+    if pods > 1 and rest % pods == 0:
+        return (pods, rest // pods, model_parallel), ("pod", "data", "model")
+    return (rest, model_parallel), ("data", "model")
+
+
+def make_ctx(n_devices: int, *, model_parallel: int,
+             pods: int = 1) -> ParallelCtx:
+    shape, axes = plan_mesh(n_devices, model_parallel=model_parallel,
+                            pods=pods)
+    mesh = make_mesh(shape, axes)
+    dp = ("pod", "data") if "pod" in axes else ("data",)
+    return ParallelCtx(mesh=mesh, dp=dp)
+
+
+def rescale(mgr, tree_like: Any, old_ctx: Optional[ParallelCtx],
+            new_ctx: ParallelCtx, step: Optional[int] = None):
+    """Restore the latest checkpoint onto a different mesh. The manifest
+    carries logical specs, so this is just restore(ctx=new_ctx); provided
+    as a named operation for the failure-recovery path:
+        ctx = make_ctx(len(jax.devices()) - lost, model_parallel=...)
+        state, step = rescale(mgr, state_like, old_ctx, ctx)
+    """
+    return mgr.restore(tree_like, step=step, ctx=new_ctx)

@@ -1,0 +1,110 @@
+"""AdamW with ZeRO-style state sharding and gradient clipping.
+
+Pure-JAX (no optax): states are a pytree mirroring params. Optimizer
+moments inherit the parameter's tensor-parallel sharding AND are
+additionally sharded over the data axis on their largest divisible dim
+(ZeRO-1 flavour) via with_sharding_constraint inside the update step —
+GSPMD keeps them resident in the sharded layout between steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros))
+
+
+def zero_shard_specs(param_specs, param_shapes, ctx) -> Any:
+    """Moments: param spec + data-axis sharding on the largest
+    still-unsharded divisible dimension (ZeRO-1). Specs stay LOGICAL
+    ('data'); ctx.resolve expands to the physical (pod, data) axes."""
+    dp = "data"
+    dp_size = ctx.dp_size
+
+    def one(spec, shape_leaf):
+        shape = shape_leaf.shape if hasattr(shape_leaf, "shape") else shape_leaf
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        best, best_size = -1, 0
+        for i, (s, n) in enumerate(zip(entries, shape)):
+            if s is None and n % dp_size == 0 and n > best_size:
+                best, best_size = i, n
+        if best >= 0:
+            entries[best] = dp
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    return jax.tree.map(one, param_specs, param_shapes,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state: OptState,
+                 moment_shardings=None):
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else 1.0
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m2 / (1 - cfg.b1 ** step)
+        vhat = v2 / (1 - cfg.b2 ** step)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2 and cfg.weight_decay:   # no decay on norms/bias
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    params2 = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    mu2 = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    nu2 = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    if moment_shardings is not None:
+        mu2 = jax.lax.with_sharding_constraint(mu2, moment_shardings)
+        nu2 = jax.lax.with_sharding_constraint(nu2, moment_shardings)
+    return params2, OptState(step=step, mu=mu2, nu=nu2), \
+        {"lr": lr, "grad_norm": gnorm}

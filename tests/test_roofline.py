@@ -1,0 +1,76 @@
+"""Roofline extraction: HLO collective parser, depth extrapolation,
+model-FLOPs accounting."""
+import pytest
+
+from repro.configs import SHAPES, get_arch
+from repro.launch import roofline as rl
+
+
+HLO = """
+HloModule jit_step, entry_computation_layout={...}
+  %x.1 = bf16[2048,1024]{1,0} all-reduce(%fusion.3), channel_id=1, replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %y = f32[512]{0} all-gather(%p0), channel_id=2, replica_groups={{0,1,2,3}}, dimensions={0}
+  %z = (bf16[64,64]{1,0}, bf16[64,64]{1,0}) all-to-all(%a, %b), replica_groups={{0,1}}
+  %w = bf16[128]{0} collective-permute(%c), source_target_pairs={{0,1}}
+  %s = f32[2048,1024]{1,0} reduce-scatter(%d), channel_id=9, replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %done = bf16[8]{0} all-reduce-done(%start)
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    out = rl.collective_bytes(HLO)
+    c = out["counts"]
+    assert c["all-reduce"] == 1          # -done line skipped
+    assert c["all-gather"] == 1
+    assert c["all-to-all"] == 1
+    assert c["collective-permute"] == 1
+    assert c["reduce-scatter"] == 1
+    b = out["bytes_by_kind"]
+    assert b["all-reduce"] == 2048 * 1024 * 2
+    # all-gather operand = result / group(4)
+    assert b["all-gather"] == 512 * 4 // 4
+    # tuple result: both halves counted
+    assert b["all-to-all"] == 2 * 64 * 64 * 2
+    assert b["collective-permute"] == 128 * 2
+    assert b["reduce-scatter"] == 2048 * 1024 * 4
+
+
+def test_extrapolation_linear_exact():
+    c1 = {"flops": 100.0, "bytes accessed": 50.0}
+    c2 = {"flops": 160.0, "bytes accessed": 70.0}
+    out = rl.extrapolate(c1, c2, 10)
+    assert out["flops"] == 100 + 9 * 60
+    assert out["bytes accessed"] == 50 + 9 * 20
+
+
+def test_analyze_dominant_and_ratio():
+    r = rl.analyze({"flops": 197e12, "bytes accessed": 819e9 * 2},
+                   {"total_bytes": 50e9 * 0.5},
+                   n_devices=4, model_flops_global=197e12 * 4 * 0.9)
+    assert r.dominant == "memory"
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 2.0) < 1e-9
+    assert abs(r.collective_s - 0.5) < 1e-9
+    assert abs(r.useful_ratio - 0.9) < 1e-9
+
+
+def test_model_flops_train_is_6nd():
+    cfg = get_arch("llama3.2-1b")
+    shape = SHAPES["train_4k"]
+    _, active = cfg.count_params()
+    want = 6.0 * active * shape.seq_len * shape.global_batch
+    assert rl.model_flops(cfg, shape) == want
+
+
+def test_model_flops_decode_includes_kv_scan():
+    cfg = get_arch("qwen2-72b")
+    shape = SHAPES["decode_32k"]
+    got = rl.model_flops(cfg, shape)
+    _, active = cfg.count_params()
+    fwd = 2.0 * active * shape.global_batch
+    assert got > fwd  # attention-over-history term present
+    attn = got - fwd
+    # 4 * layers * H * hd * ctx * batch
+    want = (4 * cfg.n_layers * cfg.n_heads * cfg.head_dim
+            * shape.seq_len * shape.global_batch)
+    assert abs(attn - want) / want < 1e-6

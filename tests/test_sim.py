@@ -1,0 +1,102 @@
+"""SSD simulator behaviour tests: bottleneck identities, scheme
+ordering, GC invariants, write backpressure."""
+import dataclasses
+
+import pytest
+
+from repro.configs.fmmu_paper import PAPER_SSD
+from repro.core.sim.ssd import SSDSim
+from repro.core.sim import workloads as W
+
+
+def small_cfg(**kw):
+    base = dict(capacity_gb=1, channels=4, ways=2)
+    base.update(kw)
+    return dataclasses.replace(PAPER_SSD, **base)
+
+
+def run(scheme, cores=1, wl=W.rand_read_4k, cmds=4000, cfg=None, **kw):
+    cfg = cfg or small_cfg()
+    sim = SSDSim(cfg, scheme=scheme, n_cores=cores, **kw)
+    sim.precondition_sequential()
+    res = sim.run_closed_loop(wl(cfg), cmds, outstanding=128)
+    return sim, res
+
+
+def test_ideal_randread_bus_or_chip_bound():
+    _, r = run("ideal")
+    assert max(r["util_bus"], r["util_chip"]) > 0.85
+    assert r["util_ftl"] == 0.0
+
+
+def test_scheme_ordering_randread():
+    """ideal >= fmmu > dftl-1c ; 4-core recovers most of the loss."""
+    _, ideal = run("ideal")
+    _, fmmu = run("fmmu")
+    _, d1 = run("dftl", 1)
+    _, d4 = run("dftl", 4)
+    _, c1 = run("cdftl", 1)
+    assert fmmu["iops"] >= 0.97 * ideal["iops"]
+    assert d1["iops"] < fmmu["iops"]
+    assert c1["iops"] < d1["iops"]          # CDFTL 1-core slowest (Fig 11d)
+    assert d4["iops"] > d1["iops"]
+
+
+def test_fmmu_not_bottleneck_fig14_style():
+    cfg = small_cfg(channels=8, ways=4, host_bw_gbps=31.52)
+    _, r = run("fmmu", cfg=cfg, cmds=6000)
+    assert r["util_ftl"] < 0.9
+    assert max(r["util_bus"], r["util_chip"]) > r["util_ftl"]
+
+
+def test_write_gc_invariants():
+    cfg = small_cfg()
+    sim, r = run("fmmu", wl=W.rand_write_4k, cmds=12000, cfg=cfg)
+    assert r["stats"]["erases"] > 0, "GC never ran"
+    # physical consistency: every mapped dlpn's rmap inverts correctly
+    import numpy as np
+    mapped = np.nonzero(sim.map >= 0)[0]
+    assert len(mapped) == sim.n_pages_logical
+    dppns = sim.map[mapped]
+    assert len(np.unique(dppns)) == len(dppns), "double-mapped dppn"
+    assert (sim.rmap[dppns] == mapped).all()
+    # valid counts consistent
+    vc = np.bincount(dppns // sim.ppb, minlength=sim.n_blocks)
+    assert (vc == sim.valid).all()
+    assert sim.free_pages >= 0
+
+
+def test_write_backpressure_no_oom():
+    """Sustained random overwrite far beyond OP must not crash."""
+    run("ideal", wl=W.rand_write_4k, cmds=20000)
+
+
+def test_seq_read_faster_than_rand_read():
+    _, seq = run("ideal", wl=W.seq_read_64k, cmds=1500)
+    _, rnd = run("ideal", wl=W.rand_read_4k, cmds=1500)
+    assert seq["gbps"] > rnd["gbps"]
+
+
+def test_tp_read_merging_shared():
+    """Concurrent misses on one TVPN produce one in-flight TP read."""
+    cfg = small_cfg()
+    sim = SSDSim(cfg, scheme="fmmu")
+    sim.precondition_sequential()
+    got = []
+    for i in range(16):   # same translation page, different blocks
+        sim.read_page(i * cfg.cmt_block_entries, 4096,
+                      lambda: got.append(1))
+    sim.ev.run()
+    assert len(got) == 16
+    assert sim.stats["tp_reads"] <= 2
+
+
+def test_trace_surrogates_run_all_schemes():
+    cfg = small_cfg()
+    for spec in W.TRACES.values():
+        for scheme in ("ideal", "fmmu", "dftl", "cdftl"):
+            sim = SSDSim(cfg, scheme=scheme)
+            sim.precondition_sequential()
+            r = sim.run_closed_loop(W.trace_surrogate(cfg, spec), 800)
+            assert r["cmds"] == 800
+            assert r["elapsed_us"] > 0

@@ -1,0 +1,8 @@
+"""End-to-end system sanity (extended by test_training / test_serving)."""
+from repro.configs import ARCHS, SHAPES, all_cells
+
+
+def test_registry_complete():
+    assert len(ARCHS) == 10
+    assert len(SHAPES) == 4
+    assert len(all_cells()) == 40
