@@ -1,8 +1,10 @@
 """Microbenchmarks of the compute kernels (CPU: blocked-jnp lowering —
 the same graphs the dry-run compiles; Mosaic timing requires real TPU)
-and of the batched FMMU translation engine."""
+and of the batched FMMU translation engine (fused single-probe
+translate pipeline vs the unfused pre-fusion sequence)."""
 from __future__ import annotations
 
+import functools
 import time
 
 import jax
@@ -10,7 +12,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.core.fmmu import batch as B
-from repro.core.fmmu.types import small_geometry, FMMUGeometry
+from repro.core.fmmu.types import (COND_UPDATE, LOOKUP, UPDATE,
+                                   FMMUGeometry, small_geometry)
 from repro.kernels import ops
 
 
@@ -22,6 +25,19 @@ def _time(fn, *args, iters=5, **kw):
         out = fn(*args, **kw)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _time_state(step, st, iters=20):
+    """Time a state-threading FMMU step: jitted closures DONATE the
+    state buffer, so each call must consume the previous call's
+    output rather than reuse a stale (already-donated) argument."""
+    st = step(st)                 # warmup + compile
+    jax.block_until_ready(st)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        st = step(st)
+    jax.block_until_ready(st)
+    return (time.perf_counter() - t0) / iters * 1e6, st
 
 
 def main():
@@ -62,14 +78,59 @@ def main():
     g = FMMUGeometry(cmt_sets=512, cmt_ways=4, cmt_entries=8,
                      ctp_sets=16, ctp_ways=4, entries_per_tp=4096,
                      n_tvpns=256, queue_cap=64)
+    bq = 512
     st = B.init_batch_state(g)
     fns = B.make_jitted(g)
-    dl = jax.random.randint(k, (512,), 0, g.n_tvpns * g.entries_per_tp)
+    dl = jax.random.randint(k, (bq,), 0, g.n_tvpns * g.entries_per_tp)
     st = fns["update"](st, dl, dl)
-    us = _time(lambda s_, d_: fns["lookup"](s_, d_)[1], st, dl, iters=20)
+    us, st = _time_state(lambda s_: fns["lookup"](s_, dl)[0], st)
     emit("kernel_fmmu_lookup_512", us,
-         f"{512 / us:.1f} translations/us vectorized "
+         f"{bq / us:.1f} translations/us vectorized "
          f"(paper FSM: 1 per 0.16us)")
+
+    # fused mixed-op translate (one probe + one insert for the whole
+    # LOOKUP/UPDATE/COND_UPDATE mix) vs the unfused pre-fusion sequence
+    # (one call per op kind; CondUpdate alone re-probes + re-inserts)
+    kb = jax.random.key(1)
+    opc = jnp.asarray([LOOKUP] * (bq // 2) + [UPDATE] * (bq // 4)
+                      + [COND_UPDATE] * (bq // 4), jnp.int32)
+    opc = jax.random.permutation(kb, opc)
+    dl2 = jax.random.permutation(
+        kb, g.n_tvpns * g.entries_per_tp)[:bq].astype(jnp.int32)
+    dp2 = jax.random.randint(jax.random.fold_in(kb, 1), (bq,), 0, 10 ** 6)
+    old2 = jax.random.randint(jax.random.fold_in(kb, 2), (bq,), 0, 10 ** 6)
+    old2 = jnp.where(jax.random.bernoulli(jax.random.fold_in(kb, 3), 0.5,
+                                          (bq,)), dp2, old2)  # ~half apply
+    ml, mu, mc = (opc == LOOKUP), (opc == UPDATE), (opc == COND_UPDATE)
+    dll, dlu, dlc = dl2[ml], dl2[mu], dl2[mc]
+    dpu, dpc, oldc = dp2[mu], dp2[mc], old2[mc]
+
+    st = B.init_batch_state(g)
+    st = fns["update"](st, dl2, dp2)
+    us_fused, st = _time_state(
+        lambda s_: fns["translate"](s_, opc, dl2, dp2, old2)[0], st)
+
+    # baseline donates too: the ratio must measure fusion, not the
+    # state-copy elimination donation buys both paths equally
+    lu = jax.jit(functools.partial(B.lookup_batch_unfused, g),
+                 donate_argnums=(0,))
+    uu = jax.jit(functools.partial(B.update_batch_unfused, g),
+                 donate_argnums=(0,))
+    cu = jax.jit(functools.partial(B.cond_update_batch_unfused, g),
+                 donate_argnums=(0,))
+
+    def legacy_seq(s_):
+        s_, _ = lu(s_, dll)
+        s_ = uu(s_, dlu, dpu)
+        s_, _ = cu(s_, dlc, dpc, oldc)
+        return s_
+
+    st2 = B.init_batch_state(g)
+    st2 = fns["update"](st2, dl2, dp2)
+    us_legacy, _ = _time_state(legacy_seq, st2)
+    emit("fmmu_translate_mixed_512", us_fused,
+         f"{us_legacy / us_fused:.2f}x vs unfused 3-call sequence "
+         f"({us_legacy:.1f}us); lookup-only {us:.1f}us")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,7 @@
 """Run every benchmark (one per paper table/figure + kernels).
-``PYTHONPATH=src python -m benchmarks.run``
+``PYTHONPATH=src python -m benchmarks.run``           full sweep
+``PYTHONPATH=src python -m benchmarks.run --quick``   kernels-only smoke
+(CI runs --quick per push so translate-path perf regressions surface)
 CSV rows: name,us_per_call,derived
 """
 from __future__ import annotations
@@ -12,6 +14,7 @@ import traceback
 def main() -> None:
     from benchmarks import (fig2_perf_model, fig10_ftl_exec, fig11_synthetic,
                             fig13_traces, fig14_scalability, kernel_bench)
+    quick = "--quick" in sys.argv[1:]
     mods = [
         ("fig10 (FTL exec times)", fig10_ftl_exec),
         ("fig2 (perf model)", fig2_perf_model),
@@ -20,6 +23,8 @@ def main() -> None:
         ("fig14 (scalability)", fig14_scalability),
         ("kernels", kernel_bench),
     ]
+    if quick:
+        mods = [("kernels", kernel_bench)]
     failures = 0
     print("name,us_per_call,derived")
     for name, mod in mods:

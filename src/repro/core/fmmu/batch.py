@@ -4,7 +4,7 @@ The paper's FMMU processes one packet per pipeline slot; a TPU is a wide
 vector machine, so the serving integration translates a whole request
 batch per step:
 
-  * all CMT probes in parallel (kernels/fmmu_lookup Pallas kernel);
+  * all CMT probes in parallel (kernels/fmmu_translate Pallas kernel);
   * MSHR semantics become sort-based *miss dedup*: all misses to the
     same cache block are served by ONE backing-store gather (exactly the
     paper's "one flash read serves many merged requests");
@@ -14,7 +14,32 @@ batch per step:
     stand-in for the sequential second-chance walk;
   * the batch path is WRITE-THROUGH (backing is HBM/host RAM, where a
     scatter is cheap), unlike the flash-faithful write-back+DTL FSM in
-    engine.py. Recorded as a hardware-adaptation decision in DESIGN.md.
+    engine.py. Recorded as a hardware-adaptation decision in DESIGN.md
+    ("Fused translate pipeline").
+
+Fused translate pipeline (DESIGN.md)
+------------------------------------
+``translate_batch`` is the single entry point: it services a *mixed*
+batch of LOOKUP / UPDATE / COND_UPDATE ops — the paper's arbiter
+multiplexes all request sources through one shared pipeline — with the
+**single-probe invariant**: exactly ONE CMT probe (one
+``ops.fmmu_translate`` call: probe + backing fallback + ref-bit touch in
+one kernel) and ONE insert pass (one stable lexicographic segment-sort)
+per batch, regardless of the op mix. The pre-fusion path re-probed up to
+three times per GC relocation (CondUpdate = lookup-probe + update-probe
++ insert x2) and paid two full sorts per insert; it is preserved below
+as ``*_unfused`` for equivalence tests and benchmarking.
+
+``lookup_batch`` / ``update_batch`` / ``cond_update_batch`` remain as
+thin wrappers over ``translate_batch`` so existing callers and the
+lockstep tests keep passing.
+
+Mixed-batch semantics: all lanes *read* the pre-batch mapping; all
+writes (UPDATE lanes, and COND_UPDATE lanes whose old_dppn check
+passes) apply together afterwards. Duplicate *write* dlpns within one
+batch remain a caller contract violation (the paging layer allocates
+uniquely); duplicate cache *blocks* in one batch are fine and are
+MSHR-merged into a single fill.
 
 State is a small pytree usable inside jit/shard_map; the backing table
 plays the role of flash-resident translation pages + GTD.
@@ -27,11 +52,18 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.fmmu.types import FMMUGeometry, NIL
+from repro.core.fmmu.types import (COND_UPDATE, FMMUGeometry, LOOKUP, NIL,
+                                   UPDATE)
 from repro.kernels import ops
 
 I = jnp.int32
 BIG = jnp.iinfo(jnp.int32).max
+
+# Trace-time instrumentation: bumped once per CMT probe / insert pass
+# *traced* into a graph (not per execution). tests/test_fmmu_batch.py
+# asserts the fused path traces exactly one of each per batch.
+PROBE_TRACES = [0]
+INSERT_TRACES = [0]
 
 
 class BatchFMMUState(NamedTuple):
@@ -56,21 +88,204 @@ def init_batch_state(g: FMMUGeometry) -> BatchFMMUState:
     )
 
 
-def _probe(g: FMMUGeometry, st: BatchFMMUState, dlpns, impl=None):
+def _n_blocks(g: FMMUGeometry) -> int:
+    return g.n_tvpns * g.entries_per_tp // g.cmt_entries
+
+
+def _insert_blocks(g: FMMUGeometry, st: BatchFMMUState, miss_bids, prio):
+    """Insert up to W distinct missing blocks per set (vectorized).
+
+    miss_bids [Bq] block ids (BIG = no miss); prio [Bq] insert-order
+    class = the legacy pass index (LOOKUP=0, UPDATE=1, COND_UPDATE=2) so
+    a fused mixed batch fills ways in exactly the order the unfused
+    three-call sequence would.
+
+    One segment-sort on the packed lexicographic key (set, prio,
+    block id) replaces the old two full sort passes. Since the block id
+    determines its set (set = bid mod S) and duplicate block ids first
+    collapse to one priority class via a scatter-min over the block-id
+    space (MSHR merge), the three key components pack into a single
+    int32 — key = (set*4 + prio) * ceil(NB/S) + bid//S — so the sort is
+    a cheap single-operand sort (XLA's variadic comparator sorts are an
+    order of magnitude slower on CPU) and set, priority, and block id
+    are all recovered arithmetically from the sorted keys. Equal keys
+    are exactly the duplicate block ids, giving the dedup mask by
+    adjacency; set segments give the per-set insertion rank.
+    """
+    INSERT_TRACES[0] += 1
+    s_cnt, w_cnt = g.cmt_sets, g.cmt_ways
+    q_cap = -(-_n_blocks(g) // s_cnt)
+    assert 4 * q_cap * (s_cnt + 1) < BIG, "packed insert key overflows"
+    is_miss = miss_bids != BIG
+    safe_bid = jnp.where(is_miss, miss_bids, 0)
+    # collapse priority per block id (scatter-min): duplicates of one
+    # block always carry the same key and therefore sort adjacently
+    pbuf = jnp.full((_n_blocks(g),), 3, I).at[safe_bid].min(
+        jnp.where(is_miss, prio, 3).astype(I), mode="drop")
+    prio_eff = pbuf[safe_bid]
+    key = ((jnp.mod(safe_bid, s_cnt) * 4 + prio_eff) * q_cap
+           + safe_bid // s_cnt)
+    gkey = jnp.sort(jnp.where(is_miss, key, BIG))
+    gsets = jnp.where(gkey != BIG, gkey // (4 * q_cap), s_cnt).astype(I)
+    gbids = jnp.where(gkey != BIG,
+                      jnp.mod(gkey, q_cap) * s_cnt + gsets, BIG)
+    first = jnp.concatenate([jnp.array([True]), gkey[1:] != gkey[:-1]])
+    kept = first & (gsets < s_cnt)
+    # rank within the set segment, counting kept (unique) entries only
+    cf = jnp.cumsum(kept.astype(I)) - kept          # exclusive prefix
+    counts = jnp.bincount(gsets, length=s_cnt + 1)
+    offs = jnp.cumsum(counts) - counts              # segment starts
+    seg_start = jnp.clip(offs[jnp.clip(gsets, 0, s_cnt)], 0,
+                         gsets.shape[0] - 1)
+    rank = cf - cf[seg_start]
+    keep = kept & (rank < w_cnt)
+    way = jnp.mod(st.clock[jnp.clip(gsets, 0, s_cnt - 1)] + rank, w_cnt)
+    # gather fresh block contents from backing
+    base = jnp.where(keep, gbids, 0) * g.cmt_entries
+    idx = base[:, None] + jnp.arange(g.cmt_entries)[None, :]
+    fresh = st.backing[jnp.clip(idx, 0, st.backing.shape[0] - 1)]
+    flat = jnp.where(keep, gsets * w_cnt + way, s_cnt * w_cnt)  # OOB -> drop
+    tags = st.tags.reshape(-1).at[flat].set(
+        jnp.where(keep, gbids, 0).astype(I), mode="drop").reshape(s_cnt, w_cnt)
+    valid = st.valid.reshape(-1).at[flat].set(True, mode="drop").reshape(
+        s_cnt, w_cnt)
+    ref = st.ref.reshape(-1).at[flat].set(True, mode="drop").reshape(
+        s_cnt, w_cnt)
+    data = st.data.reshape(-1, g.cmt_entries).at[flat].set(
+        fresh.astype(I), mode="drop").reshape(s_cnt, w_cnt, g.cmt_entries)
+    ins_per_set = jnp.bincount(jnp.where(keep, gsets, s_cnt),
+                               length=s_cnt + 1)[:s_cnt]
+    clock = jnp.mod(st.clock + ins_per_set, w_cnt)
+    n_fill = keep.sum()
+    return st._replace(tags=tags, valid=valid, ref=ref, data=data,
+                       clock=clock,
+                       stats=st.stats.at[2].add(n_fill)), n_fill
+
+
+def translate_batch(g: FMMUGeometry, st: BatchFMMUState, opcodes, dlpns,
+                    dppns, old_dppns, impl=None
+                    ) -> Tuple[BatchFMMUState, jnp.ndarray, jnp.ndarray]:
+    """Fused mixed-op translate: ONE CMT probe, ONE insert pass.
+
+    opcodes [Bq] in {LOOKUP, UPDATE, COND_UPDATE}; dlpns [Bq]
+    (-1 = inactive lane); dppns [Bq] new mapping for write lanes;
+    old_dppns [Bq] compare value for COND_UPDATE lanes.
+
+    Returns (state, out [Bq], ok [Bq] bool):
+      * out: the pre-batch mapping of dlpn (NIL when unmapped/inactive)
+        — for LOOKUP lanes this is the translation result;
+      * ok:  for COND_UPDATE lanes, whether the guarded write applied
+        (mapping still equalled old_dppn); `active` for other lanes.
+    """
+    PROBE_TRACES[0] += 1
+    active = dlpns >= 0
+    is_l = opcodes == LOOKUP
+    is_u = opcodes == UPDATE
+    is_c = opcodes == COND_UPDATE
+    # probed lanes (LOOKUP + COND) are the ones that count hit/miss
+    # stats AND touch the ref bit on a hit — one binding, used for both
+    probed = active & (is_l | is_c)
+    # one fused kernel: probe + backing fallback + ref-bit touch
+    hit, cur, set_idx, way, refbits = ops.fmmu_translate(
+        st.tags, st.valid, st.ref, st.data, st.backing, dlpns, probed,
+        entries_per_block=g.cmt_entries, impl=impl)
+    ok = jnp.where(is_c, active & (cur == old_dppns), active)
+    write = (is_u & active) | (is_c & ok)
+    # write-through to the backing table
+    safe = jnp.where(write, dlpns, st.backing.shape[0])
+    backing = st.backing.at[safe].set(dppns.astype(I), mode="drop")
+    # update cached copies where the block is resident
+    off = jnp.mod(jnp.where(active, dlpns, 0), g.cmt_entries)
+    flat = (set_idx * g.cmt_ways + way) * g.cmt_entries + off
+    flat = jnp.where(write & hit, flat, st.data.size)
+    data = st.data.reshape(-1).at[flat].set(
+        dppns.astype(I), mode="drop").reshape(st.data.shape)
+    stats = (st.stats.at[0].add((probed & hit).sum())
+             .at[1].add((probed & ~hit).sum())
+             .at[3].add(write.sum()))
+    st = st._replace(backing=backing, data=data, ref=refbits, stats=stats)
+    # single insert pass for every miss, MSHR-merged; write-allocate for
+    # UPDATE/COND lanes pulls post-write backing contents
+    miss_bids = jnp.where(active & ~hit, dlpns // g.cmt_entries, BIG)
+    prio = jnp.where(is_l, 0, jnp.where(is_u, 1, 2)).astype(I)
+    st, _ = _insert_blocks(g, st, miss_bids, prio)
+    return st, jnp.where(active, cur, NIL), ok
+
+
+# ------------------------------------------------------------ wrappers
+def lookup_batch(g: FMMUGeometry, st: BatchFMMUState, dlpns,
+                 impl=None) -> Tuple[BatchFMMUState, jnp.ndarray]:
+    """Translate a batch of DLPNs. dlpns [Bq] (-1 = inactive).
+    Returns (state, dppns [Bq]). Misses are served from backing in the
+    same step and filled into the cache (dedup'd). Thin wrapper over
+    translate_batch (single-probe fused path)."""
+    z = jnp.zeros(dlpns.shape, I)
+    st, out, _ = translate_batch(g, st, jnp.full(dlpns.shape, LOOKUP, I),
+                                 dlpns, z, z, impl=impl)
+    return st, out
+
+
+def update_batch(g: FMMUGeometry, st: BatchFMMUState, dlpns, dppns,
+                 impl=None) -> BatchFMMUState:
+    """Write-through batched Update (thin wrapper over translate_batch).
+    Duplicate dlpns in one batch are a caller contract violation (the
+    paging layer allocates uniquely)."""
+    st, _, _ = translate_batch(g, st, jnp.full(dlpns.shape, UPDATE, I),
+                               dlpns, dppns, jnp.zeros(dlpns.shape, I),
+                               impl=impl)
+    return st
+
+
+def cond_update_batch(g: FMMUGeometry, st: BatchFMMUState, dlpns, dppns,
+                      old_dppns, impl=None):
+    """Batched CondUpdate (GC relocation): apply only where the current
+    mapping still equals old_dppn. Returns (state, applied mask). Thin
+    wrapper over translate_batch — one probe, one insert (the unfused
+    path re-probed twice and inserted twice)."""
+    st, _, ok = translate_batch(g, st,
+                                jnp.full(dlpns.shape, COND_UPDATE, I),
+                                dlpns, dppns, old_dppns, impl=impl)
+    return st, ok
+
+
+def make_jitted(g: FMMUGeometry):
+    """Convenience jitted closures for the serving layer.
+
+    The state pytree (arg 0) is DONATED: steady-state serving performs
+    zero state copies — callers must always rebind the returned state
+    and never reuse the argument they passed in (all in-repo callers
+    follow `state = fns[...](state, ...)`)."""
+    j = functools.partial(jax.jit, donate_argnums=(0,))
+    return {
+        "lookup": j(functools.partial(lookup_batch, g)),
+        "update": j(functools.partial(update_batch, g)),
+        "cond_update": j(functools.partial(cond_update_batch, g)),
+        "translate": j(functools.partial(translate_batch, g)),
+    }
+
+
+# ----------------------------------------------------------------------
+# Unfused reference path — the pre-fusion implementation, kept verbatim
+# (one probe per op kind, CondUpdate = lookup + update = 2 probes +
+# 2 insert passes, each insert paying two full sorts). Used by the
+# equivalence tests (fused mixed batch must be bit-identical to the
+# unfused three-call split) and as the kernel_bench baseline. Not
+# exported via make_jitted; new callers must use translate_batch.
+# ----------------------------------------------------------------------
+def _probe_unfused(g: FMMUGeometry, st: BatchFMMUState, dlpns, impl=None):
+    PROBE_TRACES[0] += 1
     return ops.fmmu_lookup(st.tags, st.valid, st.data, dlpns,
                            entries_per_block=g.cmt_entries, impl=impl)
 
 
-def _insert_blocks(g: FMMUGeometry, st: BatchFMMUState, miss_bids):
-    """Insert up to W distinct missing blocks per set (vectorized).
-    miss_bids [Bq] block ids (BIG = no miss)."""
+def _insert_blocks_unfused(g: FMMUGeometry, st: BatchFMMUState, miss_bids):
+    """Pre-fusion insert: dedup via full sort + second argsort pass."""
+    INSERT_TRACES[0] += 1
     s_cnt, w_cnt = g.cmt_sets, g.cmt_ways
-    # dedup block ids (MSHR merging)
     sorted_b = jnp.sort(miss_bids)
     first = jnp.concatenate([jnp.array([True]),
                              sorted_b[1:] != sorted_b[:-1]])
     uniq = jnp.where(first & (sorted_b != BIG), sorted_b, BIG)
-    # group by set, rank within set
     usets = jnp.where(uniq != BIG, jnp.mod(uniq, s_cnt), s_cnt)
     order = jnp.argsort(usets, stable=True)
     gsets = usets[order]
@@ -80,15 +295,12 @@ def _insert_blocks(g: FMMUGeometry, st: BatchFMMUState, miss_bids):
     rank = jnp.arange(gsets.shape[0]) - offs[gsets]
     keep = (gsets < s_cnt) & (rank < w_cnt)
     way = jnp.mod(st.clock[jnp.clip(gsets, 0, s_cnt - 1)] + rank, w_cnt)
-    # gather fresh block contents from backing
     base = gbids * g.cmt_entries
     idx = base[:, None] + jnp.arange(g.cmt_entries)[None, :]
     fresh = st.backing[jnp.clip(idx, 0, st.backing.shape[0] - 1)]
     sset = jnp.where(keep, gsets, s_cnt - 1)
     sway = jnp.where(keep, way, 0)
     drop = ~keep
-    # scatter (dropped rows target [S-1,0] but with mode guard via where
-    # on a one-shot mask: rewrite as scatter with explicit drop index)
     flat = sset * w_cnt + sway
     flat = jnp.where(drop, s_cnt * w_cnt, flat)    # OOB -> dropped
     tags = st.tags.reshape(-1).at[flat].set(
@@ -108,18 +320,13 @@ def _insert_blocks(g: FMMUGeometry, st: BatchFMMUState, miss_bids):
                        stats=st.stats.at[2].add(n_fill)), n_fill
 
 
-def lookup_batch(g: FMMUGeometry, st: BatchFMMUState, dlpns,
-                 impl=None) -> Tuple[BatchFMMUState, jnp.ndarray]:
-    """Translate a batch of DLPNs. dlpns [Bq] (-1 = inactive).
-    Returns (state, dppns [Bq]). Misses are served from backing in the
-    same step and filled into the cache (dedup'd)."""
-    hit, dppn, set_idx, way = _probe(g, st, dlpns, impl=impl)
+def lookup_batch_unfused(g: FMMUGeometry, st: BatchFMMUState, dlpns,
+                         impl=None) -> Tuple[BatchFMMUState, jnp.ndarray]:
+    hit, dppn, set_idx, way = _probe_unfused(g, st, dlpns, impl=impl)
     active = dlpns >= 0
     miss = active & ~hit
-    # serve misses straight from the flat backing table
     backing_val = st.backing[jnp.clip(dlpns, 0, st.backing.shape[0] - 1)]
     out = jnp.where(hit, dppn, jnp.where(active, backing_val, NIL))
-    # refbit touch for hits
     flat = set_idx * g.cmt_ways + way
     flat = jnp.where(hit, flat, g.cmt_sets * g.cmt_ways)
     ref = st.ref.reshape(-1).at[flat].set(True, mode="drop").reshape(
@@ -127,48 +334,33 @@ def lookup_batch(g: FMMUGeometry, st: BatchFMMUState, dlpns,
     st = st._replace(ref=ref,
                      stats=st.stats.at[0].add(hit.sum()).at[1].add(miss.sum()))
     miss_bids = jnp.where(miss, dlpns // g.cmt_entries, BIG)
-    st, _ = _insert_blocks(g, st, miss_bids)
+    st, _ = _insert_blocks_unfused(g, st, miss_bids)
     return st, out
 
 
-def update_batch(g: FMMUGeometry, st: BatchFMMUState, dlpns, dppns,
-                 impl=None) -> BatchFMMUState:
-    """Write-through batched Update. Duplicate dlpns in one batch are a
-    caller contract violation (the paging layer allocates uniquely)."""
+def update_batch_unfused(g: FMMUGeometry, st: BatchFMMUState, dlpns, dppns,
+                         impl=None) -> BatchFMMUState:
     active = dlpns >= 0
     safe = jnp.where(active, dlpns, st.backing.shape[0])
     backing = st.backing.at[safe].set(dppns.astype(I), mode="drop")
     st = st._replace(backing=backing,
                      stats=st.stats.at[3].add(active.sum()))
-    # update cached copies where present
-    hit, _, set_idx, way = _probe(g, st, dlpns, impl=impl)
+    hit, _, set_idx, way = _probe_unfused(g, st, dlpns, impl=impl)
     off = jnp.mod(jnp.where(active, dlpns, 0), g.cmt_entries)
     flat = (set_idx * g.cmt_ways + way) * g.cmt_entries + off
     flat = jnp.where(hit, flat, st.data.size)
     data = st.data.reshape(-1).at[flat].set(dppns.astype(I), mode="drop")
     st = st._replace(data=data.reshape(st.data.shape))
-    # allocate blocks for missing updates too (write-allocate, like FSM)
     miss = active & ~hit
     miss_bids = jnp.where(miss, dlpns // g.cmt_entries, BIG)
-    st, _ = _insert_blocks(g, st, miss_bids)
+    st, _ = _insert_blocks_unfused(g, st, miss_bids)
     return st
 
 
-def cond_update_batch(g: FMMUGeometry, st: BatchFMMUState, dlpns, dppns,
-                      old_dppns, impl=None):
-    """Batched CondUpdate (GC relocation): apply only where the current
-    mapping still equals old_dppn. Returns (state, applied mask)."""
-    st2, cur = lookup_batch(g, st, dlpns, impl=impl)
+def cond_update_batch_unfused(g: FMMUGeometry, st: BatchFMMUState, dlpns,
+                              dppns, old_dppns, impl=None):
+    st2, cur = lookup_batch_unfused(g, st, dlpns, impl=impl)
     ok = (cur == old_dppns) & (dlpns >= 0)
     eff = jnp.where(ok, dlpns, -1)
-    st3 = update_batch(g, st2, eff, dppns, impl=impl)
+    st3 = update_batch_unfused(g, st2, eff, dppns, impl=impl)
     return st3, ok
-
-
-def make_jitted(g: FMMUGeometry):
-    """Convenience jitted closures for the serving layer."""
-    return {
-        "lookup": jax.jit(functools.partial(lookup_batch, g)),
-        "update": jax.jit(functools.partial(update_batch, g)),
-        "cond_update": jax.jit(functools.partial(cond_update_batch, g)),
-    }

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for the FMMU's hot path: batched CMT probe.
+"""Pallas TPU kernel for a bare batched CMT probe (probe-only).
 
 Hardware adaptation (DESIGN.md §2): the paper's CAM-style parallel tag
 compare becomes a *one-hot matmul gather* — set indices are expanded to
@@ -8,6 +8,14 @@ matmuls (TPUs have no CAM, but they have a 128x128 systolic array).
 The whole CMT (paper geometry: 512 sets x 4 ways x 8 entries x 4B ≈
 64KB tags+data) fits in VMEM, exactly like the SRAM block of the
 hardware unit; only the request vector streams through the grid.
+
+Fused translate pipeline (DESIGN.md): the batch engine's hot path no
+longer uses this probe-only kernel — `fmmu_translate.py` fuses the
+probe with the backing-table fallback and the ref-bit touch so
+`translate_batch` issues ONE kernel per mixed-op batch. This kernel
+remains the probe primitive for the unfused reference path
+(`core/fmmu/batch.*_unfused`, equivalence tests + benchmarks) and for
+callers that need a side-effect-free probe.
 """
 from __future__ import annotations
 
@@ -17,6 +25,21 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def gather16(onehot, vals2d):
+    """Bit-exact int32 one-hot gather on the MXU: two f32 matmuls over
+    the 16-bit halves (lo = v & 0xffff in [0, 2^16), hi = v >> 16 in
+    [-2^15, 2^15) — each f32-exact), recombined in int32. Needed
+    because gathered values may exceed f32's 2^24 exact-integer range:
+    the paging layer tags host-tier block ids at 1<<24 and above.
+    onehot [r, c] f32 (exactly one 1.0 per row, or all-zero rows);
+    vals2d [c, k] int32 -> [r, k] int32."""
+    lo = jax.lax.dot(onehot, (vals2d & 0xffff).astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    hi = jax.lax.dot(onehot, (vals2d >> 16).astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return hi.astype(jnp.int32) * 65536 + lo.astype(jnp.int32)
 
 
 def _fl_kernel(tags_ref, valid_ref, data_ref, dlpn_ref, hit_ref, dppn_ref,
@@ -44,12 +67,11 @@ def _fl_kernel(tags_ref, valid_ref, data_ref, dlpn_ref, hit_ref, dppn_ref,
     way = jnp.argmax(match, axis=1).astype(jnp.int32)
 
     e = entries_per_block
-    data2d = data_ref[...].reshape(n_sets, n_ways * e).astype(jnp.float32)
-    row_data = jax.lax.dot(onehot, data2d,
-                           preferred_element_type=jnp.float32)  # [blk, W*E]
+    data2d = data_ref[...].reshape(n_sets, n_ways * e)
+    row_data = gather16(onehot, data2d)                # [blk, W*E]
     col = way * e + offset
     picked = jnp.take_along_axis(row_data, col[:, None], axis=1)[:, 0]
-    dppn = jnp.where(hit, picked.astype(jnp.int32), -1)
+    dppn = jnp.where(hit, picked, -1)
 
     hit_ref[...] = hit.astype(jnp.int32)
     dppn_ref[...] = dppn

@@ -1,0 +1,157 @@
+"""Pallas TPU kernel for the fused FMMU translate pipeline.
+
+One kernel invocation services the whole probe side of a mixed-op
+translate batch (core/fmmu/batch.translate_batch): CMT tag probe,
+backing-table fallback for misses, ref-bit touch for hits, and hit-way
+selection — where the pre-fusion path issued a probe kernel and then
+fixed up misses / ref bits on the host side of the graph.
+
+Hardware adaptation (DESIGN.md, "Fused translate pipeline"): as in
+fmmu_lookup, the paper's CAM-style parallel tag compare becomes a
+one-hot matmul gather on the MXU. The backing-table fallback — the
+paper's flash-resident translation-page read that the FMMU overlaps
+with new probes — streams through a second, chunk-sized grid
+dimension: only one `backing_chunk` tile is VMEM-resident at a time,
+so the table never has to fit on-chip (per-lane-block outputs are
+revisited across chunk steps and accumulate the fallback value).
+Like the tag CAM, this trades FLOPs for regularity — the streamed
+one-hot gather is O(Bq x NP) MXU work instead of an O(Bq) random
+gather, which is the right trade for CMT-scale tables on a systolic
+array; a scalar-prefetch (PrefetchScalarGridSpec) gather indexed by
+the miss DLPNs is the refinement path for very large tables. The
+CPU/serving default (`impl="blocked"`) uses the reference lowering's
+exact O(Bq) gather and is unaffected.
+
+Value gathers (cached DPPNs, backing entries) must be bit-exact for
+any int32 — the paging layer tags host-tier blocks at 1<<24 and above,
+past f32's exact-integer range — so they use `fmmu_lookup.gather16`
+(two matmuls over the 16-bit halves, recombined in int32). Tag/set
+*compares* stay in single f32: block ids are dlpn // E < 2^24 at any
+supported geometry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.fmmu_lookup import gather16
+
+
+def _ft_kernel(tags_ref, valid_ref, data_ref, backing_ref, dlpn_ref,
+               touch_ref, refin_ref, hit_ref, dppn_ref, set_ref, way_ref,
+               refout_ref, *, entries_per_block, n_sets, n_ways,
+               backing_chunk, n_backing, blk):
+    i = pl.program_id(0)      # lane block (outer)
+    c = pl.program_id(1)      # backing chunk (inner, fastest)
+    dlpns = dlpn_ref[...]                              # [blk]
+    active = dlpns >= 0
+
+    @pl.when((i == 0) & (c == 0))
+    def _init_ref():
+        refout_ref[...] = refin_ref[...]
+
+    @pl.when(c == 0)
+    def _probe():
+        block_id = dlpns // entries_per_block
+        offset = jnp.mod(dlpns, entries_per_block)
+        set_idx = jnp.mod(block_id, n_sets)
+        # one-hot gather of the probe sets via the MXU
+        onehot = (set_idx[:, None] ==
+                  jax.lax.broadcasted_iota(jnp.int32, (blk, n_sets), 1)
+                  ).astype(jnp.float32)                # [blk, S]
+        tags = tags_ref[...].astype(jnp.float32)       # [S, W]
+        valid = valid_ref[...].astype(jnp.float32)     # [S, W]
+        row_tags = jax.lax.dot(onehot, tags,
+                               preferred_element_type=jnp.float32)
+        row_valid = jax.lax.dot(onehot, valid,
+                                preferred_element_type=jnp.float32)
+        match = (row_tags == block_id[:, None].astype(jnp.float32)) & \
+            (row_valid > 0.5)                          # [blk, W]
+        hit = match.any(axis=1) & active
+        way = jnp.argmax(match, axis=1).astype(jnp.int32)
+
+        e = entries_per_block
+        data2d = data_ref[...].reshape(n_sets, n_ways * e)
+        row_data = gather16(onehot, data2d)            # [blk, W*E]
+        col = way * e + offset
+        picked = jnp.take_along_axis(row_data, col[:, None], axis=1)[:, 0]
+
+        hit_ref[...] = hit.astype(jnp.int32)
+        set_ref[...] = set_idx.astype(jnp.int32)
+        way_ref[...] = way
+        # misses start at 0 and accumulate their backing value chunk by
+        # chunk; hits are final immediately, inactive lanes stay NIL
+        dppn_ref[...] = jnp.where(hit, picked,
+                                  jnp.where(active, 0, -1))
+
+        # ref-bit touch; only the selected (argmax) way is touched,
+        # matching the reference lowering even on degenerate states
+        # with duplicate tags in a set
+        touch = (touch_ref[...] != 0) & hit            # [blk]
+        tmask = (way[:, None] ==
+                 jax.lax.broadcasted_iota(jnp.int32, (blk, n_ways), 1)) & \
+            touch[:, None]                             # [blk, W]
+        acc = jax.lax.dot(onehot.T, tmask.astype(jnp.float32),
+                          preferred_element_type=jnp.float32) > 0.5
+        refout_ref[...] = refout_ref[...] | acc.astype(jnp.int32)
+
+    # every (i, c) step: fold this backing chunk into the miss lanes;
+    # clip like the reference lowering so an out-of-contract dlpn
+    # (>= NP) reads backing[NP-1] on every impl path instead of
+    # silently matching nothing / the pad region
+    miss = active & (hit_ref[...] == 0)
+    seg = backing_ref[...]                             # [backing_chunk]
+    loc = jnp.clip(dlpns, -1, n_backing - 1) - c * backing_chunk
+    oh = ((loc[:, None] ==
+           jax.lax.broadcasted_iota(jnp.int32, (blk, backing_chunk), 1))
+          & miss[:, None]).astype(jnp.float32)
+    dppn_ref[...] = dppn_ref[...] + gather16(oh, seg[:, None])[:, 0]
+
+
+def fmmu_translate(tags, valid, refbits, data, backing, dlpns, touch, *,
+                   entries_per_block, block_size=256, backing_chunk=512,
+                   interpret=False):
+    """tags [S,W] int32; valid/refbits [S,W] bool; data [S,W,E] int32;
+    backing [NP] int32; dlpns/touch [Bq] ->
+    (hit bool, out_dppn, set, way, refbits' [S,W] bool)."""
+    n_sets, n_ways = tags.shape
+    bq = dlpns.shape[0]
+    blk = min(block_size, bq)
+    bq_p = -(-bq // blk) * blk
+    if bq_p != bq:
+        dlpns = jnp.pad(dlpns, (0, bq_p - bq), constant_values=-1)
+        touch = jnp.pad(touch, (0, bq_p - bq))
+    np_ = backing.shape[0]
+    ch = min(backing_chunk, np_)
+    np_p = -(-np_ // ch) * ch
+    if np_p != np_:
+        backing = jnp.pad(backing, (0, np_p - np_), constant_values=-1)
+    kernel = functools.partial(
+        _ft_kernel, entries_per_block=entries_per_block, n_sets=n_sets,
+        n_ways=n_ways, backing_chunk=ch, n_backing=np_, blk=blk)
+    hit, dppn, set_idx, way, new_ref = pl.pallas_call(
+        kernel,
+        grid=(bq_p // blk, np_p // ch),
+        in_specs=[
+            pl.BlockSpec((n_sets, n_ways), lambda i, c: (0, 0)),
+            pl.BlockSpec((n_sets, n_ways), lambda i, c: (0, 0)),
+            pl.BlockSpec((n_sets, n_ways, entries_per_block),
+                         lambda i, c: (0, 0, 0)),
+            pl.BlockSpec((ch,), lambda i, c: (c,)),
+            pl.BlockSpec((blk,), lambda i, c: (i,)),
+            pl.BlockSpec((blk,), lambda i, c: (i,)),
+            pl.BlockSpec((n_sets, n_ways), lambda i, c: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((blk,), lambda i, c: (i,))] * 4 +
+                  [pl.BlockSpec((n_sets, n_ways), lambda i, c: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((bq_p,), jnp.int32)] * 4 +
+                  [jax.ShapeDtypeStruct((n_sets, n_ways), jnp.int32)],
+        interpret=interpret,
+    )(tags, valid.astype(jnp.int32), data, backing,
+      dlpns, touch.astype(jnp.int32), refbits.astype(jnp.int32))
+    return (hit[:bq].astype(bool), dppn[:bq], set_idx[:bq], way[:bq],
+            new_ref.astype(bool))

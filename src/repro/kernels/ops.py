@@ -105,5 +105,23 @@ def fmmu_lookup(tags, valid, data, dlpns, *, entries_per_block, impl=None):
                                entries_per_block=entries_per_block)
 
 
+# ----------------------------------------------------------------------
+def fmmu_translate(tags, valid, refbits, data, backing, dlpns, touch, *,
+                   entries_per_block, impl=None):
+    """Fused translate probe (probe + backing fallback + ref touch) —
+    the single kernel invocation behind core/fmmu/batch.translate_batch.
+    Returns (hit, out_dppn, set_idx, way, refbits')."""
+    sel = _default_impl(impl)
+    if sel in ("pallas", "pallas_interpret"):
+        from repro.kernels import fmmu_translate as ft
+        return ft.fmmu_translate(tags, valid, refbits, data, backing,
+                                 dlpns, touch,
+                                 entries_per_block=entries_per_block,
+                                 interpret=(sel == "pallas_interpret"))
+    return ref.fmmu_translate_ref(tags, valid, refbits, data, backing,
+                                  dlpns, touch,
+                                  entries_per_block=entries_per_block)
+
+
 combine_partial_attention = ref.combine_partial_attention
 mamba_decode_step = ref.mamba_decode_step

@@ -452,3 +452,41 @@ def fmmu_lookup_ref(tags, valid, data, dlpns, *, entries_per_block):
     dppn = data[set_idx, way, offset]
     dppn = jnp.where(hit, dppn, -1)
     return hit, dppn, set_idx.astype(jnp.int32), way
+
+
+def fmmu_translate_ref(tags, valid, refbits, data, backing, dlpns, touch, *,
+                       entries_per_block):
+    """Fused translate probe: CMT probe + backing-table fallback +
+    ref-bit touch in one lowering (the single-probe pipeline of
+    core/fmmu/batch.translate_batch).
+
+    tags    [S, W] int32   block id (dlpn // entries_per_block) per way
+    valid   [S, W] bool
+    refbits [S, W] bool    second-chance reference bits
+    data    [S, W, E] int32 DPPN entries
+    backing [NP] int32     full flat map table (flash-resident pages)
+    dlpns   [Bq] int32     query DLPNs (-1 = inactive slot)
+    touch   [Bq] bool      lanes whose hit should set the ref bit
+    returns (hit [Bq] bool, out [Bq] int32, set_idx, way [Bq] int32,
+             refbits' [S, W] bool)
+
+    ``out`` is the pre-call mapping: the cached DPPN on a hit, the
+    backing-table entry on an active miss, NIL on inactive lanes.
+    """
+    n_sets, n_ways = tags.shape
+    block_id = dlpns // entries_per_block
+    offset = jnp.mod(dlpns, entries_per_block)
+    set_idx = jnp.mod(block_id, n_sets).astype(jnp.int32)
+    active = dlpns >= 0
+    way_tags = tags[set_idx]                       # [Bq, W]
+    way_valid = valid[set_idx]
+    match = (way_tags == block_id[:, None]) & way_valid
+    hit = match.any(axis=1) & active
+    way = jnp.argmax(match, axis=1).astype(jnp.int32)
+    cached = data[set_idx, way, offset]
+    backing_val = backing[jnp.clip(dlpns, 0, backing.shape[0] - 1)]
+    out = jnp.where(hit, cached, jnp.where(active, backing_val, -1))
+    flat = jnp.where(hit & touch, set_idx * n_ways + way, n_sets * n_ways)
+    new_ref = refbits.reshape(-1).at[flat].set(True, mode="drop").reshape(
+        refbits.shape)
+    return hit, out.astype(jnp.int32), set_idx, way, new_ref

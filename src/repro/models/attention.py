@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ops
+from repro.parallel.sharding import shard_map
 from repro.models import common
 from repro.models.common import Runtime, apply_rope, rope_angles
 
@@ -214,7 +215,7 @@ def attn_decode_paged_striped(params, x, cfg, rt: Runtime, ctx, *,
     dspec = "data" if batch_sharded else None
     pool_spec = P(own_axes if len(own_axes) > 1 else own_axes[0],
                   None, None, None)
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(dspec, None, None), P(dspec, None, None),
                   P(dspec, None, None), pool_spec, pool_spec,

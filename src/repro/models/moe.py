@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models import common
+from repro.parallel.sharding import shard_map
 from repro.models.common import Runtime
 
 
@@ -137,7 +138,7 @@ def apply_moe(params, x, cfg, rt: Runtime, ctx, *, dense_params=None):
         dp_spec = dp_axes if len(dp_axes) > 1 else dp_axes[0]
     else:
         dp_spec = None
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(dp_spec, None), P(None, None),
                   P(ctx.tp, None, None), P(ctx.tp, None, None),

@@ -8,6 +8,13 @@ new allocations; CondUpdate arbitrates swap/relocation races exactly as
 the paper's GC path does (a relocation only commits if the mapping still
 points at the old block).
 
+Every map operation funnels through ONE fused entry point
+(``_xlate`` -> ``translate_batch``): a single CMT probe and a single
+insert pass per call, mirroring the paper's arbiter that multiplexes
+all request sources through one shared pipeline. All jitted closures
+donate the FMMU state pytree, so steady-state serving performs zero
+state copies.
+
 Data movement between tiers operates on the pool tensors via jitted
 gather/scatter (device<->host offload copies on real hardware).
 """
@@ -21,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fmmu import batch as fb
-from repro.core.fmmu.types import FMMUGeometry, NIL
+from repro.core.fmmu.types import (COND_UPDATE, FMMUGeometry, NIL, UPDATE)
 from repro.paging.pool import HOST_BASE, BlockPool, OutOfBlocks
 
 
@@ -60,12 +67,26 @@ class KVPageManager:
         self.pool = BlockPool(n_device_blocks, n_host_blocks)
         self.seq_pages: Dict[int, List[int]] = {}   # slot -> block ids
         self._table_fn = jax.jit(functools.partial(self._tables, self.geom),
-                                 static_argnums=(1, 2))
+                                 static_argnums=(1, 2),
+                                 donate_argnums=(0,))
 
     # ----------------------------------------------------------- helpers
     def _dlpns(self, slot: int, pages: range) -> np.ndarray:
         return np.asarray([slot * self.max_pages + p for p in pages],
                           np.int32)
+
+    def _xlate(self, kind: int, dlpns, dppns, olds=None):
+        """Single fused map entry: one translate_batch call (one probe,
+        one insert) services the whole op batch; state is donated and
+        rebound."""
+        dl = jnp.asarray(dlpns, jnp.int32)
+        opc = jnp.full(dl.shape, kind, jnp.int32)
+        dp = jnp.asarray(dppns, jnp.int32)
+        od = (jnp.zeros(dl.shape, jnp.int32) if olds is None
+              else jnp.asarray(olds, jnp.int32))
+        self.state, out, ok = self.fns["translate"](self.state, opc, dl,
+                                                    dp, od)
+        return out, ok
 
     @staticmethod
     def _tables(geom, state, n_slots, max_pages):
@@ -79,8 +100,7 @@ class KVPageManager:
         assert slot not in self.seq_pages, f"slot {slot} busy"
         blocks = self.pool.alloc(n_pages)
         dl = self._dlpns(slot, range(n_pages))
-        self.state = self.fns["update"](self.state, jnp.asarray(dl),
-                                        jnp.asarray(blocks, jnp.int32))
+        self._xlate(UPDATE, dl, blocks)
         self.seq_pages[slot] = list(blocks)
         return blocks
 
@@ -88,17 +108,14 @@ class KVPageManager:
         cur = self.seq_pages[slot]
         blocks = self.pool.alloc(n_new)
         dl = self._dlpns(slot, range(len(cur), len(cur) + n_new))
-        self.state = self.fns["update"](self.state, jnp.asarray(dl),
-                                        jnp.asarray(blocks, jnp.int32))
+        self._xlate(UPDATE, dl, blocks)
         cur.extend(blocks)
         return blocks
 
     def free_seq(self, slot: int):
         blocks = self.seq_pages.pop(slot)
         dl = self._dlpns(slot, range(len(blocks)))
-        self.state = self.fns["update"](
-            self.state, jnp.asarray(dl),
-            jnp.full((len(blocks),), NIL, jnp.int32))
+        self._xlate(UPDATE, dl, np.full(len(blocks), NIL, np.int32))
         self.pool.free(blocks)
 
     def block_tables(self) -> jnp.ndarray:
@@ -124,10 +141,7 @@ class KVPageManager:
         for i, b in enumerate(blocks):
             if not BlockPool.is_host(b):
                 dl.append(slot * self.max_pages + i)
-        dl = jnp.asarray(dl, jnp.int32)
-        olds = jnp.asarray(dev, jnp.int32)
-        news = jnp.asarray(host, jnp.int32)
-        self.state, ok = self.fns["cond_update"](self.state, dl, news, olds)
+        _, ok = self._xlate(COND_UPDATE, dl, host, dev)
         okh = np.asarray(ok)
         assert okh.all(), "swap_out raced with a concurrent relocation"
         # move data: host block h stored at row n_device + (h - HOST_BASE)
@@ -149,12 +163,9 @@ class KVPageManager:
         if not hostb:
             return pools, 0
         dev = self.pool.alloc(len(hostb))
-        dl = jnp.asarray([slot * self.max_pages + i
-                          for i, b in enumerate(blocks)
-                          if BlockPool.is_host(b)], jnp.int32)
-        self.state, ok = self.fns["cond_update"](
-            self.state, dl, jnp.asarray(dev, jnp.int32),
-            jnp.asarray(hostb, jnp.int32))
+        dl = [slot * self.max_pages + i for i, b in enumerate(blocks)
+              if BlockPool.is_host(b)]
+        _, ok = self._xlate(COND_UPDATE, dl, dev, hostb)
         assert np.asarray(ok).all()
         src = jnp.asarray([self.pool.n_device + (h - HOST_BASE)
                            for h in hostb], jnp.int32)

@@ -15,6 +15,7 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.parallel.sharding import shard_map
 
 
 def _quantize_int8(x: jnp.ndarray, chunk: int = 256):
@@ -57,7 +58,7 @@ def make_compressed_grad_reduce(mesh, axis: str):
     """Returns f(grads, errors) -> (reduced_grads, new_errors) running a
     shard_map over `axis` only (other axes stay auto/GSPMD)."""
     def reduce_one(g, e):
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda gg, ee: compressed_psum(gg, axis, ee),
             mesh=mesh,
             in_specs=(P(), P()),

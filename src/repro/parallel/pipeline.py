@@ -18,6 +18,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.parallel.sharding import shard_map
 
 
 def pipeline_apply(mesh, stage_fn: Callable, stage_params: Any, x, *,
@@ -74,7 +75,7 @@ def pipeline_apply(mesh, stage_fn: Callable, stage_params: Any, x, *,
             jnp.where(sid == s - 1, outs, jnp.zeros_like(outs)), axis)
         return outs.reshape(b, *x_all.shape[1:])
 
-    fn = jax.shard_map(
+    fn = shard_map(
         staged, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),

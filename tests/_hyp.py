@@ -1,0 +1,37 @@
+"""Import shim for hypothesis: the real package when installed, else a
+stub that marks property tests as skipped (some containers ship no
+hypothesis wheel and nothing may be pip-installed there). Seeded
+randomized loops in the same test modules keep coverage in that case.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Absorbs any strategy-construction call chain."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: self
+
+        def __call__(self, *a, **k):
+            return self
+
+    st = _Strategy()
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+    def given(*a, **k):
+        def deco(fn):
+            # zero-arg replacement: pytest must not mistake the wrapped
+            # test's hypothesis parameters for fixtures
+            def skipper():
+                pytest.skip("hypothesis not installed in this environment")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco

@@ -1,11 +1,21 @@
-"""Shared lockstep driver: run oracle and JAX engine step-by-step on the
-same trace, comparing full architectural state each step. Used by
-tests/test_fmmu_engine.py and debugging sessions."""
+"""Shared lockstep drivers.
+
+``lockstep``       — run oracle and JAX packet engine step-by-step on the
+                     same trace, comparing full architectural state each
+                     step. Used by tests/test_fmmu_engine.py.
+``batch_lockstep`` — drive the fused mixed-op ``translate_batch`` against
+                     a shadow-dict oracle and (optionally) against the
+                     unfused three-call sequence, asserting bit-identical
+                     state + outputs. Used by tests/test_fmmu_batch.py.
+"""
 import functools
 import random
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
+from repro.core.fmmu import batch as FB
 from repro.core.fmmu import engine as E
 from repro.core.fmmu.oracle import FMMUOracle
 from repro.core.fmmu.state import F_DIRTY, F_REF, F_TRANS, F_VALID
@@ -113,6 +123,168 @@ def lockstep(seed, n_reqs=300, max_steps=40000, geom_kw=None,
     return f'OK:{len(all_oresp)}'
 
 
+def _split_order_sensitive(g, st, batch):
+    """True when splitting `batch` into the unfused three-call sequence
+    is allowed to diverge (bitwise) from the fused single pass:
+
+      * more than W distinct new blocks land in one set — the unfused
+        split wraps the insertion clock across its separate insert
+        passes while the fused pass drops rank >= W;
+      * an earlier pass's insert evicts a cached block that a later
+        pass still probes (UPDATE lanes probe after the LOOKUP pass's
+        inserts; COND lanes probe after everyone's, including the COND
+        pass's own internal lookup-insert), legally flipping that
+        lane's hit to a miss.
+
+    The fused path defines mixed-batch semantics as "all probes see the
+    pre-batch state"; this predicate delimits exactly the batches where
+    the unfused sequence agrees.
+    """
+    e, s_cnt, w_cnt = g.cmt_entries, g.cmt_sets, g.cmt_ways
+    tags, valid = np.asarray(st.tags), np.asarray(st.valid)
+    cached = set(tags[valid].tolist())
+    new_by_grp = {LOOKUP: set(), UPDATE: set(), COND_UPDATE: set()}
+    for k, d in batch:
+        b = d // e
+        if b not in cached:
+            new_by_grp[k].add(b)
+    per_set = {}
+    for b in set().union(*new_by_grp.values()):
+        per_set.setdefault(b % s_cnt, set()).add(b)
+    if any(len(v) > w_cnt for v in per_set.values()):
+        return True
+    ins_l = {b % s_cnt for b in new_by_grp[LOOKUP]}
+    ins_all = (ins_l | {b % s_cnt for b in new_by_grp[UPDATE]}
+               | {b % s_cnt for b in new_by_grp[COND_UPDATE]})
+    for k, d in batch:
+        b = d // e
+        if b in cached:
+            s = b % s_cnt
+            if ((k == UPDATE and s in ins_l)
+                    or (k == COND_UPDATE and s in ins_all)):
+                return True
+    return False
+
+
+def batch_lockstep(seed, n_batches=60, geom_kw=None, overflow=False):
+    """Drive the fused translate_batch on random mixed-op batches.
+
+    overflow=False: batches are constrained so the unfused three-call
+      split is defined to be bit-identical (COND blocks disjoint from
+      LOOKUP/UPDATE blocks — the unfused split probes COND lanes *after*
+      the earlier passes' inserts, so shared blocks would legally flip a
+      miss to a hit — and at most W distinct new blocks per set, since
+      the unfused split wraps the clock across its separate insert
+      passes). Compares fused vs unfused state bit-for-bit AND both
+      against a shadow dict.
+    overflow=True: unconstrained batches (duplicate blocks in one batch,
+      >W distinct new blocks per set, duplicate read dlpns). Checks
+      shadow-dict semantics and the cache/backing write-through
+      coherence invariant only.
+
+    Returns 'OK:<n_lanes>' or a divergence description.
+    """
+    kw = dict(cmt_sets=8, cmt_ways=4)
+    kw.update(geom_kw or {})
+    g = small_geometry(**kw)
+    rng = random.Random(seed)
+    nprng = np.random.RandomState(seed)
+    n_pages = g.n_tvpns * g.entries_per_tp
+    n_blocks = n_pages // g.cmt_entries
+    stf = FB.init_batch_state(g)
+    stu = FB.init_batch_state(g)
+    shadow = {}
+    lanes_done = 0
+
+    def gen_lanes(block_pool, kind, max_blocks=3):
+        blks = nprng.choice(block_pool, rng.randint(1, max_blocks),
+                            replace=False)
+        dl = []
+        for b in blks:
+            for _ in range(rng.randint(1, 3)):
+                dl.append(int(b) * g.cmt_entries
+                          + rng.randrange(g.cmt_entries))
+        return [(kind, d) for d in dict.fromkeys(dl)]
+
+    for it in range(n_batches):
+        if overflow:
+            pool = np.arange(n_blocks)
+            batch = (gen_lanes(pool, LOOKUP, 4) + gen_lanes(pool, UPDATE, 4)
+                     + gen_lanes(pool, COND_UPDATE, 4))
+            # dedup write dlpns only (duplicate reads stay): duplicate
+            # writes to one dlpn in one batch are a caller contract
+            # violation, duplicate blocks are the point of this mode
+            seen_w, dedup = set(), []
+            for k, d in batch:
+                if k != LOOKUP:
+                    if d in seen_w:
+                        continue
+                    seen_w.add(d)
+                dedup.append((k, d))
+            batch = dedup
+        else:
+            lo = np.arange(0, 2 * n_blocks // 3)
+            hi = np.arange(2 * n_blocks // 3, n_blocks)
+            batch = (gen_lanes(lo, LOOKUP) + gen_lanes(lo, UPDATE)
+                     + gen_lanes(hi, COND_UPDATE))
+        rng.shuffle(batch)
+        if not overflow and _split_order_sensitive(g, stf, batch):
+            continue
+        kinds = np.array([k for k, _ in batch], np.int32)
+        dls = np.array([d for _, d in batch], np.int32)
+        dps = nprng.randint(0, 10 ** 6, len(batch)).astype(np.int32)
+        olds = np.array([shadow.get(int(d), NIL) if rng.random() < .6
+                         else rng.randrange(10 ** 6) for d in dls],
+                        np.int32)
+        stf, out, ok = FB.translate_batch(
+            g, stf, jnp.array(kinds), jnp.array(dls), jnp.array(dps),
+            jnp.array(olds))
+        out, ok = np.asarray(out), np.asarray(ok)
+        # --- shadow-dict semantics: reads pre-batch, writes post-batch
+        for i, (k, d) in enumerate(batch):
+            want = shadow.get(d, NIL)
+            if out[i] != want:
+                return (f'batch {it} lane {i}: out {out[i]} != shadow '
+                        f'{want} (kind {k} dlpn {d})')
+            if k == COND_UPDATE and bool(ok[i]) != (want == olds[i]):
+                return f'batch {it} lane {i}: ok mismatch'
+        for i, (k, d) in enumerate(batch):
+            if k == UPDATE or (k == COND_UPDATE and ok[i]):
+                shadow[d] = int(dps[i])
+        # --- write-through coherence: cached blocks mirror backing
+        tags, valid, data, backing = (np.asarray(stf.tags),
+                                      np.asarray(stf.valid),
+                                      np.asarray(stf.data),
+                                      np.asarray(stf.backing))
+        for s, w in zip(*np.nonzero(valid)):
+            b = tags[s, w]
+            seg = backing[b * g.cmt_entries:(b + 1) * g.cmt_entries]
+            if (data[s, w] != seg).any():
+                return f'batch {it}: cache/backing divergence set {s} way {w}'
+        # --- unfused three-call split must be bit-identical
+        if not overflow:
+            ml, mu, mc = (kinds == LOOKUP), (kinds == UPDATE), \
+                (kinds == COND_UPDATE)
+            if ml.any():
+                stu, ou = FB.lookup_batch_unfused(g, stu, jnp.array(dls[ml]))
+                if (np.asarray(ou) != out[ml]).any():
+                    return f'batch {it}: lookup out fused != unfused'
+            if mu.any():
+                stu = FB.update_batch_unfused(g, stu, jnp.array(dls[mu]),
+                                              jnp.array(dps[mu]))
+            if mc.any():
+                stu, oku = FB.cond_update_batch_unfused(
+                    g, stu, jnp.array(dls[mc]), jnp.array(dps[mc]),
+                    jnp.array(olds[mc]))
+                if (np.asarray(oku) != ok[mc]).any():
+                    return f'batch {it}: cond ok fused != unfused'
+            for f, xf, xu in zip(stf._fields, stf, stu):
+                if (np.asarray(xf) != np.asarray(xu)).any():
+                    return f'batch {it}: state field {f} fused != unfused'
+        lanes_done += len(batch)
+    return f'OK:{lanes_done}'
+
+
 if __name__ == '__main__':
     import sys
     sys.path.insert(0, 'src')
@@ -120,3 +292,7 @@ if __name__ == '__main__':
         print(seed, lockstep(seed))
     print('tiny-mshr', lockstep(7, geom_kw=dict(mshr_cap=2, ctp_mshr_cap=2)))
     print('1-way    ', lockstep(8, geom_kw=dict(cmt_ways=1, ctp_ways=1)))
+    for seed in range(3):
+        print('batch', seed, batch_lockstep(seed))
+        print('batch-ovf', seed, batch_lockstep(seed, overflow=True))
+    print('batch-1way', batch_lockstep(9, geom_kw=dict(cmt_ways=1)))

@@ -134,8 +134,9 @@ def test_compressed_psum_error_feedback():
     def body(gg, ee):
         return compressed_psum(gg, "pod", ee)
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                       out_specs=(P(None), P("pod")), check_vma=False)
+    from repro.parallel.sharding import shard_map
+    fn = shard_map(body, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                   out_specs=(P(None), P("pod")), check_vma=False)
     err = jnp.zeros((4, 256))
     # shard_map with in_specs P('pod') splits axis 0: each shard [1,256]
     total, err2 = fn(g, err)
@@ -182,7 +183,8 @@ def test_sequence_parallel_paged_decode_combine():
         ls = jax.lax.all_gather(l, "data")
         return ref.combine_partial_attention(outs, ms, ls)
 
-    fn = jax.shard_map(
+    from repro.parallel.sharding import shard_map
+    fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(None), P(None), P(None), P(None, "data"), P(None)),
         out_specs=P(None), check_vma=False)

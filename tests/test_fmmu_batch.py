@@ -1,14 +1,20 @@
 """Batched (vectorized) FMMU engine: dict semantics, MSHR-merge dedup,
-CondUpdate races, and hypothesis property tests."""
+CondUpdate races, property tests, and the fused translate pipeline
+(single-probe invariant, fused-vs-unfused bit-identity, mixed-op edge
+cases)."""
+import functools
 import random
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
+from fmmu_lockstep import batch_lockstep
 from repro.core.fmmu import batch as B
-from repro.core.fmmu.types import NIL, small_geometry
+from repro.core.fmmu.types import (COND_UPDATE, LOOKUP, NIL, UPDATE,
+                                   small_geometry)
 
 
 @pytest.fixture(scope="module")
@@ -105,3 +111,138 @@ def test_batch_property(ops):
             stt, out = fns["lookup"](stt, arr)
             for d, o in zip(dlpns, np.asarray(out)):
                 assert o == shadow.get(d, NIL)
+
+
+# ======================================================================
+# Fused translate pipeline
+# ======================================================================
+def _iter_jaxprs(jaxpr):
+    yield jaxpr
+    for eq in jaxpr.eqns:
+        for v in eq.params.values():
+            vs = v if isinstance(v, (tuple, list)) else (v,)
+            for x in vs:
+                sub = getattr(x, "jaxpr", x)
+                if hasattr(sub, "eqns"):
+                    yield from _iter_jaxprs(sub)
+
+
+def _count_sorts(closed_jaxpr):
+    return sum(1 for j in _iter_jaxprs(closed_jaxpr.jaxpr)
+               for eq in j.eqns if eq.primitive.name == "sort")
+
+
+def test_single_probe_single_insert_per_batch():
+    """The single-probe invariant: every batch entry point traces exactly
+    ONE CMT probe and ONE insert pass (one sort) — in particular the
+    CondUpdate/GC path, which used to probe twice and insert twice."""
+    g = small_geometry()
+    stt = B.init_batch_state(g)
+    dl = jnp.arange(8, dtype=jnp.int32)
+    dp = jnp.ones(8, jnp.int32)
+    old = jnp.zeros(8, jnp.int32)
+    mixed = jnp.array([0, 1, 2, 0, 1, 2, 0, 1], jnp.int32)
+    cases = [
+        (functools.partial(B.cond_update_batch, g), (stt, dl, dp, old)),
+        (functools.partial(B.lookup_batch, g), (stt, dl)),
+        (functools.partial(B.update_batch, g), (stt, dl, dp)),
+        (functools.partial(B.translate_batch, g), (stt, mixed, dl, dp, old)),
+    ]
+    for fn, args in cases:
+        p0, i0 = B.PROBE_TRACES[0], B.INSERT_TRACES[0]
+        jaxpr = jax.make_jaxpr(fn)(*args)
+        assert B.PROBE_TRACES[0] - p0 == 1, fn
+        assert B.INSERT_TRACES[0] - i0 == 1, fn
+        assert _count_sorts(jaxpr) == 1, fn
+    # contrast: the unfused GC path probes twice, inserts twice, and
+    # pays two full sorts per insert
+    p0, i0 = B.PROBE_TRACES[0], B.INSERT_TRACES[0]
+    jaxpr = jax.make_jaxpr(
+        functools.partial(B.cond_update_batch_unfused, g))(stt, dl, dp, old)
+    assert B.PROBE_TRACES[0] - p0 == 2
+    assert B.INSERT_TRACES[0] - i0 == 2
+    assert _count_sorts(jaxpr) == 4
+
+
+def test_translate_mixed_lockstep_vs_unfused_and_shadow():
+    """Mixed-op batches: fused path is bit-identical (full state pytree
+    + outputs) to the unfused three-call sequence, and both follow
+    dict semantics."""
+    for seed in range(2):
+        res = batch_lockstep(seed, n_batches=40)
+        assert res.startswith("OK"), res
+
+
+def test_translate_overflow_and_duplicate_blocks_lockstep():
+    """Unconstrained batches: duplicate blocks in one batch (MSHR
+    merge), >W distinct new blocks per set (no-allocate overflow),
+    duplicate read dlpns — dict semantics and write-through coherence
+    hold."""
+    for seed in range(2):
+        res = batch_lockstep(seed, n_batches=40, overflow=True)
+        assert res.startswith("OK"), res
+    res = batch_lockstep(11, n_batches=25, overflow=True,
+                         geom_kw=dict(cmt_sets=2, cmt_ways=1))
+    assert res.startswith("OK"), res
+
+
+def test_translate_duplicate_block_one_batch_single_fill(setup):
+    """All lanes of a mixed batch inside ONE cache block: exactly one
+    backing fill (MSHR merge across op kinds)."""
+    g, fns = setup
+    stt = B.init_batch_state(g)
+    base = jnp.arange(g.cmt_entries, dtype=jnp.int32)
+    stt = fns["update"](stt, base, base * 7)
+    stt = B.init_batch_state(g)._replace(backing=stt.backing)  # cold cache
+    e = g.cmt_entries
+    opc = jnp.array([LOOKUP, UPDATE, COND_UPDATE, LOOKUP][:e], jnp.int32)
+    dl = jnp.arange(len(opc), dtype=jnp.int32)          # one block
+    dp = jnp.full((len(opc),), 999, jnp.int32)
+    old = dl * 7                                        # cond lane matches
+    stt, out, ok = fns["translate"](stt, opc, dl, dp, old)
+    assert int(stt.stats[2]) == 1
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(dl) * 7)
+    assert bool(ok[2])
+    # write-allocate pulled the post-write contents (state is donated:
+    # snapshot the miss counter before handing stt to the next call)
+    miss_before = int(stt.stats[1])
+    stt2, out2 = fns["lookup"](stt, dl)
+    assert int(stt2.stats[1]) == miss_before            # all hits now
+    want = np.asarray(dl) * 7
+    want[1] = 999                                       # UPDATE lane
+    want[2] = 999                                       # applied COND lane
+    np.testing.assert_array_equal(np.asarray(out2), want)
+
+
+def test_translate_set_overflow_serves_uncached(setup):
+    """>W distinct blocks into one set in ONE mixed batch: surplus is
+    served from backing (values still correct), at most W fills land."""
+    g, _ = setup
+    g2 = small_geometry(cmt_sets=2, cmt_ways=2)
+    fns = B.make_jitted(g2)
+    stt = B.init_batch_state(g2)
+    e = g2.cmt_entries
+    # 5 distinct blocks, all congruent mod 2 -> same set
+    blocks = np.arange(0, 10, 2)
+    dl = jnp.asarray(blocks * e, jnp.int32)
+    dp = jnp.asarray(blocks * 100, jnp.int32)
+    stt = fns["update"](stt, dl, dp)                    # write-allocate
+    assert int(stt.stats[2]) <= g2.cmt_ways
+    stt, out = fns["lookup"](stt, dl)
+    np.testing.assert_array_equal(np.asarray(out), blocks * 100)
+
+
+def test_make_jitted_donation_chain(setup):
+    """Donated state: chained steady-state use (always rebinding the
+    returned state) stays correct through every entry point."""
+    g, fns = setup
+    stt = B.init_batch_state(g)
+    dl = jnp.arange(6, dtype=jnp.int32)
+    stt = fns["update"](stt, dl, dl + 50)
+    stt, out = fns["lookup"](stt, dl)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(dl) + 50)
+    stt, ok = fns["cond_update"](stt, dl, dl + 90, dl + 50)
+    assert np.asarray(ok).all()
+    opc = jnp.zeros(6, jnp.int32)
+    stt, out, _ = fns["translate"](stt, opc, dl, opc, opc)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(dl) + 90)

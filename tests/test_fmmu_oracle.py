@@ -5,7 +5,7 @@ persist completely through flush_all."""
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.fmmu.oracle import FMMUOracle
 from repro.core.fmmu.types import (COND_UPDATE, LOOKUP, NIL, Request,

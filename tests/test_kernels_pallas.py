@@ -162,7 +162,7 @@ def test_fmmu_lookup_vs_ref(n_sets, n_ways, e, bq):
     valid = jax.random.bernoulli(jax.random.fold_in(k, 2), 0.7,
                                  (n_sets, n_ways))
     data = jax.random.randint(jax.random.fold_in(k, 3),
-                              (n_sets, n_ways, e), 0, 10 ** 6)
+                              (n_sets, n_ways, e), -1, 1 << 26)
     dlpns = jax.random.randint(jax.random.fold_in(k, 4), (bq,), -2,
                                64 * n_sets * e)
     got = fl.fmmu_lookup(tags, valid, data, dlpns, entries_per_block=e,
@@ -187,3 +187,44 @@ def test_ops_dispatch_pallas_interpret():
     a = ops.flash_attention(q, kk, v, impl="pallas_interpret")
     b = ops.flash_attention(q, kk, v, impl="blocked")
     np.testing.assert_allclose(a, b, atol=3e-5, rtol=3e-5)
+
+
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("n_sets,n_ways,e,bq,np_sz", [
+    (8, 2, 4, 64, 256), (16, 4, 8, 300, 5000), (4, 1, 4, 33, 100)])
+def test_fmmu_translate_vs_ref(n_sets, n_ways, e, bq, np_sz):
+    """Fused translate kernel (probe + backing fallback + ref touch)
+    matches the reference lowering bit-for-bit, including the streamed
+    backing gather crossing chunk boundaries and the [S,W] ref output."""
+    from repro.kernels import fmmu_translate as ft
+    k = jax.random.key(11)
+    tags = jax.random.randint(jax.random.fold_in(k, 1),
+                              (n_sets, n_ways), 0, 64)
+    tags = tags * n_sets + jnp.arange(n_sets)[:, None]
+    valid = jax.random.bernoulli(jax.random.fold_in(k, 2), 0.7,
+                                 (n_sets, n_ways))
+    refb = jax.random.bernoulli(jax.random.fold_in(k, 6), 0.3,
+                                (n_sets, n_ways))
+    # value range deliberately crosses 2^24: host-tier block ids are
+    # tagged at 1<<24 and above, so value gathers must stay bit-exact
+    # past f32's exact-integer range
+    data = jax.random.randint(jax.random.fold_in(k, 3),
+                              (n_sets, n_ways, e), -1, 1 << 26)
+    backing = jax.random.randint(jax.random.fold_in(k, 5), (np_sz,),
+                                 -1, 1 << 26)
+    # upper range deliberately exceeds NP: out-of-contract dlpns must
+    # clip to backing[NP-1] identically on every impl path
+    dlpns = jax.random.randint(jax.random.fold_in(k, 4), (bq,), -2,
+                               np_sz + 3)
+    touch = jax.random.bernoulli(jax.random.fold_in(k, 8), 0.6, (bq,))
+    got = ft.fmmu_translate(tags, valid, refb, data, backing, dlpns,
+                            touch, entries_per_block=e, block_size=32,
+                            backing_chunk=96, interpret=True)
+    want = ref.fmmu_translate_ref(tags, valid, refb, data, backing,
+                                  dlpns, touch, entries_per_block=e)
+    np.testing.assert_array_equal(got[0], want[0])  # hit
+    np.testing.assert_array_equal(got[1], want[1])  # out dppn
+    np.testing.assert_array_equal(got[2], want[2])  # set
+    np.testing.assert_array_equal(np.where(got[0], got[3], 0),
+                                  np.where(want[0], want[3], 0))
+    np.testing.assert_array_equal(got[4], want[4])  # ref bits
