@@ -13,7 +13,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (fig2_perf_model, fig10_ftl_exec, fig11_synthetic,
-                            fig13_traces, fig14_scalability, kernel_bench)
+                            fig13_traces, fig14_scalability, kernel_bench,
+                            serve_bench)
     quick = "--quick" in sys.argv[1:]
     mods = [
         ("fig10 (FTL exec times)", fig10_ftl_exec),
@@ -22,9 +23,11 @@ def main() -> None:
         ("fig13 (traces)", fig13_traces),
         ("fig14 (scalability)", fig14_scalability),
         ("kernels", kernel_bench),
+        ("serve (decode throughput)", serve_bench),
     ]
     if quick:
-        mods = [("kernels", kernel_bench)]
+        mods = [("kernels", kernel_bench),
+                ("serve (decode throughput)", serve_bench)]
     failures = 0
     print("name,us_per_call,derived")
     for name, mod in mods:

@@ -166,6 +166,7 @@ def translate_batch(g: FMMUGeometry, st: BatchFMMUState, opcodes, dlpns,
                     dppns, old_dppns, impl=None
                     ) -> Tuple[BatchFMMUState, jnp.ndarray, jnp.ndarray]:
     """Fused mixed-op translate: ONE CMT probe, ONE insert pass.
+    Thin wrapper over _translate_core (drops the commit mask).
 
     opcodes [Bq] in {LOOKUP, UPDATE, COND_UPDATE}; dlpns [Bq]
     (-1 = inactive lane); dppns [Bq] new mapping for write lanes;
@@ -177,6 +178,16 @@ def translate_batch(g: FMMUGeometry, st: BatchFMMUState, opcodes, dlpns,
       * ok:  for COND_UPDATE lanes, whether the guarded write applied
         (mapping still equalled old_dppn); `active` for other lanes.
     """
+    st, out, ok, _ = _translate_core(g, st, opcodes, dlpns, dppns,
+                                     old_dppns, impl=impl)
+    return st, out, ok
+
+
+def _translate_core(g: FMMUGeometry, st: BatchFMMUState, opcodes, dlpns,
+                    dppns, old_dppns, impl=None):
+    """translate_batch body; additionally returns the commit mask
+    `write` (lanes whose dppn actually entered the map) so wrappers
+    like translate_serving share ONE definition of what committed."""
     PROBE_TRACES[0] += 1
     active = dlpns >= 0
     is_l = opcodes == LOOKUP
@@ -209,7 +220,44 @@ def translate_batch(g: FMMUGeometry, st: BatchFMMUState, opcodes, dlpns,
     miss_bids = jnp.where(active & ~hit, dlpns // g.cmt_entries, BIG)
     prio = jnp.where(is_l, 0, jnp.where(is_u, 1, 2)).astype(I)
     st, _ = _insert_blocks(g, st, miss_bids, prio)
-    return st, jnp.where(active, cur, NIL), ok
+    return st, jnp.where(active, cur, NIL), ok, write
+
+
+# ------------------------------------------------------ serving wrapper
+class ServingMapState(NamedTuple):
+    """FMMU state + the device-resident serving block table.
+
+    ``table`` [n_tvpns * entries_per_tp] holds the *current* dlpn->dppn
+    mapping (NIL when unmapped) and is maintained incrementally by
+    ``translate_serving`` inside the same fused jitted call that
+    commits each map write — coherent with the map by construction, so
+    serving-layer readers never trigger a full-map retranslation
+    (DESIGN.md "Device-resident incremental block table")."""
+    fmmu: BatchFMMUState
+    table: jnp.ndarray
+
+
+def init_serving_state(g: FMMUGeometry) -> ServingMapState:
+    return ServingMapState(
+        fmmu=init_batch_state(g),
+        table=jnp.full((g.n_tvpns * g.entries_per_tp,), NIL, I))
+
+
+def translate_serving(g: FMMUGeometry, ms: ServingMapState, opcodes,
+                      dlpns, dppns, old_dppns, impl=None
+                      ) -> Tuple[ServingMapState, jnp.ndarray, jnp.ndarray]:
+    """``translate_batch`` + incremental block-table maintenance.
+
+    Single-probe invariant preserved (the table scatter adds no probe
+    and no sort). Exactly the lanes whose write committed to the map
+    (the core's own `write` mask: UPDATE, and COND_UPDATE whose
+    old_dppn guard passed) scatter their new dppn into ``ms.table``;
+    all other lanes leave it untouched."""
+    st, out, ok, write = _translate_core(g, ms.fmmu, opcodes, dlpns,
+                                         dppns, old_dppns, impl=impl)
+    safe = jnp.where(write, dlpns, ms.table.shape[0])
+    table = ms.table.at[safe].set(dppns.astype(I), mode="drop")
+    return ServingMapState(st, table), out, ok
 
 
 # ------------------------------------------------------------ wrappers
@@ -261,6 +309,7 @@ def make_jitted(g: FMMUGeometry):
         "update": j(functools.partial(update_batch, g)),
         "cond_update": j(functools.partial(cond_update_batch, g)),
         "translate": j(functools.partial(translate_batch, g)),
+        "serve": j(functools.partial(translate_serving, g)),
     }
 
 

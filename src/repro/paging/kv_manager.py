@@ -9,11 +9,22 @@ the paper's GC path does (a relocation only commits if the mapping still
 points at the old block).
 
 Every map operation funnels through ONE fused entry point
-(``_xlate`` -> ``translate_batch``): a single CMT probe and a single
-insert pass per call, mirroring the paper's arbiter that multiplexes
-all request sources through one shared pipeline. All jitted closures
-donate the FMMU state pytree, so steady-state serving performs zero
-state copies.
+(``_xlate`` -> ``translate_serving`` -> ``translate_batch``): a single
+CMT probe and a single insert pass per call, mirroring the paper's
+arbiter that multiplexes all request sources through one shared
+pipeline. All jitted closures donate the FMMU state pytree, so
+steady-state serving performs zero state copies.
+
+The block table is a **device-resident member of the state pytree**,
+maintained incrementally by the same fused call that commits each map
+write (DESIGN.md "Device-resident incremental block table"):
+``block_tables()`` is a zero-cost accessor — no translation, no state
+mutation — and steady-state decode performs zero full-map
+retranslations. The from-scratch path survives as
+``retranslate_tables()`` (test oracle / legacy benchmark baseline
+only). NOTE: because the state pytree is donated, arrays returned by
+``block_tables()`` are invalidated by the next map op — re-fetch
+instead of holding them across ``new_seq``/``extend``/``free``/swaps.
 
 Data movement between tiers operates on the pool tensors via jitted
 gather/scatter (device<->host offload copies on real hardware).
@@ -30,6 +41,13 @@ import numpy as np
 from repro.core.fmmu import batch as fb
 from repro.core.fmmu.types import (COND_UPDATE, FMMUGeometry, NIL, UPDATE)
 from repro.paging.pool import HOST_BASE, BlockPool, OutOfBlocks
+
+# Host-level call counters (the PROBE_TRACES pattern, at op granularity):
+# bumped once per *invocation*, so tests can assert that a steady-state
+# decode step performs zero full-map retranslations and at most one
+# fused map call.
+XLATE_CALLS = [0]
+FULL_TABLE_CALLS = [0]
 
 
 def _move_rows(pool, src, dst, axis: int):
@@ -63,12 +81,15 @@ class KVPageManager:
         self.max_pages = max_pages
         self.geom = _geometry(n_slots, max_pages)
         self.fns = fb.make_jitted(self.geom)
-        self.state = fb.init_batch_state(self.geom)
+        self.state = fb.init_serving_state(self.geom)
         self.pool = BlockPool(n_device_blocks, n_host_blocks)
         self.seq_pages: Dict[int, List[int]] = {}   # slot -> block ids
-        self._table_fn = jax.jit(functools.partial(self._tables, self.geom),
-                                 static_argnums=(1, 2),
-                                 donate_argnums=(0,))
+        # host-tier page count per slot, maintained by the swap ops so
+        # the per-step residency predicate is O(1), not a page-list scan
+        self._host_pages: Dict[int, int] = {}
+        self._retrans_fn = jax.jit(
+            functools.partial(self._retranslate, self.geom),
+            static_argnums=(1, 2), donate_argnums=(0,))
 
     # ----------------------------------------------------------- helpers
     def _dlpns(self, slot: int, pages: range) -> np.ndarray:
@@ -76,24 +97,26 @@ class KVPageManager:
                           np.int32)
 
     def _xlate(self, kind: int, dlpns, dppns, olds=None):
-        """Single fused map entry: one translate_batch call (one probe,
-        one insert) services the whole op batch; state is donated and
-        rebound."""
-        dl = jnp.asarray(dlpns, jnp.int32)
-        opc = jnp.full(dl.shape, kind, jnp.int32)
-        dp = jnp.asarray(dppns, jnp.int32)
-        od = (jnp.zeros(dl.shape, jnp.int32) if olds is None
-              else jnp.asarray(olds, jnp.int32))
-        self.state, out, ok = self.fns["translate"](self.state, opc, dl,
-                                                    dp, od)
+        """Single fused map entry: one translate_serving call (one
+        probe, one insert, incremental table scatter) services the
+        whole op batch; state is donated and rebound."""
+        XLATE_CALLS[0] += 1
+        # numpy in, jit transfers: cheaper than explicit device_puts
+        dl = np.asarray(dlpns, np.int32)
+        opc = np.full(dl.shape, kind, np.int32)
+        dp = np.asarray(dppns, np.int32)
+        od = (np.zeros(dl.shape, np.int32) if olds is None
+              else np.asarray(olds, np.int32))
+        self.state, out, ok = self.fns["serve"](self.state, opc, dl,
+                                                dp, od)
         return out, ok
 
     @staticmethod
-    def _tables(geom, state, n_slots, max_pages):
+    def _retranslate(geom, fmmu, n_slots, max_pages):
         """Translate every (slot, page) through the FMMU -> block table."""
         dl = jnp.arange(n_slots * max_pages, dtype=jnp.int32)
-        state, out = fb.lookup_batch(geom, state, dl)
-        return state, out.reshape(n_slots, max_pages)
+        fmmu, out = fb.lookup_batch(geom, fmmu, dl)
+        return fmmu, out.reshape(n_slots, max_pages)
 
     # ----------------------------------------------------------- API
     def new_seq(self, slot: int, n_pages: int) -> List[int]:
@@ -105,24 +128,69 @@ class KVPageManager:
         return blocks
 
     def extend_seq(self, slot: int, n_new: int) -> List[int]:
-        cur = self.seq_pages[slot]
-        blocks = self.pool.alloc(n_new)
-        dl = self._dlpns(slot, range(len(cur), len(cur) + n_new))
+        return self.extend_seqs({slot: n_new}).get(slot, [])
+
+    def extend_seqs(self, wants: Dict[int, int]) -> Dict[int, List[int]]:
+        """Grow several sequences at once: ONE pool allocation and ONE
+        fused map call for the whole step (the decode hot path). Raises
+        OutOfBlocks before any state changes if the pool can't cover
+        the full batch."""
+        wants = {s: n for s, n in wants.items() if n > 0}
+        if not wants:
+            return {}
+        dl: List[int] = []
+        for slot, n in wants.items():           # validate BEFORE alloc:
+            have = len(self.seq_pages[slot])    # KeyError leaks nothing
+            dl.extend(slot * self.max_pages + p
+                      for p in range(have, have + n))
+        blocks = self.pool.alloc(len(dl))
+        got: Dict[int, List[int]] = {}
+        i = 0
+        for slot, n in wants.items():
+            got[slot] = blocks[i:i + n]
+            i += n
+            self.seq_pages[slot].extend(got[slot])
         self._xlate(UPDATE, dl, blocks)
-        cur.extend(blocks)
-        return blocks
+        return got
 
     def free_seq(self, slot: int):
         blocks = self.seq_pages.pop(slot)
+        self._host_pages.pop(slot, None)
         dl = self._dlpns(slot, range(len(blocks)))
         self._xlate(UPDATE, dl, np.full(len(blocks), NIL, np.int32))
         self.pool.free(blocks)
 
+    def is_resident(self, slot: int) -> bool:
+        """True when no page of `slot` lives in the host tier. One
+        source of truth for the tier predicate: BlockPool.is_host
+        (counted into _host_pages by the swap ops; alloc paths only
+        ever add device blocks)."""
+        return self._host_pages.get(slot, 0) == 0
+
+    def n_device_pages(self, slot: int) -> int:
+        """Device-tier pages held by `slot` (preemption victims must
+        have at least one, or swapping them out moves nothing)."""
+        return (len(self.seq_pages.get(slot, ()))
+                - self._host_pages.get(slot, 0))
+
     def block_tables(self) -> jnp.ndarray:
-        """[n_slots, max_pages] int32; NIL for unmapped; host-tier blocks
-        appear tagged (callers must swap in before attention)."""
-        self.state, tables = self._table_fn(self.state, self.n_slots,
-                                            self.max_pages)
+        """[n_slots, max_pages] int32 device view of the incremental
+        table — zero-cost: no translation, no state mutation. NIL for
+        unmapped; host-tier blocks appear tagged (callers must swap in
+        before attention). The view is invalidated by the next map op
+        (donated state); re-fetch, don't hold."""
+        n = self.n_slots * self.max_pages    # table is geometry-padded
+        return self.state.table[:n].reshape(self.n_slots, self.max_pages)
+
+    def retranslate_tables(self) -> jnp.ndarray:
+        """From-scratch full-map retranslation (the pre-incremental
+        path): every DLPN through ``lookup_batch``. Kept ONLY as the
+        churn-equivalence test oracle and the legacy serving-bench
+        baseline; the serving hot path must use ``block_tables()``."""
+        FULL_TABLE_CALLS[0] += 1
+        fmmu, tables = self._retrans_fn(self.state.fmmu, self.n_slots,
+                                        self.max_pages)
+        self.state = self.state._replace(fmmu=fmmu)
         return tables
 
     # ----------------------------------------------------------- swapping
@@ -152,6 +220,8 @@ class KVPageManager:
         self.pool.free(dev)
         self.seq_pages[slot] = [
             host[dev.index(b)] if b in dev else b for b in blocks]
+        self._host_pages[slot] = sum(
+            BlockPool.is_host(b) for b in self.seq_pages[slot])
         self.pool.stats.swaps_out += len(dev)
         return pools, len(dev)
 
@@ -174,10 +244,12 @@ class KVPageManager:
         self.pool.free(hostb)
         self.seq_pages[slot] = [
             dev[hostb.index(b)] if b in hostb else b for b in blocks]
+        self._host_pages[slot] = sum(
+            BlockPool.is_host(b) for b in self.seq_pages[slot])
         self.pool.stats.swaps_in += len(hostb)
         return pools, len(hostb)
 
     def hit_stats(self) -> dict:
-        s = np.asarray(self.state.stats)
+        s = np.asarray(self.state.fmmu.stats)
         return {"hits": int(s[0]), "misses": int(s[1]),
                 "fills": int(s[2]), "updates": int(s[3])}

@@ -3,15 +3,23 @@ FMMU page manager owning logical->physical KV translation.
 
 Prefill writes each request's KV into pool blocks named by the FMMU
 block table; decode steps run the whole slot batch through
-Model.decode_step with tables rebuilt by the FMMU on every admission /
-relocation (cheap: one batched translate). Pool exhaustion preempts the
-longest victim sequence to the host tier (swap_out, CondUpdate-guarded)
-— the serving analogue of the paper's GC path.
+Model.decode_step against the **device-resident incremental block
+table** (a member of the FMMU state pytree, kept coherent by the same
+fused call that commits each map write — see DESIGN.md). The decode
+hot loop performs zero full-map retranslations and at most one fused
+map call per step: page growth for all slots crossing a page boundary
+is batched into ONE allocation + ONE ``_xlate``, and paused/invalid
+slot masking happens inside the decode jit (no host table roundtrip;
+the only per-step host sync is the next-token transfer). Pool
+exhaustion preempts the longest victim sequence to the host tier
+(swap_out, CondUpdate-guarded) — the serving analogue of the paper's
+GC path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,15 +66,21 @@ class ServeEngine:
             self.cfg, self.rt, n_slots, self.max_pages,
             n_dev + n_host_blocks + 1, self.rt.compute_dtype,
             src_len=src_len)
-        self.ctx_lens = np.zeros(n_slots, np.int64)
+        # int32 end-to-end: the decode jit consumes these every step and
+        # an int64 numpy array would pay a device-side convert per call
+        self.ctx_lens = np.zeros(n_slots, np.int32)
         self.src_cap = src_len
-        self.src_lens = np.zeros(n_slots, np.int64)
+        self.src_lens = np.zeros(n_slots, np.int32)
         self.active: Dict[int, Request] = {}
         self.eos_id = eos_id
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = deque()
         self._rid = 0
-        self._decode = jax.jit(self._decode_fn)
-        self._prefill = jax.jit(self._prefill_fn)
+        # caches (arg 2) are DONATED: the KV pool is updated in place
+        # instead of functionally copied every step. Callers always
+        # rebind self.caches from the return (same contract as the
+        # donated FMMU state pytree).
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(2,))
+        self._prefill = jax.jit(self._prefill_fn, donate_argnums=(2,))
         self.metrics = {"prefills": 0, "decode_steps": 0, "preemptions": 0,
                         "generated": 0}
 
@@ -99,50 +113,66 @@ class ServeEngine:
         return [s for s in range(self.n_slots) if s not in used]
 
     def _admit(self):
+        if not self.queue:
+            return
         free = self._free_slots()
         while self.queue and free:
             req = self.queue[0]
             slot = free[0]
+            # on-demand allocation: admission reserves only the prompt
+            # (+prefix) pages that prefill actually writes; decode grows
+            # the mapping page-by-page (batched, one fused map call per
+            # step) instead of parking max_new worth of blocks up front
             n_prefix = (req.prefix_emb.shape[0]
                         if req.prefix_emb is not None else 0)
-            n_pages = -(-(len(req.tokens) + n_prefix + req.max_new)
-                        // self.page)
-            n_pages = min(n_pages, self.max_pages)
+            n_pages = -(-(len(req.tokens) + n_prefix) // self.page)
+            n_pages = max(1, min(n_pages, self.max_pages))
             try:
                 self.kvm.new_seq(slot, n_pages)
             except OutOfBlocks:
                 if not self._preempt(exclude=slot):
                     return
                 continue
-            self.queue.pop(0)
+            self.queue.popleft()
             free.pop(0)
             req.slot = slot
             self.active[req.rid] = req
             self._do_prefill(req)
 
     def _preempt(self, exclude: int) -> bool:
-        """Swap the longest active sequence out to the host tier."""
-        victims = [r for r in self.active.values() if r.slot != exclude]
-        if not victims or self.kvm.pool.n_host == 0:
+        """Swap the longest active sequence that still holds device
+        pages out to the host tier (an already-swapped victim would
+        move nothing). False when no such victim exists or the host
+        tier itself cannot take the blocks."""
+        if self.kvm.pool.n_host == 0:
             return False
-        victim = max(victims, key=lambda r: self.ctx_lens[r.slot])
-        pools = [self.caches["pool_k"], self.caches["pool_v"]]
-        pools, moved = self.kvm.swap_out(victim.slot, pools, block_axis=2)
-        self.caches["pool_k"], self.caches["pool_v"] = pools
-        self.metrics["preemptions"] += 1
-        return moved > 0
-
-    def _is_resident(self, slot: int) -> bool:
-        return not any(b >= (1 << 24)
-                       for b in self.kvm.seq_pages.get(slot, []))
+        victims = [r for r in self.active.values()
+                   if r.slot != exclude
+                   and self.kvm.n_device_pages(r.slot) > 0]
+        for victim in sorted(victims, key=lambda r: self.ctx_lens[r.slot],
+                             reverse=True):
+            pools = [self.caches["pool_k"], self.caches["pool_v"]]
+            try:
+                pools, moved = self.kvm.swap_out(victim.slot, pools,
+                                                 block_axis=2)
+            except OutOfBlocks:
+                continue    # doesn't fit the host tier; try a smaller one
+            self.caches["pool_k"], self.caches["pool_v"] = pools
+            if moved:
+                self.metrics["preemptions"] += 1
+                return True
+        return False
 
     def _ensure_resident(self):
         """Swap in any host-tier pages of active sequences (before decode).
         Sequences that cannot come back yet PAUSE (they are excluded from
-        the decode batch) until device blocks free up."""
+        the decode batch) until device blocks free up. Tier predicate:
+        KVPageManager.is_resident (BlockPool.is_host underneath)."""
+        if self.kvm.pool.n_host == 0:
+            return    # no host tier: nothing can ever be swapped out
         for r in sorted(self.active.values(),
                         key=lambda r: len(self.kvm.seq_pages.get(r.slot, []))):
-            if not self._is_resident(r.slot):
+            if not self.kvm.is_resident(r.slot):
                 try:
                     pools = [self.caches["pool_k"], self.caches["pool_v"]]
                     pools, _ = self.kvm.swap_in(r.slot, pools,
@@ -166,8 +196,7 @@ class ServeEngine:
         if req.src_emb is not None:
             batch["src_emb"] = req.src_emb[None]
             batch["src_valid"] = jnp.ones(req.src_emb.shape[:1], jnp.int32)[None]
-        tables = np.asarray(self.kvm.block_tables())
-        row = jnp.asarray(tables[req.slot], jnp.int32)
+        row = self.kvm.block_tables()[req.slot]   # device slice, no sync
         logits, self.caches = self._prefill(self.params, batch, self.caches,
                                             row, req.slot)
         n_ctx = len(req.tokens) + (req.prefix_emb.shape[0]
@@ -181,55 +210,99 @@ class ServeEngine:
         self.metrics["generated"] += 1
 
     # ------------------------------------------------------------- decode
-    def _decode_fn(self, params, tokens, caches, ctx_lens, tables,
-                   src_valid=None):
+    def _decode_fn(self, params, tokens, caches, ctx_lens, table,
+                   resident_mask, src_valid=None):
+        """Single-fused serving map step: the flat device-resident table
+        is reshaped, paused/inactive slots are masked to the scratch
+        block (their garbage KV write lands there) with zeroed ctx, and
+        out-of-range entries (NIL / host-tier tags) are clamped — all
+        inside the decode jit, so no table bytes cross the host."""
+        n = self.n_slots * self.max_pages    # table is geometry-padded
+        tables = table[:n].reshape(self.n_slots, self.max_pages)
+        tables = jnp.where(resident_mask[:, None], tables,
+                           self.scratch_block)
+        tables = jnp.where((tables < 0) | (tables >= self.scratch_block),
+                           self.scratch_block, tables)
+        ctx = jnp.where(resident_mask, ctx_lens, 0)
         logits, caches = self.m.decode_step(
-            params, tokens, caches, ctx_lens=ctx_lens, block_table=tables,
+            params, tokens, caches, ctx_lens=ctx, block_table=tables,
             src_valid=src_valid)
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
 
-    def _decode_step(self, done: Dict[int, List[int]]):
-        self._ensure_resident()
-        residents = [r for r in self.active.values()
-                     if self._is_resident(r.slot)]
-        if not residents:
-            return
-        resident_slots = {r.slot for r in residents}
-        tokens = np.zeros(self.n_slots, np.int32)
-        for r in residents:
-            tokens[r.slot] = r.out[-1] if r.out else r.tokens[-1]
-        tables = self.kvm.block_tables()
-        # grow pages for sequences crossing a page boundary
+    def _grow_pages(self, residents) -> List[Request]:
+        """Allocate pages for every resident crossing a page boundary:
+        one batched allocation + one fused map call on the fast path.
+        Returns the residents that may decode this step: preemption on
+        the OutOfBlocks slow path may swap some out mid-step, and a
+        slot whose growth failed outright PAUSES (decoding it with the
+        new page unmapped would silently write its KV into the shared
+        scratch block); it retries every step until blocks free up."""
+        wants: Dict[int, int] = {}
         for r in residents:
             need = -(-int(self.ctx_lens[r.slot] + 1) // self.page)
             have = len(self.kvm.seq_pages[r.slot])
             if need > have and have < self.max_pages:
+                wants[r.slot] = need - have
+        if not wants:
+            return residents
+        try:
+            self.kvm.extend_seqs(wants)
+            return residents
+        except OutOfBlocks:
+            pass
+        # slow path: grow slot-by-slot, preempting victims to host
+        failed = set()
+        for slot, n in wants.items():
+            if not self.kvm.is_resident(slot):
+                continue    # became a preemption victim this step
+            try:
+                self.kvm.extend_seq(slot, n)
+            except OutOfBlocks:
+                if not self._preempt(exclude=slot):
+                    failed.add(slot)
+                    continue
                 try:
-                    self.kvm.extend_seq(r.slot, need - have)
+                    self.kvm.extend_seq(slot, n)
                 except OutOfBlocks:
-                    if self._preempt(exclude=r.slot):
-                        self.kvm.extend_seq(r.slot, need - have)
-                tables = self.kvm.block_tables()
+                    failed.add(slot)
+        if len(failed) == len(residents):
+            # nothing extended, nothing swapped: the same state recurs
+            # next step, so pausing would livelock instead of degrade
+            raise OutOfBlocks(
+                f"pool exhausted: all {len(residents)} resident "
+                "sequences need pages and none can be grown or "
+                "preempted (no host tier / no victim)")
+        return [r for r in residents
+                if r.slot not in failed and self.kvm.is_resident(r.slot)]
+
+    def _decode_step(self, done: Dict[int, List[int]]):
+        self._ensure_resident()
+        residents = [r for r in self.active.values()
+                     if self.kvm.is_resident(r.slot)]
+        if not residents:
+            return
+        residents = self._grow_pages(residents)
+        if not residents:
+            return
+        tokens = np.zeros(self.n_slots, np.int32)
+        resident_mask = np.zeros(self.n_slots, bool)
+        for r in residents:
+            tokens[r.slot] = r.out[-1] if r.out else r.tokens[-1]
+            resident_mask[r.slot] = True
         src_valid = None
         if self.cfg.n_enc_layers:
             src_valid = (np.arange(self.src_cap)[None, :]
                          < self.src_lens[:, None]).astype(np.int32)
-            src_valid = jnp.asarray(src_valid)
-        # paused / inactive slots: zero ctx + scratch table rows (their
-        # garbage KV write lands in the scratch block)
-        tables = np.array(tables)
-        step_ctx = np.asarray(self.ctx_lens, np.int64).copy()
-        for slot in range(self.n_slots):
-            if slot not in resident_slots:
-                tables[slot, :] = self.scratch_block
-                step_ctx[slot] = 0
-        tables = np.where((tables < 0) | (tables >= self.scratch_block),
-                          self.scratch_block, tables)
+        # numpy args go straight to the jit (its shard_args transfer is
+        # cheaper than an explicit device_put per array); the only
+        # per-step host sync is the next_tok readback
         next_tok, self.caches = self._decode(
-            self.params, jnp.asarray(tokens), self.caches,
-            jnp.asarray(step_ctx, jnp.int32), jnp.asarray(tables),
-            src_valid)
-        next_tok = np.asarray(next_tok)
+            self.params, tokens, self.caches, self.ctx_lens,
+            self.kvm.state.table, resident_mask, src_valid)
+        self._finish_step(residents, np.asarray(next_tok), done)
+
+    def _finish_step(self, residents, next_tok: np.ndarray,
+                     done: Dict[int, List[int]]):
         self.metrics["decode_steps"] += 1
         for r in list(residents):
             self.ctx_lens[r.slot] += 1

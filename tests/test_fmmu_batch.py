@@ -142,11 +142,16 @@ def test_single_probe_single_insert_per_batch():
     dp = jnp.ones(8, jnp.int32)
     old = jnp.zeros(8, jnp.int32)
     mixed = jnp.array([0, 1, 2, 0, 1, 2, 0, 1], jnp.int32)
+    ms = B.init_serving_state(g)
     cases = [
         (functools.partial(B.cond_update_batch, g), (stt, dl, dp, old)),
         (functools.partial(B.lookup_batch, g), (stt, dl)),
         (functools.partial(B.update_batch, g), (stt, dl, dp)),
         (functools.partial(B.translate_batch, g), (stt, mixed, dl, dp, old)),
+        # the serving wrapper's incremental-table scatter must add no
+        # probe and no sort
+        (functools.partial(B.translate_serving, g),
+         (ms, mixed, dl, dp, old)),
     ]
     for fn, args in cases:
         p0, i0 = B.PROBE_TRACES[0], B.INSERT_TRACES[0]
@@ -230,6 +235,36 @@ def test_translate_set_overflow_serves_uncached(setup):
     assert int(stt.stats[2]) <= g2.cmt_ways
     stt, out = fns["lookup"](stt, dl)
     np.testing.assert_array_equal(np.asarray(out), blocks * 100)
+
+
+def test_serving_table_coherent_with_map(setup):
+    """ServingMapState.table is maintained by the same fused call that
+    commits each write: after any mixed-op churn it equals the mapping
+    a full lookup of every DLPN would return (shadow-dict oracle)."""
+    g, fns = setup
+    ms = B.init_serving_state(g)
+    n_pages = g.n_tvpns * g.entries_per_tp
+    rng = random.Random(3)
+    shadow = {}
+    for _ in range(60):
+        bq = 12
+        dlpns = rng.sample(range(n_pages), bq)
+        kinds = [rng.choice([LOOKUP, UPDATE, COND_UPDATE])
+                 for _ in range(bq)]
+        news = [rng.randrange(10 ** 6) for _ in range(bq)]
+        olds = [shadow.get(a, NIL) if rng.random() < 0.5
+                else rng.randrange(10 ** 6) for a in dlpns]
+        ms, _, ok = fns["serve"](ms, jnp.array(kinds), jnp.array(dlpns),
+                                 jnp.array(news), jnp.array(olds))
+        for a, k, n, o, applied in zip(dlpns, kinds, news, olds,
+                                       np.asarray(ok)):
+            if k == UPDATE or (k == COND_UPDATE and applied):
+                shadow[a] = n
+    table = np.asarray(ms.table)
+    want = np.full(n_pages, NIL, np.int32)
+    for a, v in shadow.items():
+        want[a] = v
+    np.testing.assert_array_equal(table, want)
 
 
 def test_make_jitted_donation_chain(setup):

@@ -1,9 +1,14 @@
 """KV page manager: allocation, translation tables, block reuse,
-swap data integrity (CondUpdate-guarded tier moves)."""
+swap data integrity (CondUpdate-guarded tier moves), and coherence of
+the device-resident incremental block table against the from-scratch
+retranslation oracle."""
+import random
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.paging import kv_manager as KM
 from repro.paging.kv_manager import KVPageManager
 from repro.paging.pool import HOST_BASE, BlockPool, OutOfBlocks
 
@@ -53,6 +58,100 @@ def test_swap_roundtrip_moves_data():
     # tables reflect the final placement
     t = np.asarray(kvm.block_tables())
     assert list(t[0, :3]) == new_blocks
+
+
+def test_block_tables_is_zero_cost_read():
+    """block_tables() must neither translate nor touch FMMU state: no
+    fused map call, no full retranslation, stats frozen."""
+    kvm = KVPageManager(n_slots=2, max_pages=4, n_device_blocks=8)
+    kvm.new_seq(0, 2)
+    x0, f0 = KM.XLATE_CALLS[0], KM.FULL_TABLE_CALLS[0]
+    stats0 = kvm.hit_stats()
+    for _ in range(3):
+        t = np.asarray(kvm.block_tables())
+    assert KM.XLATE_CALLS[0] == x0 and KM.FULL_TABLE_CALLS[0] == f0
+    assert kvm.hit_stats() == stats0
+    assert list(t[0, :2]) == kvm.seq_pages[0]
+
+
+def test_extend_seqs_batched_single_xlate():
+    kvm = KVPageManager(n_slots=4, max_pages=8, n_device_blocks=32)
+    for s in range(3):
+        kvm.new_seq(s, 2)
+    x0 = KM.XLATE_CALLS[0]
+    got = kvm.extend_seqs({0: 1, 1: 2, 2: 1})
+    assert KM.XLATE_CALLS[0] - x0 == 1
+    assert sorted(got) == [0, 1, 2] and len(got[1]) == 2
+    t = np.asarray(kvm.block_tables())
+    for s in range(3):
+        assert list(t[s, :len(kvm.seq_pages[s])]) == kvm.seq_pages[s]
+    # atomic on exhaustion: no partial growth
+    with pytest.raises(OutOfBlocks):
+        kvm.extend_seqs({0: 20, 1: 20})
+    assert len(kvm.seq_pages[0]) == 3 and len(kvm.seq_pages[1]) == 4
+    # zero-page requests are a no-op, not a KeyError
+    assert kvm.extend_seq(0, 0) == []
+    assert kvm.extend_seqs({0: 0, 1: 0}) == {}
+    # unknown slot rejected before any allocation or mapping leaks
+    free_before = kvm.pool.free_device
+    pages_before = {s: list(p) for s, p in kvm.seq_pages.items()}
+    with pytest.raises(KeyError):
+        kvm.extend_seqs({0: 1, 99: 1})
+    assert kvm.pool.free_device == free_before
+    assert {s: list(p) for s, p in kvm.seq_pages.items()} == pages_before
+    inc = np.asarray(kvm.block_tables())
+    np.testing.assert_array_equal(inc, np.asarray(kvm.retranslate_tables()))
+
+
+def test_churn_equivalence_incremental_vs_retranslation():
+    """ISSUE-2 property test: after a random interleaving of
+    new_seq/extend_seq(s)/free_seq/swap_out/swap_in, the incremental
+    device table must be bit-identical to a from-scratch full-map
+    retranslation (the old path, kept as the oracle)."""
+    rng = random.Random(7)
+    n_slots, max_pages = 4, 8
+    kvm = KVPageManager(n_slots, max_pages, n_device_blocks=20,
+                        n_host_blocks=12)
+    pool = jnp.arange((20 + 12 + 1) * 3.0).reshape(33, 3)
+    live = set()
+    for step in range(150):
+        ops = ["new"] if len(live) < n_slots else []
+        if live:
+            ops += ["extend", "extend_multi", "free", "swap_out",
+                    "swap_in"]
+        op = rng.choice(ops)
+        try:
+            if op == "new":
+                slot = rng.choice([s for s in range(n_slots)
+                                   if s not in live])
+                kvm.new_seq(slot, rng.randint(1, 3))
+                live.add(slot)
+            elif op == "extend":
+                slot = rng.choice(sorted(live))
+                room = max_pages - len(kvm.seq_pages[slot])
+                if room:
+                    kvm.extend_seq(slot, rng.randint(1, room))
+            elif op == "extend_multi":
+                wants = {s: 1 for s in live
+                         if len(kvm.seq_pages[s]) < max_pages}
+                kvm.extend_seqs(wants)
+            elif op == "free":
+                slot = rng.choice(sorted(live))
+                kvm.free_seq(slot)
+                live.discard(slot)
+            elif op == "swap_out":
+                [pool], _ = kvm.swap_out(rng.choice(sorted(live)), [pool])
+            else:
+                [pool], _ = kvm.swap_in(rng.choice(sorted(live)), [pool])
+        except OutOfBlocks:
+            pass
+        if step % 10 == 9:
+            inc = np.asarray(kvm.block_tables())
+            oracle = np.asarray(kvm.retranslate_tables())
+            np.testing.assert_array_equal(inc, oracle, f"step {step}")
+    inc = np.asarray(kvm.block_tables())
+    oracle = np.asarray(kvm.retranslate_tables())
+    np.testing.assert_array_equal(inc, oracle)
 
 
 def test_swap_block_axis():
