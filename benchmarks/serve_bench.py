@@ -1,16 +1,34 @@
 """Decode-throughput benchmark for the serving map path.
 
 Measures steady-state decode steps/sec of `ServeEngine` at
-n_slots=16, max_pages=64 (the ISSUE-2 reference point) and compares the
-device-resident incremental block table (the live path) against a
-legacy mode that rebuilds the full [n_slots, max_pages] table by
-re-translating every DLPN through the FMMU each step and masks it on
-host — the pre-PR behaviour, kept here as the in-run baseline because
-this box's 2-core timings are too noisy to compare across runs.
+n_slots=16, max_pages=64 (the ISSUE-2 reference point) across four
+modes:
+
+  * ``fused_macro``  — the live path: K-step fused decode macro-steps
+    (K=8, ONE donated jit runs attention + sampling + page-boundary
+    detection + device-side block allocation + map commit for K
+    tokens, one host dispatch and one device->host sync per K steps)
+    plus this PR's graph optimizations (live-page bucketing,
+    single-chunk paged attention);
+  * ``single_step``  — the live single-step path (same graph
+    optimizations, no macro fusion): isolates the macro-step
+    contribution;
+  * ``incremental``  — the PR-2 incremental baseline restored
+    faithfully (single-step, full-width tables, 8-page attention
+    chunks): the ISSUE-3 acceptance reference;
+  * ``rebuild_legacy`` — pre-PR-2: rebuilds the full table by
+    re-translating every DLPN each step and masks it on host.
+
+All modes run in-process because this box's 2-core timings are too
+noisy to compare across runs; per-window dispersion (median/min/IQR
+over ``--repeats`` consecutive windows) is recorded so the noise is
+visible in the artifact. In ``--quick`` (CI smoke) mode, speedup
+shortfalls against the targets and regressions against the committed
+BENCH_serve.json are REPORTED as warnings, not failures — the runner
+is too noisy for a hard gate.
 
 Emits CSV rows (shared benchmark format) and writes ``BENCH_serve.json``
 (repo root or $REPRO_BENCH_OUT) so CI can archive the perf trajectory.
-Medians over ``--repeats`` runs (default 5).
 """
 from __future__ import annotations
 
@@ -27,10 +45,14 @@ from benchmarks.common import SCALE, emit
 
 N_SLOTS = 16
 MAX_PAGES = 64
+MACRO_K = 8
 WARM_STEPS = 3
+# in-run speedup targets (ISSUE 3 acceptance: fused >= 1.5x incremental)
+TARGETS = {"fused_macro_vs_incremental": 1.5,
+           "incremental_vs_rebuild": 1.5}
 
 
-def _build_engine(legacy: bool):
+def _build_engine(mode: str):
     import dataclasses
 
     import jax
@@ -39,8 +61,12 @@ def _build_engine(legacy: bool):
     from repro.models import Runtime, build_model
     from repro.serving.engine import ServeEngine
 
+    # the PR-2-faithful baselines pin the pre-ISSUE-3 decode graph:
+    # 8-page attention chunks (no auto-widening) and full-width tables
+    pr2 = mode in ("incremental", "rebuild_legacy")
     rt = Runtime(compute_dtype=jnp.float32, param_dtype=jnp.float32,
-                 remat="none", page_size=8, capacity_factor=100.0)
+                 remat="none", page_size=8, capacity_factor=100.0,
+                 paged_chunk=8 if pr2 else None)
     # minimal model: this benchmark isolates the serving *map* path
     # (the paper's FTL-exec-time claim), so model compute is kept as
     # close to zero as the engine allows — with the full smoke config
@@ -53,8 +79,11 @@ def _build_engine(legacy: bool):
     m = build_model(cfg, rt)
     params = m.init(jax.random.key(0))
     max_ctx = MAX_PAGES * rt.page_size
-    eng = ServeEngine(m, params, n_slots=N_SLOTS, max_ctx=max_ctx)
-    if legacy:
+    eng = ServeEngine(m, params, n_slots=N_SLOTS, max_ctx=max_ctx,
+                      macro_k=MACRO_K if mode == "fused_macro" else 0)
+    if pr2:
+        eng.min_page_bucket = MAX_PAGES    # PR 2 had no page bucketing
+    if mode == "rebuild_legacy":
         _patch_legacy(eng)
     return eng
 
@@ -132,53 +161,144 @@ def _patch_legacy(eng):
     eng._legacy_decode = jax.jit(types.MethodType(_legacy_decode_fn, eng))
 
 
-def _run_decode(legacy: bool, n_steps: int, repeats: int) -> float:
-    """One serving run: fill all slots once, warm up, then time
-    `repeats` consecutive windows of n_steps decode steps. Context
-    grows slowly across windows (8 tokens/page), but both modes walk
-    the identical schedule, so windows are comparable and the median
-    is a stable quantity; no re-submission, so the queue stays empty."""
-    eng = _build_engine(legacy)
-    for i in range(N_SLOTS):
-        eng.submit(list(range(1 + i, 9 + i)), max_new=10 ** 9)
-    done = {}
-    eng.step(done)                       # admits + prefills + first step
-    for _ in range(WARM_STEPS):
-        eng.step(done)
-    sps = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        for _ in range(n_steps):
+def _run_decode(modes, n_steps: int, repeats: int):
+    """One serving run per mode, windows INTERLEAVED across modes: for
+    each of `repeats` rounds, every mode times one window of n_steps
+    decode steps (counted via engine metrics, so a fused macro-step
+    contributes K). Interleaving matters on this 2-core virtualized
+    box: CPU steal drifts on multi-second scales, so consecutive
+    same-mode windows correlate and back-to-back mode blocks skew the
+    ratio; round-robin windows see the same noise. Context grows
+    slowly across windows (8 tokens/page) but every mode walks the
+    identical schedule, so windows stay comparable. Returns
+    {mode: [steps/sec per window]}."""
+    engines, dones = {}, {}
+    # decode jits are specialized on the live-page bucket; pin the
+    # bucket that covers the whole timed range so no window eats a
+    # mid-run re-trace (a bucket crossing costs seconds of XLA compile,
+    # which would make that window's sample garbage)
+    end_ctx = 9 + (1 + WARM_STEPS) * MACRO_K + repeats * n_steps \
+        + MACRO_K
+    bucket = 4
+    while bucket * 8 < end_ctx + 8:
+        bucket *= 2
+    for mode in modes:
+        eng = _build_engine(mode)
+        eng.min_page_bucket = max(eng.min_page_bucket,
+                                  min(bucket, MAX_PAGES))
+        for i in range(N_SLOTS):
+            eng.submit(list(range(1 + i, 9 + i)), max_new=10 ** 9)
+        done = {}
+        eng.step(done)                   # admits + prefills + first step
+        for _ in range(WARM_STEPS):
             eng.step(done)
-        sps.append(n_steps / (time.perf_counter() - t0))
-    assert len(eng.active) == N_SLOTS, "sequences finished mid-bench"
-    assert int(max(eng.ctx_lens)) < MAX_PAGES * eng.page, "ctx overflow"
-    return statistics.median(sps)
+        engines[mode], dones[mode] = eng, done
+    sps = {mode: [] for mode in modes}
+    for rep in range(repeats):
+        # rotate the order each round: the mode that follows the heavy
+        # legacy window inherits its cache damage, so a fixed order
+        # biases one mode systematically
+        order = modes[rep % len(modes):] + modes[:rep % len(modes)]
+        for mode in order:
+            eng, done = engines[mode], dones[mode]
+            s0 = eng.metrics["decode_steps"]
+            t0 = time.perf_counter()
+            while eng.metrics["decode_steps"] - s0 < n_steps:
+                eng.step(done)
+            sps[mode].append((eng.metrics["decode_steps"] - s0)
+                             / (time.perf_counter() - t0))
+    for mode, eng in engines.items():
+        assert len(eng.active) == N_SLOTS, "sequences finished mid-bench"
+        assert int(max(eng.ctx_lens)) < MAX_PAGES * eng.page, "ctx overflow"
+        if mode == "fused_macro":
+            assert eng.metrics["macro_steps"] > 0, "fused mode never fused"
+            assert eng.metrics["macro_fallbacks"] == 0, "unexpected fallback"
+    return sps
+
+
+def _dispersion(sps):
+    qs = statistics.quantiles(sps, n=4) if len(sps) >= 2 else [sps[0]] * 3
+    return {"median": round(statistics.median(sps), 2),
+            "min": round(min(sps), 2),
+            "iqr": round(qs[2] - qs[0], 2),
+            "windows": [round(s, 2) for s in sps]}
 
 
 def main() -> None:
-    repeats = 5
-    if "--repeats" in sys.argv:
+    repeats = 8        # multiple of the mode count: every mode sees
+    if "--repeats" in sys.argv:   # every rotation position equally
         repeats = int(sys.argv[sys.argv.index("--repeats") + 1])
-    n_steps = max(8, int(24 * SCALE))
-    results = {}
-    for mode, legacy in [("incremental", False), ("rebuild_legacy", True)]:
-        results[mode] = _run_decode(legacy, n_steps, repeats)
-        emit(f"serve_decode_{mode}",
-             1e6 / results[mode],
-             f"steps_per_sec={results[mode]:.2f}")
-    speedup = results["incremental"] / results["rebuild_legacy"]
-    emit("serve_decode_speedup", 0.0, f"x{speedup:.2f}_vs_rebuild")
+    quick = "--quick" in sys.argv
+    n_steps = max(MACRO_K, int(24 * SCALE) // MACRO_K * MACRO_K)
+    results, windows = {}, {}
+    all_sps = _run_decode(("fused_macro", "single_step", "incremental",
+                           "rebuild_legacy"), n_steps, repeats)
+    for mode, sps in all_sps.items():
+        windows[mode] = _dispersion(sps)
+        results[mode] = windows[mode]["median"]
+        emit(f"serve_decode_{mode}", 1e6 / results[mode],
+             f"steps_per_sec={results[mode]:.2f}"
+             f"_min={windows[mode]['min']:.2f}"
+             f"_iqr={windows[mode]['iqr']:.2f}")
+    # speedups as the MEDIAN OF PER-ROUND RATIOS, not the ratio of
+    # medians: this box's CPU-steal bursts last seconds, so whole
+    # windows get hit; windows of the same round are adjacent in time
+    # and see correlated noise, making their ratio far more stable
+    def med_ratio(a, b):
+        return round(statistics.median(
+            x / y for x, y in zip(all_sps[a], all_sps[b])), 2)
+
+    speedups = {
+        # ISSUE-3 acceptance headline: live fused path vs the PR 2
+        # incremental baseline
+        "fused_macro_vs_incremental":
+            med_ratio("fused_macro", "incremental"),
+        # macro fusion isolated from this PR's graph optimizations
+        "fused_macro_vs_single_step":
+            med_ratio("fused_macro", "single_step"),
+        "single_step_vs_incremental":
+            med_ratio("single_step", "incremental"),
+        "incremental_vs_rebuild":
+            med_ratio("incremental", "rebuild_legacy"),
+    }
+    for name, x in speedups.items():
+        emit(f"serve_decode_speedup_{name}", 0.0, f"x{x:.2f}")
+
+    path = os.environ.get("REPRO_BENCH_OUT", "BENCH_serve.json")
+    # regression smoke: compare against targets and the committed
+    # trajectory, but only WARN — the 2-core CI runner swings 2-3x
+    # between runs, so a hard gate would be pure noise
+    warnings = []
+    for name, target in TARGETS.items():
+        if speedups[name] < target:
+            warnings.append(f"speedup {name} x{speedups[name]:.2f} "
+                            f"below x{target:.2f} target")
+    try:
+        with open(path) as f:
+            prev = json.load(f).get("steps_per_sec", {})
+        for mode, now in results.items():
+            old = prev.get(mode)
+            if old and now < 0.6 * old:
+                warnings.append(f"{mode} {now:.0f} steps/s vs "
+                                f"{old:.0f} committed (>40% drop)")
+    except (OSError, ValueError):
+        pass
+    for w in warnings:
+        print(f"# WARNING: possible regression: {w}", flush=True)
+    if warnings and quick:
+        print("# (smoke mode: reported, not failed)", flush=True)
+
     out = {
         "bench": "serve_decode",
         "n_slots": N_SLOTS,
         "max_pages": MAX_PAGES,
+        "macro_k": MACRO_K,
         "steps_timed": n_steps,
         "repeats": repeats,
-        "steps_per_sec": {k: round(v, 2) for k, v in results.items()},
-        "speedup_incremental_vs_rebuild": round(speedup, 2),
+        "steps_per_sec": results,
+        "dispersion": windows,
+        "speedups": speedups,
     }
-    path = os.environ.get("REPRO_BENCH_OUT", "BENCH_serve.json")
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
         f.write("\n")

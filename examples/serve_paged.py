@@ -20,9 +20,12 @@ def main():
                  remat="none", page_size=8, capacity_factor=100.0)
     model = build_model(cfg, rt)
     params = model.init(jax.random.key(0))
-    # undersized device pool + host overflow tier -> preemption happens
+    # undersized device pool + host overflow tier -> preemption happens;
+    # macro_k=4 runs fused 4-token macro-steps whenever the pool can
+    # provably cover them and falls back to single-step mode (which owns
+    # the preempt/swap machinery) when it can't — both paths exercised
     eng = ServeEngine(model, params, n_slots=3, max_ctx=96,
-                      n_device_blocks=14, n_host_blocks=24)
+                      n_device_blocks=14, n_host_blocks=24, macro_k=4)
     rng = np.random.default_rng(0)
     rids = [eng.submit(rng.integers(2, cfg.vocab_size,
                                     int(rng.integers(20, 60))).tolist(),

@@ -52,8 +52,8 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.fmmu.types import (COND_UPDATE, FMMUGeometry, LOOKUP, NIL,
-                                   UPDATE)
+from repro.core.fmmu.types import (COND_UPDATE, FMMUGeometry, HOST_BASE,
+                                   LOOKUP, NIL, UPDATE)
 from repro.kernels import ops
 
 I = jnp.int32
@@ -225,22 +225,126 @@ def _translate_core(g: FMMUGeometry, st: BatchFMMUState, opcodes, dlpns,
 
 # ------------------------------------------------------ serving wrapper
 class ServingMapState(NamedTuple):
-    """FMMU state + the device-resident serving block table.
+    """FMMU state + the device-resident serving block table + allocator.
 
     ``table`` [n_tvpns * entries_per_tp] holds the *current* dlpn->dppn
     mapping (NIL when unmapped) and is maintained incrementally by
     ``translate_serving`` inside the same fused jitted call that
     commits each map write — coherent with the map by construction, so
     serving-layer readers never trigger a full-map retranslation
-    (DESIGN.md "Device-resident incremental block table")."""
+    (DESIGN.md "Device-resident incremental block table").
+
+    The free-list allocator (DESIGN.md "Device-resident block
+    allocator") is a pair of tier stacks + head counts, a member of the
+    same pytree so decode macro-steps can allocate KV blocks and commit
+    their mappings without leaving the jit. ``free_stack[:free_n]`` are
+    the free device-tier block ids, top of stack at ``free_n - 1``;
+    ``host_stack``/``host_n`` mirror the host tier. Stack order mirrors
+    the host ``BlockPool`` free list exactly (list index i == stack
+    index i), so host-side reconciliation replays device pops
+    bit-for-bit. ``oob`` is the sticky OutOfBlocks *flag lane*: a
+    failed in-graph alloc sets it instead of raising, and the host
+    falls back to single-step mode when it reads the flag."""
     fmmu: BatchFMMUState
     table: jnp.ndarray
+    free_stack: jnp.ndarray   # [n_device] int32 free device block ids
+    free_n: jnp.ndarray       # [] int32 live stack depth
+    host_stack: jnp.ndarray   # [n_host] int32 free host block ids
+    host_n: jnp.ndarray       # [] int32
+    oob: jnp.ndarray          # [] bool, sticky OutOfBlocks flag
 
 
-def init_serving_state(g: FMMUGeometry) -> ServingMapState:
+def init_serving_state(g: FMMUGeometry, n_device_blocks: int = 0,
+                       n_host_blocks: int = 0) -> ServingMapState:
+    # stack mirrors BlockPool.__init__: list(range(n))[::-1], so index i
+    # holds block n-1-i and the first pop yields block 0
     return ServingMapState(
         fmmu=init_batch_state(g),
-        table=jnp.full((g.n_tvpns * g.entries_per_tp,), NIL, I))
+        table=jnp.full((g.n_tvpns * g.entries_per_tp,), NIL, I),
+        free_stack=jnp.arange(n_device_blocks - 1, -1, -1, dtype=I),
+        free_n=jnp.asarray(n_device_blocks, I),
+        host_stack=jnp.arange(HOST_BASE + n_host_blocks - 1,
+                              HOST_BASE - 1, -1, dtype=I),
+        host_n=jnp.asarray(n_host_blocks, I),
+        oob=jnp.asarray(False))
+
+
+# ------------------------------------------------- device allocator ops
+def alloc_serving(ms: ServingMapState, want
+                  ) -> Tuple[ServingMapState, jnp.ndarray, jnp.ndarray]:
+    """Pop one device-tier block per requesting lane (pure transition).
+
+    want [B] bool. Lanes pop in index order: lane with rank r among the
+    requesters receives ``free_stack[free_n - 1 - r]`` — exactly the
+    order the host ``BlockPool.alloc`` would pop, so the two stay
+    mirrors. When the stack runs dry, later-ranked lanes FAIL (ok
+    False, block NIL) and the sticky ``oob`` flag is raised — the
+    in-graph replacement for the host-side OutOfBlocks raise.
+
+    Returns (state, blocks [B] int32 (NIL on fail), ok [B] bool)."""
+    want = want.astype(bool)
+    rank = jnp.cumsum(want.astype(I)) - want.astype(I)
+    idx = ms.free_n - 1 - rank
+    ok = want & (idx >= 0)
+    cap = ms.free_stack.shape[0]
+    picked = (ms.free_stack[jnp.clip(idx, 0, cap - 1)] if cap
+              else jnp.full(want.shape, NIL, I))
+    blocks = jnp.where(ok, picked, NIL)
+    return ms._replace(
+        free_n=ms.free_n - ok.sum().astype(I),
+        oob=ms.oob | (want & ~ok).any()), blocks, ok
+
+
+def free_serving(ms: ServingMapState, blocks) -> ServingMapState:
+    """Push blocks back onto their tier stacks (pure transition).
+
+    blocks [B] int32, NIL lanes ignored; tier routed by HOST_BASE.
+    Push order is lane-index order, mirroring sequential
+    ``BlockPool.free`` appends."""
+    valid = blocks >= 0
+    is_host = valid & (blocks >= HOST_BASE)
+    is_dev = valid & ~is_host
+    drank = jnp.cumsum(is_dev.astype(I)) - is_dev.astype(I)
+    hrank = jnp.cumsum(is_host.astype(I)) - is_host.astype(I)
+    didx = jnp.where(is_dev, ms.free_n + drank, ms.free_stack.shape[0])
+    hidx = jnp.where(is_host, ms.host_n + hrank, ms.host_stack.shape[0])
+    return ms._replace(
+        free_stack=ms.free_stack.at[didx].set(blocks, mode="drop"),
+        free_n=ms.free_n + is_dev.sum().astype(I),
+        host_stack=ms.host_stack.at[hidx].set(blocks, mode="drop"),
+        host_n=ms.host_n + is_host.sum().astype(I))
+
+
+def set_allocator(ms: ServingMapState, free_stack, free_n, host_stack,
+                  host_n) -> ServingMapState:
+    """Overwrite the allocator tiers from the (authoritative) host pool
+    and clear the OutOfBlocks flag — the macro-step-boundary resync."""
+    return ms._replace(
+        free_stack=jnp.asarray(free_stack, I),
+        free_n=jnp.asarray(free_n, I),
+        host_stack=jnp.asarray(host_stack, I),
+        host_n=jnp.asarray(host_n, I),
+        oob=jnp.asarray(False))
+
+
+def serving_grow(g: FMMUGeometry, ms: ServingMapState, grow, dlpns,
+                 impl=None
+                 ) -> Tuple[ServingMapState, jnp.ndarray, jnp.ndarray]:
+    """Device-side page growth: one alloc + one fused map commit.
+
+    grow [B] bool lanes wanting one new block for logical page dlpns[B].
+    Pops from the device free stack (``alloc_serving``) and commits the
+    new dlpn->block mappings through the single-probe fused translate
+    path (``translate_serving``) — allocator, map, table and block
+    table all advance coherently inside one jit; lanes that could not
+    be served leave every structure untouched and raise the ``oob``
+    flag. Returns (state, blocks [B], ok [B])."""
+    ms, blocks, ok = alloc_serving(ms, grow)
+    dl = jnp.where(ok, dlpns, -1).astype(I)
+    opc = jnp.full(dl.shape, UPDATE, I)
+    ms, _, _ = translate_serving(g, ms, opc, dl, blocks,
+                                 jnp.zeros_like(dl), impl=impl)
+    return ms, blocks, ok
 
 
 def translate_serving(g: FMMUGeometry, ms: ServingMapState, opcodes,
@@ -257,7 +361,7 @@ def translate_serving(g: FMMUGeometry, ms: ServingMapState, opcodes,
                                          dppns, old_dppns, impl=impl)
     safe = jnp.where(write, dlpns, ms.table.shape[0])
     table = ms.table.at[safe].set(dppns.astype(I), mode="drop")
-    return ServingMapState(st, table), out, ok
+    return ms._replace(fmmu=st, table=table), out, ok
 
 
 # ------------------------------------------------------------ wrappers

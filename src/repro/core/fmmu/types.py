@@ -32,6 +32,14 @@ M_LOOKUP, M_UPDATE, M_COND, M_LOAD, M_FLUSH = 0, 1, 2, 3, 4
 
 NIL = -1
 
+# Tier tag for physical KV block ids: device blocks are [0, HOST_BASE),
+# host ("flash"-analogue) blocks are [HOST_BASE, ...). Canonical home is
+# here so both the paging layer (pool.BlockPool) and the device-resident
+# allocator (batch.ServingMapState) agree without a layering inversion.
+# Must stay >= 1<<24 so kernel value gathers exercise the 16-bit-half
+# split (f32 MXU loses integers past 2^24).
+HOST_BASE = 1 << 24
+
 
 @dataclasses.dataclass(frozen=True)
 class FMMUGeometry:

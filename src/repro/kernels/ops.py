@@ -56,7 +56,7 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
 # ----------------------------------------------------------------------
 def paged_attention(q, k_pool, v_pool, block_table, ctx_lens, *,
                     softcap=0.0, window=0, page_mask=None,
-                    return_stats=False, impl=None, pages_per_chunk=8):
+                    return_stats=False, impl=None, pages_per_chunk=None):
     sel = _default_impl(impl)
     if sel in ("pallas", "pallas_interpret") and page_mask is not None:
         sel = "blocked"   # striped-page masking: blocked lowering
@@ -67,6 +67,13 @@ def paged_attention(q, k_pool, v_pool, block_table, ctx_lens, *,
             window=window, return_stats=return_stats,
             interpret=(sel == "pallas_interpret"))
     if sel == "blocked":
+        if pages_per_chunk is None:
+            # auto: chunking bounds live memory at O(c * P) per (B,H),
+            # but every chunk is a scan iteration of tiny ops — the
+            # dominant CPU decode cost — so take the whole table in one
+            # chunk whenever it fits a modest live window
+            maxp, p = block_table.shape[1], k_pool.shape[1]
+            pages_per_chunk = maxp if maxp * p <= 1024 else 8
         return ref.paged_attention_blocked(
             q, k_pool, v_pool, block_table, ctx_lens, softcap=softcap,
             window=window, page_mask=page_mask,

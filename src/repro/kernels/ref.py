@@ -280,7 +280,12 @@ def paged_attention_blocked(q, k_pool, v_pool, block_table, ctx_lens, *,
         init = (jnp.full((h,), NEG_INF, jnp.float32),
                 jnp.zeros((h,), jnp.float32),
                 jnp.zeros((h, d), jnp.float32))
-        (m, l, acc), _ = lax.scan(step, init, jnp.arange(n_chunks))
+        if n_chunks == 1:
+            # skip the scan machinery: a single-chunk table is the CPU
+            # decode hot path (ops.paged_attention auto-widens)
+            (m, l, acc), _ = step(init, 0)
+        else:
+            (m, l, acc), _ = lax.scan(step, init, jnp.arange(n_chunks))
         return acc / jnp.maximum(l, 1e-30)[:, None], m, l
 
     if page_mask is None:

@@ -2,16 +2,15 @@
 touches jax device state (jax locks the device count on first init)."""
 from __future__ import annotations
 
-import jax
-
-from repro.parallel.sharding import ParallelCtx
+from repro.parallel.sharding import ParallelCtx, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    # version-portable wrapper: jax.sharding.AxisType only exists on
+    # newer wheels than the pinned 0.4.37
+    return make_mesh(shape, axes)
 
 
 def production_ctx(*, multi_pod: bool = False) -> ParallelCtx:

@@ -138,7 +138,8 @@ def attn_decode_paged(params, x, cfg, rt: Runtime, *, pool_k, pool_v,
     res = ops.paged_attention(
         q[:, 0], pool_k, pool_v, block_table, ctx_lens + 1,
         softcap=cfg.attn_softcap, window=window,
-        return_stats=return_stats, impl=rt.kernel_impl)
+        return_stats=return_stats, impl=rt.kernel_impl,
+        pages_per_chunk=rt.paged_chunk)
     if return_stats:
         out, (m, l) = res
     else:
@@ -205,7 +206,7 @@ def attn_decode_paged_striped(params, x, cfg, rt: Runtime, ctx, *,
         o, (m, l) = ops.paged_attention(
             qb, pk, pv, local_table, ctxl + 1, softcap=cfg.attn_softcap,
             window=window, page_mask=owned, return_stats=True,
-            impl=rt.kernel_impl)
+            impl=rt.kernel_impl, pages_per_chunk=rt.paged_chunk)
         outs = jax.lax.all_gather(o.astype(jnp.float32), combine_axes)
         ms = jax.lax.all_gather(m, combine_axes)
         ls = jax.lax.all_gather(l, combine_axes)

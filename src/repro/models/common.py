@@ -26,6 +26,12 @@ class Runtime:
     page_size: int = 256         # tokens per KV page
     q_chunk: int = 512
     kv_chunk: int = 1024
+    # paged-attention page-chunk width (blocked lowering). None = auto:
+    # one chunk whenever the whole table fits a modest live window
+    # (chunking bounds live memory but costs a scan iteration of tiny
+    # ops per chunk — the dominant CPU decode cost); an int pins the
+    # width (benchmark baselines pin 8, the pre-ISSUE-3 default)
+    paged_chunk: Optional[int] = None
     capacity_factor: Optional[float] = None
     zloss: float = 0.0
     # sharding toggles (hillclimb levers)

@@ -28,6 +28,16 @@ instead of holding them across ``new_seq``/``extend``/``free``/swaps.
 
 Data movement between tiers operates on the pool tensors via jitted
 gather/scatter (device<->host offload copies on real hardware).
+
+ISSUE-3 allocator mirror: the FMMU serving state carries a
+device-resident free-list allocator (decode macro-steps allocate KV
+blocks without leaving the jit). The host ``BlockPool`` stays
+authoritative at macro-step boundaries: host-side mutations mark the
+device stacks dirty (lazily re-pushed by ``sync_allocator``), and
+device-side pops are replayed onto the pool by ``reconcile_macro`` —
+both sides apply identical deltas in identical order, so steady-state
+decode needs zero sync pushes (DESIGN.md "Device-resident block
+allocator + K-step fused decode macro-steps").
 """
 from __future__ import annotations
 
@@ -45,9 +55,11 @@ from repro.paging.pool import HOST_BASE, BlockPool, OutOfBlocks
 # Host-level call counters (the PROBE_TRACES pattern, at op granularity):
 # bumped once per *invocation*, so tests can assert that a steady-state
 # decode step performs zero full-map retranslations and at most one
-# fused map call.
+# fused map call — and that a steady-state MACRO step performs zero of
+# either plus zero allocator re-syncs.
 XLATE_CALLS = [0]
 FULL_TABLE_CALLS = [0]
+ALLOC_SYNCS = [0]
 
 
 def _move_rows(pool, src, dst, axis: int):
@@ -81,15 +93,26 @@ class KVPageManager:
         self.max_pages = max_pages
         self.geom = _geometry(n_slots, max_pages)
         self.fns = fb.make_jitted(self.geom)
-        self.state = fb.init_serving_state(self.geom)
+        self.state = fb.init_serving_state(self.geom, n_device_blocks,
+                                           n_host_blocks)
         self.pool = BlockPool(n_device_blocks, n_host_blocks)
         self.seq_pages: Dict[int, List[int]] = {}   # slot -> block ids
         # host-tier page count per slot, maintained by the swap ops so
         # the per-step residency predicate is O(1), not a page-list scan
         self._host_pages: Dict[int, int] = {}
+        # device-allocator mirror protocol: the host BlockPool is
+        # authoritative at macro-step boundaries; any host-side pool
+        # mutation (admission alloc, free, swap) marks the device
+        # stacks stale and sync_allocator() re-pushes them before the
+        # next macro-step. Macro-step pops are reconciled the other way
+        # (reconcile_macro replays them onto the pool) WITHOUT dirtying
+        # — both sides applied the same delta, so the mirror holds and
+        # steady-state decode needs zero sync pushes.
+        self._alloc_dirty = False
         self._retrans_fn = jax.jit(
             functools.partial(self._retranslate, self.geom),
             static_argnums=(1, 2), donate_argnums=(0,))
+        self._set_alloc = jax.jit(fb.set_allocator, donate_argnums=(0,))
 
     # ----------------------------------------------------------- helpers
     def _dlpns(self, slot: int, pages: range) -> np.ndarray:
@@ -122,6 +145,7 @@ class KVPageManager:
     def new_seq(self, slot: int, n_pages: int) -> List[int]:
         assert slot not in self.seq_pages, f"slot {slot} busy"
         blocks = self.pool.alloc(n_pages)
+        self._alloc_dirty = True
         dl = self._dlpns(slot, range(n_pages))
         self._xlate(UPDATE, dl, blocks)
         self.seq_pages[slot] = list(blocks)
@@ -144,6 +168,7 @@ class KVPageManager:
             dl.extend(slot * self.max_pages + p
                       for p in range(have, have + n))
         blocks = self.pool.alloc(len(dl))
+        self._alloc_dirty = True
         got: Dict[int, List[int]] = {}
         i = 0
         for slot, n in wants.items():
@@ -159,6 +184,7 @@ class KVPageManager:
         dl = self._dlpns(slot, range(len(blocks)))
         self._xlate(UPDATE, dl, np.full(len(blocks), NIL, np.int32))
         self.pool.free(blocks)
+        self._alloc_dirty = True
 
     def is_resident(self, slot: int) -> bool:
         """True when no page of `slot` lives in the host tier. One
@@ -193,6 +219,43 @@ class KVPageManager:
         self.state = self.state._replace(fmmu=fmmu)
         return tables
 
+    # ------------------------------------------- device allocator mirror
+    def sync_allocator(self):
+        """Re-push the host free lists into the device allocator stacks
+        (and clear the OutOfBlocks flag). No-op unless a host-side pool
+        mutation happened since the last sync — steady-state macro-step
+        decode performs ZERO of these (ALLOC_SYNCS-counted)."""
+        if not self._alloc_dirty:
+            return
+        ALLOC_SYNCS[0] += 1
+        dev = np.full(self.pool.n_device, NIL, np.int32)
+        dev[:len(self.pool._free_dev)] = self.pool._free_dev
+        host = np.full(self.pool.n_host, NIL, np.int32)
+        host[:len(self.pool._free_host)] = self.pool._free_host
+        self.state = self._set_alloc(
+            self.state, dev, np.int32(len(self.pool._free_dev)),
+            host, np.int32(len(self.pool._free_host)))
+        self._alloc_dirty = False
+
+    def reconcile_macro(self, grow_seq: List[int]) -> Dict[int, List[int]]:
+        """Replay a macro-step's device-side allocations onto the host
+        pool and page lists. grow_seq is the slot sequence that popped
+        blocks, in device pop order (step-major, slot-ascending within
+        a step). Because the host stack is an exact mirror, popping the
+        host free list in the same order yields the identical block
+        ids — the device never has to ship an allocation log. The pool
+        is NOT marked dirty: both sides applied the same delta, so the
+        mirror still holds. Returns {slot: [new blocks]} in page
+        order."""
+        got: Dict[int, List[int]] = {}
+        if not grow_seq:
+            return got
+        blocks = self.pool.alloc(len(grow_seq))
+        for slot, b in zip(grow_seq, blocks):
+            self.seq_pages[slot].append(b)
+            got.setdefault(slot, []).append(b)
+        return got
+
     # ----------------------------------------------------------- swapping
     def swap_out(self, slot: int, pools: List[jnp.ndarray],
                  block_axis: int = 0) -> Tuple[List[jnp.ndarray], int]:
@@ -205,6 +268,7 @@ class KVPageManager:
         if not dev:
             return pools, 0
         host = self.pool.alloc(len(dev), host=True)
+        self._alloc_dirty = True
         dl = []
         for i, b in enumerate(blocks):
             if not BlockPool.is_host(b):
@@ -233,6 +297,7 @@ class KVPageManager:
         if not hostb:
             return pools, 0
         dev = self.pool.alloc(len(hostb))
+        self._alloc_dirty = True
         dl = [slot * self.max_pages + i for i, b in enumerate(blocks)
               if BlockPool.is_host(b)]
         _, ok = self._xlate(COND_UPDATE, dl, dev, hostb)

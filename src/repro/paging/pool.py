@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional
 
-HOST_BASE = 1 << 24
+from repro.core.fmmu.types import HOST_BASE
 
 
 class OutOfBlocks(RuntimeError):

@@ -14,10 +14,30 @@ the only per-step host sync is the next-token transfer). Pool
 exhaustion preempts the longest victim sequence to the host tier
 (swap_out, CondUpdate-guarded) — the serving analogue of the paper's
 GC path.
+
+K-step fused decode macro-steps (DESIGN.md "Macro-step decode")
+---------------------------------------------------------------
+With ``macro_k >= 2`` the steady-state inner loop leaves the host
+entirely: ONE donated jit runs a ``lax.scan`` of K decode steps —
+attention + greedy sampling + page-boundary detection + device-side
+block allocation (the ServingMapState free stack) + fused map commit
+per step — and the host performs exactly one dispatch and one
+device->host sync (tokens + allocation log) per K tokens. The host
+pool stays authoritative at macro-step boundaries only: admission,
+swap, preemption and the reconciliation of allocator deltas
+(``KVPageManager.reconcile_macro``) happen between scans, and the
+engine falls back to the single-step path whenever a macro-step could
+exhaust the device pool (proactive worst-case check; the in-graph
+``oob`` flag is the reactive backstop) or a slot needs swap-in. Slots
+that finish mid-scan (EOS / max_new budget) are retired *inside* the
+scan with single-step pause semantics — masked to the scratch block,
+context frozen, no further growth — and freed by the host at the
+boundary, so a K-step scan is bit-identical to K single steps.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
@@ -26,11 +46,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.fmmu import batch as fb
+from repro.core.fmmu.types import NIL
 from repro.models import transformer
 from repro.models.common import Runtime
 from repro.models.model import Model, _src_len
 from repro.paging.kv_manager import KVPageManager
 from repro.paging.pool import OutOfBlocks
+
+# Host-cost counters (the XLATE_CALLS pattern): one MACRO_DISPATCHES
+# bump per macro-step jit call, one HOST_SYNCS bump per blocking
+# device->host readback. tests/test_serving.py asserts steady-state
+# macro decode costs exactly one of each per K steps.
+MACRO_DISPATCHES = [0]
+HOST_SYNCS = [0]
 
 
 @dataclasses.dataclass
@@ -47,7 +76,8 @@ class Request:
 class ServeEngine:
     def __init__(self, model: Model, params, *, n_slots: int,
                  max_ctx: int, n_device_blocks: Optional[int] = None,
-                 n_host_blocks: int = 0, eos_id: int = -1):
+                 n_host_blocks: int = 0, eos_id: int = -1,
+                 macro_k: int = 0):
         self.m = model
         self.cfg = model.cfg
         self.rt = model.rt
@@ -78,11 +108,33 @@ class ServeEngine:
         # caches (arg 2) are DONATED: the KV pool is updated in place
         # instead of functionally copied every step. Callers always
         # rebind self.caches from the return (same contract as the
-        # donated FMMU state pytree).
-        self._decode = jax.jit(self._decode_fn, donate_argnums=(2,))
+        # donated FMMU state pytree). The live-page bucket (arg 7) is
+        # STATIC: the block table is sliced to the smallest power-of-2
+        # page count covering every mapped page before attention runs,
+        # so decode work scales with actual context, not max_ctx; each
+        # bucket traces once (<= log2(max_pages) compilations per run).
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(2,),
+                               static_argnums=(7,))
         self._prefill = jax.jit(self._prefill_fn, donate_argnums=(2,))
+        # K-step fused macro-steps: state pytree (arg 1) and caches
+        # (arg 2) both DONATED — the whole inner loop mutates in place.
+        # Two static specializations (cached separately, never
+        # re-traced): `simple` drops the retirement machinery for the
+        # common steady state where no slot can finish mid-scan
+        # (eos_id < 0 and every budget >= K); `full` keeps EOS/budget
+        # retirement with pause semantics.
+        self.macro_k = int(macro_k)
+        self._macro = self._macro_simple = None
+        if self.macro_k >= 2:
+            self._macro = jax.jit(self._macro_fn, donate_argnums=(1, 2),
+                                  static_argnums=(9,))
+            self._macro_simple = jax.jit(
+                functools.partial(self._macro_fn, simple=True),
+                donate_argnums=(1, 2), static_argnums=(9,))
+        self.min_page_bucket = 4
         self.metrics = {"prefills": 0, "decode_steps": 0, "preemptions": 0,
-                        "generated": 0}
+                        "generated": 0, "macro_steps": 0,
+                        "macro_fallbacks": 0}
 
     # ------------------------------------------------------------- API
     def submit(self, tokens: List[int], max_new: int = 16, *,
@@ -102,10 +154,17 @@ class ServeEngine:
 
     # ------------------------------------------------------------- steps
     def step(self, done: Dict[int, List[int]]) -> bool:
+        """One scheduling round: admissions, then either ONE fused
+        K-step macro-step (when eligible) or one single decode step."""
         self._admit()
         if not self.active:
             return bool(self.queue)
-        self._decode_step(done)
+        if self._macro_eligible():
+            self._macro_decode_step(done)
+        else:
+            if self._macro is not None:
+                self.metrics["macro_fallbacks"] += 1
+            self._decode_step(done)
         return bool(self.active or self.queue)
 
     def _free_slots(self) -> List[int]:
@@ -210,15 +269,29 @@ class ServeEngine:
         self.metrics["generated"] += 1
 
     # ------------------------------------------------------------- decode
+    def _page_bucket(self, n_need: int) -> int:
+        """Smallest power-of-2 page count >= n_need (>= min_page_bucket,
+        <= max_pages): the static live-page width attention runs over.
+        Raise ``min_page_bucket`` to pre-pin the bucket for an expected
+        context length — every bucket crossing re-traces the decode
+        jits, so latency-sensitive runs pay compilation up front."""
+        p = self.min_page_bucket
+        while p < n_need and p < self.max_pages:
+            p *= 2
+        return min(p, self.max_pages)
+
     def _decode_fn(self, params, tokens, caches, ctx_lens, table,
-                   resident_mask, src_valid=None):
+                   resident_mask, src_valid=None, pages=None):
         """Single-fused serving map step: the flat device-resident table
-        is reshaped, paused/inactive slots are masked to the scratch
-        block (their garbage KV write lands there) with zeroed ctx, and
-        out-of-range entries (NIL / host-tier tags) are clamped — all
-        inside the decode jit, so no table bytes cross the host."""
+        is reshaped and sliced to the live-page bucket (attention never
+        touches pages beyond any mapped context), paused/inactive slots
+        are masked to the scratch block (their garbage KV write lands
+        there) with zeroed ctx, and out-of-range entries (NIL /
+        host-tier tags) are clamped — all inside the decode jit, so no
+        table bytes cross the host."""
         n = self.n_slots * self.max_pages    # table is geometry-padded
         tables = table[:n].reshape(self.n_slots, self.max_pages)
+        tables = tables[:, :pages or self.max_pages]
         tables = jnp.where(resident_mask[:, None], tables,
                            self.scratch_block)
         tables = jnp.where((tables < 0) | (tables >= self.scratch_block),
@@ -296,10 +369,279 @@ class ServeEngine:
         # numpy args go straight to the jit (its shard_args transfer is
         # cheaper than an explicit device_put per array); the only
         # per-step host sync is the next_tok readback
+        pages = self._page_bucket(max(
+            len(self.kvm.seq_pages[r.slot]) for r in residents))
         next_tok, self.caches = self._decode(
             self.params, tokens, self.caches, self.ctx_lens,
-            self.kvm.state.table, resident_mask, src_valid)
+            self.kvm.state.table, resident_mask, src_valid, pages)
         self._finish_step(residents, np.asarray(next_tok), done)
+
+    # ------------------------------------------------------ macro-steps
+    def _macro_fn(self, params, ms, caches, cur_tok, ctx_lens, n_pages,
+                  alive, budget, src_valid=None, pages=None,
+                  simple=False):
+        """K fused decode steps under ONE jit (lax.scan): per step, page
+        -boundary detection -> device-side block alloc + fused map
+        commit (fb.serving_grow) -> masked decode -> greedy sample ->
+        retire slots that hit EOS or their max_new budget. Lane masking
+        matches _decode_fn exactly (scratch block, zeroed ctx, zeroed
+        token) so a scan step is bit-identical to a single step.
+
+        The alloc + translate commit runs under a lax.cond that only
+        fires on steps where some lane crosses a page boundary — steady
+        steps pay a bare decode plus a few fused elementwise ops, which
+        is what makes K-step fusion pay on a CPU where per-op overhead
+        dominates tiny graphs.
+
+        ``simple`` (static) additionally drops the per-step retirement
+        machinery: the caller guarantees no lane can finish mid-scan
+        (eos_id < 0 and every budget >= K), so the live set is the
+        input ``alive`` for the whole scan and the masked block table
+        only changes on growth steps (it rides the carry between
+        refreshes).
+
+        Returns (ms, caches, toks [K,S], oob). In full mode toks is
+        NIL on lanes that emitted nothing (retired/paused); in simple
+        mode dead-lane columns are garbage and the host masks them
+        with its own alive vector. Either way the host replays the
+        deterministic allocation sequence from the validity mask (the
+        allocator mirror makes device pops predictable, so no
+        allocation log needs to leave the device)."""
+        g = self.kvm.geom
+        page = self.page
+        i32 = jnp.int32
+        slots = jnp.arange(self.n_slots, dtype=i32)
+        n = self.n_slots * self.max_pages    # table is geometry-padded
+
+        def mask_tables(ms, live):
+            # live-page bucket slice (static): attention work scales
+            # with actual context, exactly like _decode_fn
+            t = ms.table[:n].reshape(self.n_slots, self.max_pages)
+            t = t[:, :pages or self.max_pages]
+            t = jnp.where(live[:, None], t, self.scratch_block)
+            return jnp.where((t < 0) | (t >= self.scratch_block),
+                             self.scratch_block, t)
+
+        def grow_commit(ms, npg, grow):
+            # pop from the device free stack + commit dlpn->block in
+            # one fused translate (single-probe invariant kept)
+            dl_new = slots * self.max_pages + npg
+            ms, _, ok = fb.serving_grow(g, ms, grow, dl_new)
+            return ms, ok
+
+        if simple:
+            # n_pages/budget repurposed: the host precomputes the whole
+            # growth schedule (it already replays the identical
+            # arithmetic at the boundary) — n_pages is (grow_sched
+            # [K,S] bool, grow_any [K] bool, dl_sched [K,S] int32) and
+            # the scan body needs zero boundary-detection ops
+            grow_sched, grow_any, dl_sched = n_pages
+            alive0 = alive
+
+            def body(carry, xs):
+                ms, caches, tok, ctx, tables = carry
+                gs, ga, dl = xs
+
+                def do_grow(ms):
+                    # no lane can fail here (the host's worst-case
+                    # eligibility check covers the scan), but if one
+                    # does, ms.oob is raised and the host recovers
+                    ms, _, _ = fb.serving_grow(g, ms, gs, dl)
+                    return ms, mask_tables(ms, alive0)
+
+                ms, tables = jax.lax.cond(
+                    ga, do_grow, lambda ms: (ms, tables), ms)
+                logits, caches = self.m.decode_step(
+                    params, tok, caches,
+                    ctx_lens=jnp.where(alive0, ctx, 0),
+                    block_table=tables, src_valid=src_valid)
+                nxt = jnp.argmax(logits, axis=-1).astype(i32)
+                return (ms, caches, jnp.where(alive0, nxt, 0),
+                        ctx + alive0.astype(i32), tables), nxt
+
+            carry = (ms, caches, jnp.where(alive, cur_tok, 0), ctx_lens,
+                     mask_tables(ms, alive))
+            carry, toks = jax.lax.scan(
+                body, carry, (grow_sched, grow_any, dl_sched),
+                length=self.macro_k)
+            return carry[0], carry[1], toks, carry[0].oob
+
+        def body(carry, _):
+            ms, caches, tok, ctx, npg, alive, bud = carry
+            need = (ctx + page) // page          # ceil((ctx+1)/page)
+            grow = alive & (need > npg) & (npg < self.max_pages)
+
+            def do_grow(args):
+                ms, npg = args
+                ms, ok = grow_commit(ms, npg, grow)
+                # a lane that wanted a block and failed PAUSES (it must
+                # not decode into the shared scratch block); the sticky
+                # oob flag sends the host to the single-step fallback
+                live = alive & ~(grow & ~ok)
+                return ms, npg + ok.astype(i32), live
+
+            def no_grow(args):
+                ms, npg = args
+                return ms, npg, alive
+
+            ms, npg, live = jax.lax.cond(grow.any(), do_grow, no_grow,
+                                         (ms, npg))
+            # decode against the incremental table, masked exactly like
+            # _decode_fn (scratch block, zeroed ctx, zeroed token)
+            logits, caches = self.m.decode_step(
+                params, jnp.where(live, tok, 0), caches,
+                ctx_lens=jnp.where(live, ctx, 0),
+                block_table=mask_tables(ms, live), src_valid=src_valid)
+            nxt = jnp.argmax(logits, axis=-1).astype(i32)
+            # advance + retire finished lanes (EOS / budget) with pause
+            # semantics: frozen ctx, no growth, no tokens
+            tok = jnp.where(live, nxt, tok)
+            ctx = ctx + live.astype(i32)
+            bud = bud - live.astype(i32)
+            fin = live & ((nxt == self.eos_id) | (bud <= 0))
+            alive = alive & ~fin
+            return (ms, caches, tok, ctx, npg, alive, bud), \
+                jnp.where(live, nxt, NIL)
+
+        carry = (ms, caches, cur_tok, ctx_lens, n_pages, alive, budget)
+        carry, toks = jax.lax.scan(body, carry, None,
+                                   length=self.macro_k)
+        ms, caches = carry[0], carry[1]
+        return ms, caches, toks, ms.oob
+
+    def _macro_eligible(self) -> bool:
+        """Macro-steps run only when the scan provably cannot need the
+        host mid-flight: every active slot resident, and the device
+        pool covers the worst-case K-step growth of all of them (so the
+        in-graph allocator cannot run dry — pool exhaustion falls back
+        to the single-step path, whose preempt/pause machinery needs
+        the host). Finishing mid-scan is fine (handled in-graph)."""
+        if self._macro is None or not self.active:
+            return False
+        need = 0
+        for r in self.active.values():
+            if not self.kvm.is_resident(r.slot):
+                return False
+            have = len(self.kvm.seq_pages[r.slot])
+            target = -(-(int(self.ctx_lens[r.slot]) + self.macro_k)
+                       // self.page)
+            need += max(0, min(target, self.max_pages) - have)
+        return need <= self.kvm.pool.free_device
+
+    def _macro_decode_step(self, done: Dict[int, List[int]]):
+        """Launch one K-step fused scan, then do the boundary work:
+        ONE host sync (token matrix + oob flag), allocator-delta
+        replay, token bookkeeping, frees."""
+        self.kvm.sync_allocator()      # no-op unless the pool mutated
+        residents = list(self.active.values())
+        tokens = np.zeros(self.n_slots, np.int32)
+        alive = np.zeros(self.n_slots, bool)
+        budget = np.zeros(self.n_slots, np.int32)
+        npages = np.zeros(self.n_slots, np.int32)
+        slot2req: Dict[int, Request] = {}
+        for r in residents:
+            tokens[r.slot] = r.out[-1] if r.out else r.tokens[-1]
+            alive[r.slot] = True
+            budget[r.slot] = r.max_new - len(r.out)
+            npages[r.slot] = len(self.kvm.seq_pages[r.slot])
+            slot2req[r.slot] = r
+        src_valid = None
+        if self.cfg.n_enc_layers:
+            src_valid = (np.arange(self.src_cap)[None, :]
+                         < self.src_lens[:, None]).astype(np.int32)
+        # the `simple` specialization applies when no lane can finish
+        # mid-scan: without EOS the retirement machinery is dead weight
+        # on every scan step
+        simple = self.eos_id < 0 and bool(
+            (budget[alive] >= self.macro_k).all())
+        if simple:
+            # precompute the growth schedule the scan will follow (no
+            # retirement ⟹ the live set is static ⟹ page crossings
+            # are a pure function of ctx/pages the host already holds)
+            grow_sched = np.zeros((self.macro_k, self.n_slots), bool)
+            dl_sched = np.zeros((self.macro_k, self.n_slots), np.int32)
+            base = np.arange(self.n_slots, dtype=np.int32) \
+                * self.max_pages
+            ctx = self.ctx_lens.copy()
+            for k in range(self.macro_k):
+                need = (ctx + self.page) // self.page
+                grow_sched[k] = alive & (need > npages) \
+                    & (npages < self.max_pages)
+                dl_sched[k] = base + npages
+                npages += grow_sched[k]
+                ctx += alive
+            sched = (grow_sched, grow_sched.any(axis=1), dl_sched)
+        # live-page bucket: worst-case pages any slot can hold by scan
+        # end (exact post-schedule count in simple mode)
+        if simple:
+            pages = self._page_bucket(int(npages[alive].max()))
+        else:
+            end = np.minimum(
+                self.max_pages,
+                np.maximum(npages, (self.ctx_lens + self.macro_k
+                                    + self.page - 1) // self.page))
+            pages = self._page_bucket(int(end[alive].max()))
+        MACRO_DISPATCHES[0] += 1
+        st, self.caches, toks, oob = (
+            self._macro_simple(
+                self.params, self.kvm.state, self.caches, tokens,
+                self.ctx_lens, sched, alive, budget, src_valid, pages)
+            if simple else
+            self._macro(
+                self.params, self.kvm.state, self.caches, tokens,
+                self.ctx_lens, npages, alive, budget, src_valid, pages))
+        self.kvm.state = st
+        HOST_SYNCS[0] += 1
+        toks, oob = jax.device_get((toks, oob))
+        self.metrics["macro_steps"] += 1
+        if simple:
+            valid = np.broadcast_to(alive, toks.shape)
+            # np.nonzero on [K,S] is row-major == the scan's step-major
+            # slot-ascending pop order
+            grow_seq = [int(s) for s in np.nonzero(grow_sched)[1]]
+        else:
+            # NIL marks lanes that emitted nothing (retired/paused);
+            # replay the scan's growth decisions (same arithmetic as
+            # the scan body, gated on the same live mask) to recover
+            # the allocation sequence — the allocator mirror makes the
+            # popped block ids predictable, so no log left the device
+            valid = (toks >= 0) & alive[None, :]
+            ctx = self.ctx_lens.copy()
+            grow_seq = []
+            for k in range(self.macro_k):
+                live = valid[k]
+                need = (ctx + self.page) // self.page
+                grew = live & (need > npages) \
+                    & (npages < self.max_pages)
+                grow_seq.extend(int(s) for s in np.nonzero(grew)[0])
+                npages += grew
+                ctx += live
+        self.kvm.reconcile_macro(grow_seq)
+        if simple:
+            # vectorized bookkeeping: every alive lane emitted exactly
+            # K tokens and none can have finished (budget >= K ... but
+            # budget == K retires at the boundary, handled below)
+            self.metrics["decode_steps"] += self.macro_k
+            self.metrics["generated"] += self.macro_k * len(residents)
+            for r in residents:
+                r.out.extend(int(t) for t in toks[:, r.slot])
+                self.ctx_lens[r.slot] += self.macro_k
+                if len(r.out) >= r.max_new:
+                    done[r.rid] = r.out[:r.max_new]
+                    self.kvm.free_seq(r.slot)
+                    self.ctx_lens[r.slot] = 0
+                    del self.active[r.rid]
+        else:
+            for k in range(self.macro_k):
+                if not valid[k].any():
+                    break              # everyone retired: steps k.. idle
+                stepped = [slot2req[s] for s in range(self.n_slots)
+                           if valid[k, s]]
+                self._finish_step(stepped, toks[k], done)
+        if oob:
+            # the proactive check makes this unreachable; if it trips,
+            # re-sync (clears the flag) and let single-step mode recover
+            self.kvm._alloc_dirty = True
 
     def _finish_step(self, residents, next_tok: np.ndarray,
                      done: Dict[int, List[int]]):

@@ -281,3 +281,76 @@ def test_make_jitted_donation_chain(setup):
     opc = jnp.zeros(6, jnp.int32)
     stt, out, _ = fns["translate"](stt, opc, dl, opc, opc)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(dl) + 90)
+
+
+# ---------------------------------------------------------------------
+# Device-resident free-list allocator (ISSUE 3): pure state transitions
+# ---------------------------------------------------------------------
+def test_allocator_alloc_free_oob_flag(setup):
+    from repro.core.fmmu.types import HOST_BASE
+    g, _ = setup
+    ms = B.init_serving_state(g, n_device_blocks=4, n_host_blocks=2)
+    # init mirrors BlockPool: first pop is block 0, then 1, 2, ...
+    ms, blk, ok = B.alloc_serving(ms, jnp.array([True, False, True]))
+    assert list(np.asarray(blk)) == [0, -1, 1]
+    assert list(np.asarray(ok)) == [True, False, True]
+    assert int(ms.free_n) == 2 and not bool(ms.oob)
+    # over-allocation: earlier lanes succeed, later lanes fail, the
+    # sticky OutOfBlocks FLAG raises instead of a Python exception
+    ms, blk, ok = B.alloc_serving(ms, jnp.array([True, True, True]))
+    assert list(np.asarray(blk)) == [2, 3, -1]
+    assert list(np.asarray(ok)) == [True, True, False]
+    assert int(ms.free_n) == 0 and bool(ms.oob)
+    # free routes tiers by HOST_BASE and pushes in lane order (the
+    # host block below models one the host tier handed out: free may
+    # only return blocks that were actually popped)
+    ms = ms._replace(host_n=jnp.int32(1))    # host popped HOST_BASE+0
+    ms = B.free_serving(ms, jnp.array([1, -1, HOST_BASE, 3]))
+    assert int(ms.free_n) == 2
+    assert list(np.asarray(ms.free_stack[:2])) == [1, 3]
+    assert int(ms.host_n) == 2
+    assert int(ms.host_stack[1]) == HOST_BASE
+    # resync from the (authoritative) host pool clears the flag
+    ms = B.set_allocator(ms, jnp.arange(3, -1, -1, dtype=jnp.int32),
+                         jnp.int32(4), ms.host_stack, ms.host_n)
+    assert int(ms.free_n) == 4 and not bool(ms.oob)
+    ms, blk, ok = B.alloc_serving(ms, jnp.array([True]))
+    assert int(blk[0]) == 0
+
+
+def test_serving_grow_allocates_and_commits(setup):
+    """serving_grow = one pop + one fused map commit: the new mapping
+    lands in the backing map AND the incremental table, the allocator
+    advances, and failed lanes leave every structure untouched."""
+    g, _ = setup
+    ms = B.init_serving_state(g, n_device_blocks=2)
+    grow = jnp.array([True, False, True])
+    dl = jnp.array([5, -1, 9], jnp.int32)
+    ms, blocks, ok = B.serving_grow(g, ms, grow, dl)
+    assert list(np.asarray(blocks)) == [0, -1, 1]
+    assert int(ms.table[5]) == 0 and int(ms.table[9]) == 1
+    assert int(ms.fmmu.backing[5]) == 0 and int(ms.fmmu.backing[9]) == 1
+    assert int(ms.free_n) == 0
+    # pool dry: nothing commits, oob raised
+    ms2, blocks2, ok2 = B.serving_grow(g, ms, jnp.array([False, True, False]),
+                                       jnp.array([-1, 17, -1], jnp.int32))
+    assert not bool(ok2[1]) and bool(ms2.oob)
+    assert int(ms2.table[17]) == NIL and int(ms2.fmmu.backing[17]) == NIL
+
+
+def test_allocator_transitions_inside_jit_donated(setup):
+    """alloc/free/grow are pure pytree transitions usable under jit
+    with donation (the macro-step contract)."""
+    g, _ = setup
+    ms = B.init_serving_state(g, n_device_blocks=8)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def roundtrip(ms, want, dl):
+        ms, blocks, ok = B.alloc_serving(ms, want)
+        ms = B.free_serving(ms, jnp.where(ok, blocks, NIL))
+        ms, _, _ = B.serving_grow(g, ms, want, dl)
+        return ms
+
+    ms = roundtrip(ms, jnp.array([True, True]), jnp.array([3, 4], jnp.int32))
+    assert int(ms.free_n) == 6
+    assert int(ms.table[3]) >= 0 and int(ms.table[4]) >= 0

@@ -228,3 +228,56 @@ def test_fmmu_translate_vs_ref(n_sets, n_ways, e, bq, np_sz):
     np.testing.assert_array_equal(np.where(got[0], got[3], 0),
                                   np.where(want[0], want[3], 0))
     np.testing.assert_array_equal(got[4], want[4])  # ref bits
+
+
+def test_fmmu_translate_partial_last_chunk():
+    """ISSUE-3 chunk-grid edge: n_backing NOT a multiple of
+    backing_chunk — misses whose dlpn lands in the final partial chunk
+    (and right at the chunk seam) must gather their backing value from
+    the padded tile bit-exactly, interpret-vs-ref."""
+    from repro.kernels import fmmu_translate as ft
+    n_sets, n_ways, e = 4, 2, 4
+    np_sz, chunk = 130, 64            # 130 = 64 + 64 + 2: last tile 2/64
+    k = jax.random.key(3)
+    tags = jnp.full((n_sets, n_ways), -1)
+    valid = jnp.zeros((n_sets, n_ways), bool)    # empty cache: all miss
+    refb = jnp.zeros((n_sets, n_ways), bool)
+    data = jnp.full((n_sets, n_ways, e), -1)
+    backing = jax.random.randint(k, (np_sz,), -1, 1 << 26)
+    # seam and tail coverage: last entry of tile 0, first of tile 1,
+    # the two real entries of the partial tile 2, plus interior points
+    dlpns = jnp.array([63, 64, 127, 128, 129, 0, 65, 120], jnp.int32)
+    touch = jnp.ones(dlpns.shape, bool)
+    got = ft.fmmu_translate(tags, valid, refb, data, backing, dlpns,
+                            touch, entries_per_block=e, block_size=8,
+                            backing_chunk=chunk, interpret=True)
+    want = ref.fmmu_translate_ref(tags, valid, refb, data, backing,
+                                  dlpns, touch, entries_per_block=e)
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+    np.testing.assert_array_equal(got[1],
+                                  backing[jnp.clip(dlpns, 0, np_sz - 1)])
+
+
+def test_fmmu_translate_all_dlpns_beyond_np_clip():
+    """ISSUE-3 chunk-grid edge: every dlpn >= NP — the out-of-contract
+    clip must serve backing[NP-1] on every lane (not the pad region,
+    not a silent no-match), identically on interpret and ref paths."""
+    from repro.kernels import fmmu_translate as ft
+    n_sets, n_ways, e = 4, 2, 4
+    np_sz = 100                       # padded to 192 with chunk 96
+    k = jax.random.key(4)
+    tags = jnp.full((n_sets, n_ways), -1)
+    valid = jnp.zeros((n_sets, n_ways), bool)
+    refb = jnp.zeros((n_sets, n_ways), bool)
+    data = jnp.full((n_sets, n_ways, e), -1)
+    backing = jax.random.randint(k, (np_sz,), -1, 1 << 26)
+    dlpns = jnp.array([100, 101, 150, 191, 192, 1000], jnp.int32)
+    touch = jnp.ones(dlpns.shape, bool)
+    got = ft.fmmu_translate(tags, valid, refb, data, backing, dlpns,
+                            touch, entries_per_block=e, block_size=8,
+                            backing_chunk=96, interpret=True)
+    want = ref.fmmu_translate_ref(tags, valid, refb, data, backing,
+                                  dlpns, touch, entries_per_block=e)
+    np.testing.assert_array_equal(got[1], want[1])
+    assert (np.asarray(got[1]) == int(backing[np_sz - 1])).all()

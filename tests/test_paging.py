@@ -164,3 +164,52 @@ def test_swap_block_axis():
     hrows = [4 + (b - HOST_BASE) for b in kvm.seq_pages[0]]
     np.testing.assert_array_equal(np.asarray(pools[0])[:, hrows],
                                   orig[:, blocks])
+
+
+def test_allocator_mirror_sync_and_reconcile():
+    """ISSUE-3 mirror protocol: host pool mutations dirty the device
+    allocator (synced lazily, ALLOC_SYNCS-counted); device-side pops
+    replayed through reconcile_macro keep both sides identical WITHOUT
+    a re-push."""
+    import jax
+
+    from repro.core.fmmu import batch as fb
+
+    kvm = KVPageManager(n_slots=2, max_pages=4, n_device_blocks=8)
+    a0 = KM.ALLOC_SYNCS[0]
+    assert not kvm._alloc_dirty            # mirrors agree at birth
+    kvm.sync_allocator()
+    assert KM.ALLOC_SYNCS[0] == a0         # clean -> no-op
+    kvm.new_seq(0, 2)                      # host mutation -> dirty
+    assert kvm._alloc_dirty
+    kvm.sync_allocator()
+    assert KM.ALLOC_SYNCS[0] == a0 + 1 and not kvm._alloc_dirty
+    st = kvm.state
+    assert int(st.free_n) == kvm.pool.free_device
+    np.testing.assert_array_equal(
+        np.asarray(st.free_stack[:int(st.free_n)]),
+        np.asarray(kvm.pool._free_dev, np.int32))
+    # simulate a macro-step's device-side growth: slot 0 page 2, then
+    # slot 1 page 0 (two scan steps), committed through serving_grow
+    import functools
+    grow_fn = jax.jit(functools.partial(fb.serving_grow, kvm.geom),
+                      donate_argnums=(0,))
+    kvm.seq_pages[1] = []                  # slot 1 enters via device path
+    for slot, page in [(0, 2), (1, 0)]:
+        grow = np.zeros(2, bool)
+        grow[slot] = True
+        dl = np.asarray([slot * 4 + page] * 2, np.int32)
+        kvm.state, _, ok = grow_fn(kvm.state, grow, dl)
+        assert bool(np.asarray(ok)[slot])
+    got = kvm.reconcile_macro([0, 1])
+    # host popped the same ids the device did, in the same order
+    assert got == {0: [2], 1: [3]}
+    assert kvm.seq_pages[0] == [0, 1, 2] and kvm.seq_pages[1] == [3]
+    assert not kvm._alloc_dirty            # mirror held: no re-push due
+    assert int(kvm.state.free_n) == kvm.pool.free_device
+    np.testing.assert_array_equal(
+        np.asarray(kvm.state.free_stack[:int(kvm.state.free_n)]),
+        np.asarray(kvm.pool._free_dev, np.int32))
+    # the committed mappings agree with the retranslation oracle
+    inc = np.asarray(kvm.block_tables())
+    np.testing.assert_array_equal(inc, np.asarray(kvm.retranslate_tables()))

@@ -165,6 +165,111 @@ def test_fmmu_map_hit_stats_progress():
     assert st["hits"] + st["misses"] > 0
 
 
+def _pool_state(eng):
+    return (list(eng.kvm.pool._free_dev), list(eng.kvm.pool._free_host),
+            {s: list(p) for s, p in eng.kvm.seq_pages.items()})
+
+
+def test_macro_step_equivalence_bitwise():
+    """ISSUE-3 equivalence: K-step fused decode produces bit-identical
+    tokens, block tables, and pool state to K single steps — including
+    slots crossing page boundaries mid-macro-step (7-token prompts,
+    page 8: the crossing lands inside a scan) and a slot finishing
+    mid-scan (max_new=7 with K=4 retires at scan step 3)."""
+    cfg = smoke_config(get_arch("llama3.2-1b"))
+    m = build_model(cfg, RT)
+    params = m.init(jax.random.key(0))
+    t1, t2 = list(range(1, 8)), list(range(50, 73))
+
+    def run(macro_k):
+        eng = ServeEngine(m, params, n_slots=2, max_ctx=64,
+                          macro_k=macro_k)
+        r1 = eng.submit(t1, max_new=10)     # budget > K: simple variant
+        r2 = eng.submit(t2, max_new=7)      # finishes mid-scan: full
+        done = eng.run()
+        return done[r1], done[r2], eng
+
+    a1, a2, es = run(0)
+    b1, b2, em = run(4)
+    assert em.metrics["macro_steps"] > 0
+    assert (a1, a2) == (b1, b2)
+    assert _pool_state(es) == _pool_state(em)
+    np.testing.assert_array_equal(np.asarray(es.kvm.block_tables()),
+                                  np.asarray(em.kvm.block_tables()))
+    # device allocator mirror agrees with the host pool once the
+    # (lazily deferred) sync of the final host-side frees runs
+    em.kvm.sync_allocator()
+    st = em.kvm.state
+    assert int(st.free_n) == em.kvm.pool.free_device
+    np.testing.assert_array_equal(
+        np.asarray(st.free_stack[:int(st.free_n)]),
+        np.asarray(em.kvm.pool._free_dev, np.int32))
+
+
+def test_macro_pool_dry_engages_single_step_fallback():
+    """ISSUE-3: when the device pool cannot cover a worst-case K-step
+    growth, the engine must fall back to single-step mode (whose
+    preempt/pause machinery needs the host) BEFORE the in-graph
+    allocator can run dry — pause semantics preserved, outputs equal
+    the uncontended solo runs, and the macro path reports fallbacks."""
+    cfg = smoke_config(get_arch("llama3.2-1b"))
+    m = build_model(cfg, RT)
+    params = m.init(jax.random.key(0))
+    t1, t2 = list(range(1, 9)), list(range(30, 38))
+
+    eng = ServeEngine(m, params, n_slots=2, max_ctx=64,
+                      n_device_blocks=3, n_host_blocks=0, macro_k=4)
+    r1 = eng.submit(t1, max_new=6)
+    r2 = eng.submit(t2, max_new=12)
+    done = eng.run()
+    assert set(done) == {r1, r2}
+    assert eng.metrics["macro_fallbacks"] > 0
+    assert not bool(np.asarray(eng.kvm.state.oob)), \
+        "in-graph allocator ran dry: proactive check failed"
+    for toks, max_new, rid in [(t1, 6, r1), (t2, 12, r2)]:
+        solo = ServeEngine(m, params, n_slots=1, max_ctx=64)
+        rs = solo.submit(list(toks), max_new=max_new)
+        assert solo.run()[rs] == done[rid], rid
+
+
+def test_macro_steady_state_one_dispatch_one_sync_per_k_steps():
+    """ISSUE-3 acceptance: steady-state fused decode performs exactly
+    ONE host dispatch and ONE device->host sync per K steps, zero host
+    -side fused map calls, zero full-map retranslations, zero
+    allocator re-syncs, and no re-tracing of the translate pipeline."""
+    from repro.core.fmmu import batch as B
+    from repro.paging import kv_manager as KM
+    from repro.serving import engine as E
+
+    K = 8
+    cfg = smoke_config(get_arch("llama3.2-1b"))
+    m = build_model(cfg, RT)
+    params = m.init(jax.random.key(0))
+    eng = ServeEngine(m, params, n_slots=2, max_ctx=256, macro_k=K)
+    eng.min_page_bucket = 32       # pin: a bucket crossing re-traces
+    eng.submit(list(range(1, 9)), max_new=10 ** 6)
+    eng.submit(list(range(20, 28)), max_new=10 ** 6)
+    done: dict = {}
+    eng.step(done)                     # admission + prefill + 1st macro
+    for _ in range(3):                 # settle: trace the scan variants
+        eng.step(done)
+    for _ in range(6):
+        d0, s0 = E.MACRO_DISPATCHES[0], E.HOST_SYNCS[0]
+        x0, f0, a0 = (KM.XLATE_CALLS[0], KM.FULL_TABLE_CALLS[0],
+                      KM.ALLOC_SYNCS[0])
+        p0 = B.PROBE_TRACES[0]
+        n0 = eng.metrics["decode_steps"]
+        eng.step(done)
+        assert eng.metrics["decode_steps"] - n0 == K
+        assert E.MACRO_DISPATCHES[0] - d0 == 1
+        assert E.HOST_SYNCS[0] - s0 == 1
+        assert KM.XLATE_CALLS[0] - x0 == 0
+        assert KM.FULL_TABLE_CALLS[0] - f0 == 0
+        assert KM.ALLOC_SYNCS[0] - a0 == 0
+        assert B.PROBE_TRACES[0] - p0 == 0, "macro scan re-traced"
+    assert eng.metrics["macro_fallbacks"] == 0
+
+
 def test_steady_state_decode_zero_full_map_translations():
     """ISSUE-2 trace-count assertion: a steady-state decode step performs
     ZERO full-map retranslations and at most ONE fused map call (the
