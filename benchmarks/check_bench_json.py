@@ -1,0 +1,152 @@
+"""Schema gate for the serve-bench trajectory artifact.
+
+CI's bench-smoke lane pipes serve_bench output into BENCH_serve.json
+and archives a BENCH_history line per push. Perf regressions stay
+warn-not-fail (the 2-core runner is too noisy for a hard gate — see
+serve_bench's measurement protocol), but a MALFORMED or MISSING
+artifact is a build bug, not noise: this checker hard-fails CI on it
+so the trajectory stays machine-readable across pushes.
+
+Usage:
+    python benchmarks/check_bench_json.py BENCH_serve.json \
+        [--append-history BENCH_history.jsonl]
+
+``--append-history`` appends one compact JSON line (commit stamp from
+$GITHUB_SHA when set, plus the headline numbers) after validation —
+the file accretes across pushes via the CI cache and is uploaded as an
+artifact, giving a greppable perf trajectory without a dashboard.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+# every mode serve_bench must have timed, and the speedup ratios the
+# acceptance criteria quote — a missing key means the bench silently
+# stopped measuring something the trajectory tracks
+REQUIRED_MODES = ("fused_macro", "single_step", "incremental",
+                  "rebuild_legacy", "oversub_fused", "oversub_fallback")
+REQUIRED_SPEEDUPS = ("fused_macro_vs_incremental",
+                     "fused_macro_vs_single_step",
+                     "incremental_vs_rebuild",
+                     "oversub_fused_vs_fallback")
+DISPERSION_KEYS = ("median", "min", "iqr", "windows")
+
+
+class SchemaError(Exception):
+    pass
+
+
+def _req(cond: bool, msg: str):
+    if not cond:
+        raise SchemaError(msg)
+
+
+def _num(x) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def check(doc: dict) -> None:
+    """Raise SchemaError unless `doc` is a well-formed BENCH_serve."""
+    _req(isinstance(doc, dict), "top level is not an object")
+    for key in ("bench", "n_slots", "max_pages", "macro_k",
+                "steps_timed", "repeats", "steps_per_sec", "dispersion",
+                "speedups", "oversubscription"):
+        _req(key in doc, f"missing top-level key {key!r}")
+    _req(doc["bench"] == "serve_decode",
+         f"bench is {doc['bench']!r}, expected 'serve_decode'")
+    for key in ("n_slots", "max_pages", "macro_k", "steps_timed",
+                "repeats"):
+        _req(isinstance(doc[key], int) and doc[key] > 0,
+             f"{key} is not a positive int")
+    sps, disp = doc["steps_per_sec"], doc["dispersion"]
+    for mode in REQUIRED_MODES:
+        _req(mode in sps, f"steps_per_sec missing mode {mode!r}")
+        _req(_num(sps[mode]) and sps[mode] > 0,
+             f"steps_per_sec[{mode!r}] is not a positive number")
+        _req(mode in disp, f"dispersion missing mode {mode!r}")
+        d = disp[mode]
+        for k in DISPERSION_KEYS:
+            _req(k in d, f"dispersion[{mode!r}] missing {k!r}")
+        _req(isinstance(d["windows"], list) and d["windows"]
+             and all(_num(w) for w in d["windows"]),
+             f"dispersion[{mode!r}].windows is not a number list")
+        _req(len(d["windows"]) == doc["repeats"],
+             f"dispersion[{mode!r}] has {len(d['windows'])} windows, "
+             f"expected repeats={doc['repeats']}")
+    for name in REQUIRED_SPEEDUPS:
+        _req(name in doc["speedups"], f"speedups missing {name!r}")
+        _req(_num(doc["speedups"][name]) and doc["speedups"][name] > 0,
+             f"speedups[{name!r}] is not a positive number")
+    over = doc["oversubscription"]
+    for key in ("prompt_len", "max_new", "n_device_blocks",
+                "n_host_blocks", "tokens_per_sec", "modes"):
+        _req(key in over, f"oversubscription missing {key!r}")
+    for mode in ("oversub_fused", "oversub_fallback"):
+        # the acceptance ratio is computed from delivered tokens/sec,
+        # so the trajectory must record it per mode
+        _req(_num(over["tokens_per_sec"].get(mode))
+             and over["tokens_per_sec"][mode] > 0,
+             f"oversubscription.tokens_per_sec[{mode!r}] "
+             "is not a positive number")
+        _req(mode in over["modes"],
+             f"oversubscription.modes missing {mode!r}")
+        counters = over["modes"][mode]
+        for key in ("macro_steps", "macro_fallbacks", "swaps_out",
+                    "swaps_in"):
+            _req(isinstance(counters.get(key), int),
+                 f"oversubscription.modes[{mode!r}].{key} "
+                 "is not an int")
+
+
+def history_line(doc: dict) -> dict:
+    """One compact trajectory record for BENCH_history.jsonl."""
+    return {
+        "sha": os.environ.get("GITHUB_SHA", "local"),
+        "steps_per_sec": doc["steps_per_sec"],
+        "speedups": doc["speedups"],
+        "oversub_tokens_per_sec": doc["oversubscription"]["tokens_per_sec"],
+        "oversub_fallbacks": {
+            mode: counters["macro_fallbacks"]
+            for mode, counters in doc["oversubscription"]["modes"].items()
+        },
+    }
+
+
+def main(argv) -> int:
+    if not argv or argv[0].startswith("-"):
+        print("usage: check_bench_json.py BENCH_serve.json "
+              "[--append-history FILE]", file=sys.stderr)
+        return 2
+    path = argv[0]
+    hist = None
+    if "--append-history" in argv:
+        hist = argv[argv.index("--append-history") + 1]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except OSError as e:
+        print(f"FAIL: {path} missing or unreadable: {e}", file=sys.stderr)
+        return 1
+    except ValueError as e:
+        print(f"FAIL: {path} is not valid JSON: {e}", file=sys.stderr)
+        return 1
+    try:
+        check(doc)
+    except SchemaError as e:
+        print(f"FAIL: {path} malformed: {e}", file=sys.stderr)
+        return 1
+    print(f"OK: {path} conforms "
+          f"({len(doc['steps_per_sec'])} modes, "
+          f"{len(doc['speedups'])} speedups)")
+    if hist:
+        with open(hist, "a") as f:
+            json.dump(history_line(doc), f, separators=(",", ":"))
+            f.write("\n")
+        print(f"OK: appended trajectory line to {hist}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,8 +1,8 @@
 """Decode-throughput benchmark for the serving map path.
 
 Measures steady-state decode steps/sec of `ServeEngine` at
-n_slots=16, max_pages=64 (the ISSUE-2 reference point) across four
-modes:
+n_slots=16, max_pages=64 (the ISSUE-2 reference point) across six
+modes in two interleaved groups:
 
   * ``fused_macro``  — the live path: K-step fused decode macro-steps
     (K=8, ONE donated jit runs attention + sampling + page-boundary
@@ -17,7 +17,26 @@ modes:
     faithfully (single-step, full-width tables, 8-page attention
     chunks): the ISSUE-3 acceptance reference;
   * ``rebuild_legacy`` — pre-PR-2: rebuilds the full table by
-    re-translating every DLPN each step and masks it on host.
+    re-translating every DLPN each step and masks it on host;
+  * ``oversub_fused`` / ``oversub_fallback`` — the ISSUE-4 pair: the
+    same engine under ~2x OVERSUBSCRIPTION (16 requests whose working
+    set is about twice the device pool; a host tier holds the
+    overflow), measured as CONTINUOUS-BATCHING COMPLETION rounds: each
+    interleaved round submits a fresh batch of 16 finite requests and
+    times delivered tokens/sec from the first decode step until every
+    request completes. Completion rounds make fairness part of the
+    metric — a scheduler cannot win by starving the swapped-out
+    sequences, the failure mode an open-ended steps/sec window hides.
+    ``oversub_fused`` is the non-blocking swap pipeline: swap-pending
+    slots are masked scan lanes, the boundary scheduler rotates
+    residency, and the measured rounds perform ZERO single-step
+    fallbacks (counter-asserted). ``oversub_fallback`` is the PR-3
+    behavior restored faithfully: ``nonblocking_swap=False`` (any
+    non-resident slot drops every round to single-step mode) AND the
+    PR-3 swap data movement (eager un-donated jnp row moves that
+    functionally copy the pools, a separate fused map call, and a
+    blocking guard readback per swap — ``_patch_pr3_swap``).
+    Acceptance: oversub_fused >= 1.3x oversub_fallback tokens/sec.
 
 All modes run in-process because this box's 2-core timings are too
 noisy to compare across runs; per-window dispersion (median/min/IQR
@@ -47,9 +66,20 @@ N_SLOTS = 16
 MAX_PAGES = 64
 MACRO_K = 8
 WARM_STEPS = 3
-# in-run speedup targets (ISSUE 3 acceptance: fused >= 1.5x incremental)
+# oversubscription workload (ISSUE 4): 80-token prompts = 10 pages per
+# sequence at admission, 16 sequences = 160 pages of working set vs a
+# 76-block device pool (~2.1x, deepening to ~3x as contexts grow to
+# prompt+max_new); the host tier absorbs the overflow
+OVERSUB_PROMPT = 80
+OVERSUB_MAX_NEW = 48
+OVERSUB_DEV = 76
+OVERSUB_HOST = 640
+# in-run speedup targets (ISSUE 3: fused >= 1.5x incremental;
+# ISSUE 4: non-blocking swap >= 1.3x the fall-back-on-pressure PR-3
+# behavior under 2x oversubscription)
 TARGETS = {"fused_macro_vs_incremental": 1.5,
-           "incremental_vs_rebuild": 1.5}
+           "incremental_vs_rebuild": 1.5,
+           "oversub_fused_vs_fallback": 1.3}
 
 
 def _build_engine(mode: str):
@@ -79,6 +109,25 @@ def _build_engine(mode: str):
     m = build_model(cfg, rt)
     params = m.init(jax.random.key(0))
     max_ctx = MAX_PAGES * rt.page_size
+    if mode in ("oversub_fused", "oversub_fallback"):
+        # identical engine + workload; the differences are exactly the
+        # ISSUE-4 tentpole: masked swap-pending scan lanes + boundary
+        # scheduler vs per-round single-step fallback, and the fused
+        # donated swap jit vs PR-3's eager copy-per-swap data movement
+        eng = ServeEngine(m, params, n_slots=N_SLOTS, max_ctx=max_ctx,
+                          n_device_blocks=OVERSUB_DEV,
+                          n_host_blocks=OVERSUB_HOST, macro_k=MACRO_K,
+                          nonblocking_swap=(mode == "oversub_fused"),
+                          swap_patience=4)
+        if mode == "oversub_fused":
+            # pin the swap-lane pad so the fused swap fn compiles ONCE
+            # per direction (during warm-up) instead of re-tracing at
+            # every pow2 cap crossing as sequences grow — a mid-round
+            # XLA compile would poison that round's sample
+            eng.kvm.swap_pad = MAX_PAGES
+        else:
+            _patch_pr3_swap(eng)
+        return eng
     eng = ServeEngine(m, params, n_slots=N_SLOTS, max_ctx=max_ctx,
                       macro_k=MACRO_K if mode == "fused_macro" else 0)
     if pr2:
@@ -161,7 +210,72 @@ def _patch_legacy(eng):
     eng._legacy_decode = jax.jit(types.MethodType(_legacy_decode_fn, eng))
 
 
-def _run_decode(modes, n_steps: int, repeats: int):
+def _patch_pr3_swap(eng):
+    """Restore the PR-3 swap data movement faithfully (the baseline
+    the ISSUE-4 acceptance compares against): eager, un-jitted,
+    un-donated jnp row moves — every swap functionally copies the
+    whole KV pools — with a separate fused map call and a BLOCKING
+    guard-mask readback per swap. Verbatim from the pre-ISSUE-4
+    KVPageManager (git 39799ba)."""
+    import types
+
+    import numpy as np
+
+    from repro.core.fmmu.types import COND_UPDATE, HOST_BASE
+    from repro.paging.kv_manager import _move_rows
+    from repro.paging.pool import BlockPool
+
+    def swap_out(self, slot, pools, block_axis=0, check=True):
+        blocks = self.seq_pages[slot]
+        dev = [b for b in blocks if not BlockPool.is_host(b)]
+        if not dev:
+            return pools, 0
+        host = self.pool.alloc(len(dev), host=True)
+        self._alloc_dirty = True
+        dl = [slot * self.max_pages + i for i, b in enumerate(blocks)
+              if not BlockPool.is_host(b)]
+        _, ok = self._xlate(COND_UPDATE, dl, host, dev)
+        assert np.asarray(ok).all(), "swap_out raced"
+        src = jnp.asarray(dev, jnp.int32)
+        dst = jnp.asarray([self.pool.n_device + (h - HOST_BASE)
+                           for h in host], jnp.int32)
+        pools = [_move_rows(p, src, dst, block_axis) for p in pools]
+        self.pool.free(dev)
+        self.seq_pages[slot] = [
+            host[dev.index(b)] if b in dev else b for b in blocks]
+        self._host_pages[slot] = sum(
+            BlockPool.is_host(b) for b in self.seq_pages[slot])
+        self.pool.stats.swaps_out += len(dev)
+        return pools, len(dev)
+
+    def swap_in(self, slot, pools, block_axis=0, check=True):
+        blocks = self.seq_pages[slot]
+        hostb = [b for b in blocks if BlockPool.is_host(b)]
+        if not hostb:
+            return pools, 0
+        dev = self.pool.alloc(len(hostb))
+        self._alloc_dirty = True
+        dl = [slot * self.max_pages + i for i, b in enumerate(blocks)
+              if BlockPool.is_host(b)]
+        _, ok = self._xlate(COND_UPDATE, dl, dev, hostb)
+        assert np.asarray(ok).all()
+        src = jnp.asarray([self.pool.n_device + (h - HOST_BASE)
+                           for h in hostb], jnp.int32)
+        dst = jnp.asarray(dev, jnp.int32)
+        pools = [_move_rows(p, src, dst, block_axis) for p in pools]
+        self.pool.free(hostb)
+        self.seq_pages[slot] = [
+            dev[hostb.index(b)] if b in hostb else b for b in blocks]
+        self._host_pages[slot] = sum(
+            BlockPool.is_host(b) for b in self.seq_pages[slot])
+        self.pool.stats.swaps_in += len(hostb)
+        return pools, len(hostb)
+
+    eng.kvm.swap_out = types.MethodType(swap_out, eng.kvm)
+    eng.kvm.swap_in = types.MethodType(swap_in, eng.kvm)
+
+
+def _run_decode(modes, n_steps: int, repeats: int, prompt_len: int = 8):
     """One serving run per mode, windows INTERLEAVED across modes: for
     each of `repeats` rounds, every mode times one window of n_steps
     decode steps (counted via engine metrics, so a fused macro-step
@@ -171,14 +285,15 @@ def _run_decode(modes, n_steps: int, repeats: int):
     ratio; round-robin windows see the same noise. Context grows
     slowly across windows (8 tokens/page) but every mode walks the
     identical schedule, so windows stay comparable. Returns
-    {mode: [steps/sec per window]}."""
-    engines, dones = {}, {}
+    ({mode: [steps/sec per window]},
+     {mode: [generated tokens/sec per window]}, {mode: engine})."""
+    engines, dones, fb0 = {}, {}, {}
     # decode jits are specialized on the live-page bucket; pin the
     # bucket that covers the whole timed range so no window eats a
     # mid-run re-trace (a bucket crossing costs seconds of XLA compile,
     # which would make that window's sample garbage)
-    end_ctx = 9 + (1 + WARM_STEPS) * MACRO_K + repeats * n_steps \
-        + MACRO_K
+    end_ctx = prompt_len + 1 + (1 + WARM_STEPS) * MACRO_K \
+        + repeats * n_steps + MACRO_K
     bucket = 4
     while bucket * 8 < end_ctx + 8:
         bucket *= 2
@@ -187,13 +302,19 @@ def _run_decode(modes, n_steps: int, repeats: int):
         eng.min_page_bucket = max(eng.min_page_bucket,
                                   min(bucket, MAX_PAGES))
         for i in range(N_SLOTS):
-            eng.submit(list(range(1 + i, 9 + i)), max_new=10 ** 9)
+            eng.submit(list(range(1 + i, 1 + i + prompt_len)),
+                       max_new=10 ** 9)
         done = {}
         eng.step(done)                   # admits + prefills + first step
         for _ in range(WARM_STEPS):
             eng.step(done)
         engines[mode], dones[mode] = eng, done
+        # the zero-fallback claim is STEADY-STATE: admission under an
+        # oversubscribed pool may legitimately fall back while slots
+        # are first preempted to fit; snapshot after warm-up
+        fb0[mode] = eng.metrics["macro_fallbacks"]
     sps = {mode: [] for mode in modes}
+    tps = {mode: [] for mode in modes}
     for rep in range(repeats):
         # rotate the order each round: the mode that follows the heavy
         # legacy window inherits its cache damage, so a fixed order
@@ -202,18 +323,83 @@ def _run_decode(modes, n_steps: int, repeats: int):
         for mode in order:
             eng, done = engines[mode], dones[mode]
             s0 = eng.metrics["decode_steps"]
+            g0 = eng.metrics["generated"]
             t0 = time.perf_counter()
             while eng.metrics["decode_steps"] - s0 < n_steps:
                 eng.step(done)
-            sps[mode].append((eng.metrics["decode_steps"] - s0)
-                             / (time.perf_counter() - t0))
+            dt = time.perf_counter() - t0
+            sps[mode].append((eng.metrics["decode_steps"] - s0) / dt)
+            tps[mode].append((eng.metrics["generated"] - g0) / dt)
     for mode, eng in engines.items():
         assert len(eng.active) == N_SLOTS, "sequences finished mid-bench"
         assert int(max(eng.ctx_lens)) < MAX_PAGES * eng.page, "ctx overflow"
         if mode == "fused_macro":
             assert eng.metrics["macro_steps"] > 0, "fused mode never fused"
-            assert eng.metrics["macro_fallbacks"] == 0, "unexpected fallback"
-    return sps
+            assert eng.metrics["macro_fallbacks"] == fb0[mode], \
+                f"{mode}: single-step fallback during steady state"
+    return sps, tps, engines
+
+
+def _run_oversub(modes, repeats: int):
+    """ISSUE-4 measurement: interleaved CONTINUOUS-BATCHING COMPLETION
+    rounds under ~2x oversubscription. Each round submits a fresh
+    batch of N_SLOTS finite requests, performs one engine step
+    (admissions + prefills + first decode — identical work in both
+    modes, excluded from the window), then times delivered tokens/sec
+    until every request completes. Completion rounds bake fairness
+    into the metric: the swapped-out sequences must finish, so a
+    scheduler cannot look fast by starving them. Round 0 per mode is
+    an unmeasured warm-up (XLA compiles for the scan variants and the
+    pinned swap jit). Returns ({mode: [steps/s]}, {mode: [tokens/s]},
+    {mode: engine})."""
+    engines, fb_warm = {}, {}
+
+    def one_round(eng):
+        for i in range(N_SLOTS):
+            eng.submit(list(range(1 + i, 1 + i + OVERSUB_PROMPT)),
+                       max_new=OVERSUB_MAX_NEW)
+        done: dict = {}
+        eng.step(done)          # admissions + prefills + first step
+        s0, g0 = eng.metrics["decode_steps"], eng.metrics["generated"]
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        assert not eng.active and not eng.queue, "round did not drain"
+        return ((eng.metrics["decode_steps"] - s0) / dt,
+                (eng.metrics["generated"] - g0) / dt)
+
+    for mode in modes:
+        eng = _build_engine(mode)
+        # pin the live-page bucket covering prompt+max_new so no round
+        # eats a bucket-crossing re-trace
+        need = -(-(OVERSUB_PROMPT + OVERSUB_MAX_NEW) // 8)
+        eng.min_page_bucket = 1 << (need - 1).bit_length()
+        one_round(eng)                       # warm-up, unmeasured
+        engines[mode] = eng
+        # the zero-fallback claim is for the measured rounds; warm-up
+        # includes first-ever admissions while jits are still cold
+        fb_warm[mode] = eng.metrics["macro_fallbacks"]
+    sps = {mode: [] for mode in modes}
+    tps = {mode: [] for mode in modes}
+    for rep in range(repeats):
+        order = list(modes)[rep % len(modes):] \
+            + list(modes)[:rep % len(modes)]
+        for mode in order:
+            s, t = one_round(engines[mode])
+            sps[mode].append(s)
+            tps[mode].append(t)
+    for mode, eng in engines.items():
+        assert eng.metrics["swaps_out"] > 0, \
+            f"{mode}: never swapped — pool not oversubscribed"
+        if mode == "oversub_fused":
+            assert eng.metrics["macro_steps"] > 0
+            assert eng.metrics["macro_fallbacks"] == fb_warm[mode], \
+                "fused mode fell back to single-step during a " \
+                "measured round"
+        else:
+            assert eng.metrics["macro_fallbacks"] > fb_warm[mode], \
+                "fallback baseline stayed fused: no pressure applied"
+    return sps, tps, engines
 
 
 def _dispersion(sps):
@@ -231,8 +417,18 @@ def main() -> None:
     quick = "--quick" in sys.argv
     n_steps = max(MACRO_K, int(24 * SCALE) // MACRO_K * MACRO_K)
     results, windows = {}, {}
-    all_sps = _run_decode(("fused_macro", "single_step", "incremental",
-                           "rebuild_legacy"), n_steps, repeats)
+    all_sps, _, _ = _run_decode(("fused_macro", "single_step",
+                                 "incremental", "rebuild_legacy"),
+                                n_steps, repeats)
+    # ISSUE-4 group: same engine pair under ~2x oversubscription,
+    # measured as continuous-batching COMPLETION rounds (its own
+    # interleaved rounds — the workload differs, so its windows are
+    # only comparable to each other). The acceptance ratio is computed
+    # from delivered TOKENS/sec: scheduling rounds decode only
+    # resident lanes, so steps/sec is not apples-to-apples here.
+    over_sps, over_tps, over_eng = _run_oversub(
+        ("oversub_fused", "oversub_fallback"), repeats)
+    all_sps.update(over_sps)
     for mode, sps in all_sps.items():
         windows[mode] = _dispersion(sps)
         results[mode] = windows[mode]["median"]
@@ -260,7 +456,18 @@ def main() -> None:
             med_ratio("single_step", "incremental"),
         "incremental_vs_rebuild":
             med_ratio("incremental", "rebuild_legacy"),
+        # ISSUE-4 acceptance headline: non-blocking swap pipeline vs
+        # the PR-3 fall-back-on-pressure behavior, 2x oversubscribed —
+        # measured in delivered tokens/sec (see _run_decode docstring)
+        "oversub_fused_vs_fallback": round(statistics.median(
+            x / y for x, y in zip(over_tps["oversub_fused"],
+                                  over_tps["oversub_fallback"])), 2),
     }
+    over_tokens = {mode: _dispersion(w) for mode, w in over_tps.items()}
+    for mode, d in over_tokens.items():
+        emit(f"serve_decode_{mode}_tokens", 1e6 / max(d["median"], 1e-9),
+             f"tokens_per_sec={d['median']:.2f}"
+             f"_min={d['min']:.2f}_iqr={d['iqr']:.2f}")
     for name, x in speedups.items():
         emit(f"serve_decode_speedup_{name}", 0.0, f"x{x:.2f}")
 
@@ -298,6 +505,33 @@ def main() -> None:
         "steps_per_sec": results,
         "dispersion": windows,
         "speedups": speedups,
+        # ISSUE-4: the zero-fallback claim is recorded from counters
+        # so the trajectory artifact is assertable, not inferential
+        "oversubscription": {
+            "prompt_len": OVERSUB_PROMPT,
+            "max_new": OVERSUB_MAX_NEW,
+            "n_device_blocks": OVERSUB_DEV,
+            "n_host_blocks": OVERSUB_HOST,
+            # delivered-token throughput: the rate the acceptance
+            # ratio uses (a scheduling round decodes only resident
+            # lanes, so the shared steps/sec table under-specifies
+            # this pair)
+            "tokens_per_sec": {m: d["median"]
+                               for m, d in over_tokens.items()},
+            "tokens_dispersion": over_tokens,
+            "modes": {
+                mode: {
+                    "macro_steps": eng.metrics["macro_steps"],
+                    "macro_fallbacks": eng.metrics["macro_fallbacks"],
+                    "swaps_out": eng.metrics["swaps_out"],
+                    "swaps_in": eng.metrics["swaps_in"],
+                    "pool": {
+                        "swaps_out_blocks": eng.kvm.pool.stats.swaps_out,
+                        "swaps_in_blocks": eng.kvm.pool.stats.swaps_in,
+                    },
+                } for mode, eng in over_eng.items()
+            },
+        },
     }
     with open(path, "w") as f:
         json.dump(out, f, indent=2)

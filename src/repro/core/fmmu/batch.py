@@ -244,7 +244,17 @@ class ServingMapState(NamedTuple):
     index i), so host-side reconciliation replays device pops
     bit-for-bit. ``oob`` is the sticky OutOfBlocks *flag lane*: a
     failed in-graph alloc sets it instead of raising, and the host
-    falls back to single-step mode when it reads the flag."""
+    falls back to single-step mode when it reads the flag.
+
+    ``swap_pending`` [n_lanes] is the host-tier residency lane
+    (DESIGN.md "Non-blocking host-tier swap pipeline"): True while a
+    serving slot's KV pages live in the host tier (swapped out, or a
+    swap still in flight). It is flipped by the same fused jitted call
+    that commits a swap's CondUpdate map writes and moves the pool
+    rows (``mark_swap`` riding KVPageManager's swap op), so the decode
+    macro-scan can mask swap-pending slots as paused lanes from its
+    own state — swaps overlap decode instead of dropping the engine
+    out of the fused path."""
     fmmu: BatchFMMUState
     table: jnp.ndarray
     free_stack: jnp.ndarray   # [n_device] int32 free device block ids
@@ -252,10 +262,12 @@ class ServingMapState(NamedTuple):
     host_stack: jnp.ndarray   # [n_host] int32 free host block ids
     host_n: jnp.ndarray       # [] int32
     oob: jnp.ndarray          # [] bool, sticky OutOfBlocks flag
+    swap_pending: jnp.ndarray  # [n_lanes] bool host-tier residency lane
 
 
 def init_serving_state(g: FMMUGeometry, n_device_blocks: int = 0,
-                       n_host_blocks: int = 0) -> ServingMapState:
+                       n_host_blocks: int = 0,
+                       n_lanes: int = 0) -> ServingMapState:
     # stack mirrors BlockPool.__init__: list(range(n))[::-1], so index i
     # holds block n-1-i and the first pop yields block 0
     return ServingMapState(
@@ -266,7 +278,8 @@ def init_serving_state(g: FMMUGeometry, n_device_blocks: int = 0,
         host_stack=jnp.arange(HOST_BASE + n_host_blocks - 1,
                               HOST_BASE - 1, -1, dtype=I),
         host_n=jnp.asarray(n_host_blocks, I),
-        oob=jnp.asarray(False))
+        oob=jnp.asarray(False),
+        swap_pending=jnp.zeros((n_lanes,), bool))
 
 
 # ------------------------------------------------- device allocator ops
@@ -316,15 +329,30 @@ def free_serving(ms: ServingMapState, blocks) -> ServingMapState:
 
 
 def set_allocator(ms: ServingMapState, free_stack, free_n, host_stack,
-                  host_n) -> ServingMapState:
+                  host_n, swap_pending=None) -> ServingMapState:
     """Overwrite the allocator tiers from the (authoritative) host pool
-    and clear the OutOfBlocks flag — the macro-step-boundary resync."""
+    and clear the OutOfBlocks flag — the macro-step-boundary resync.
+    ``swap_pending`` (optional) refreshes the residency lane from the
+    host's page-tier bookkeeping in the same call (host-side frees of
+    swapped-out slots leave the lane stale until the next sync)."""
     return ms._replace(
         free_stack=jnp.asarray(free_stack, I),
         free_n=jnp.asarray(free_n, I),
         host_stack=jnp.asarray(host_stack, I),
         host_n=jnp.asarray(host_n, I),
-        oob=jnp.asarray(False))
+        oob=jnp.asarray(False),
+        swap_pending=(ms.swap_pending if swap_pending is None
+                      else jnp.asarray(swap_pending, bool)))
+
+
+def mark_swap(ms: ServingMapState, lane, pending) -> ServingMapState:
+    """Flip one slot's host-tier residency lane (pure transition).
+    Rides the fused swap jit in KVPageManager: the lane, the CondUpdate
+    map commits, and the pool-row moves all advance in ONE donated
+    call, so the macro scan's view of who is swap-pending can never
+    race the data movement it masks."""
+    return ms._replace(
+        swap_pending=ms.swap_pending.at[lane].set(pending))
 
 
 def serving_grow(g: FMMUGeometry, ms: ServingMapState, grow, dlpns,

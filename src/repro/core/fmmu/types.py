@@ -32,6 +32,15 @@ M_LOOKUP, M_UPDATE, M_COND, M_LOAD, M_FLUSH = 0, 1, 2, 3, 4
 
 NIL = -1
 
+# Swap-pipeline directions for KV tier moves (paging/kv_manager): a
+# relocation between the device tier and the host ("flash"-analogue)
+# tier is one fused jitted call — CondUpdate map commit + pool
+# gather/scatter + ServingMapState.swap_pending lane update — tagged
+# with one of these so stats, tests, and the scheduler name the same
+# event the same way.
+SWAP_OUT = 0      # device -> host tier (preemption / pool pressure)
+SWAP_IN = 1       # host -> device tier (resume a paused sequence)
+
 # Tier tag for physical KV block ids: device blocks are [0, HOST_BASE),
 # host ("flash"-analogue) blocks are [HOST_BASE, ...). Canonical home is
 # here so both the paging layer (pool.BlockPool) and the device-resident

@@ -26,8 +26,16 @@ only). NOTE: because the state pytree is donated, arrays returned by
 ``block_tables()`` are invalidated by the next map op — re-fetch
 instead of holding them across ``new_seq``/``extend``/``free``/swaps.
 
-Data movement between tiers operates on the pool tensors via jitted
-gather/scatter (device<->host offload copies on real hardware).
+Data movement between tiers is ONE donated jitted call per swap
+(``_swap``): the CondUpdate map commits ride the single-probe fused
+translate, the pool rows move by gather/scatter, and the
+``ServingMapState.swap_pending`` residency lane flips — state and both
+KV pools are donated, so a swap mutates in place and the host never
+blocks on it (the guard-mask readback is opt-in via ``check=True``;
+the serving scheduler leaves it off and lets the equivalence tests own
+correctness). Swap lane counts are padded to the next power of two so
+the jit re-traces O(log max_pages) times, not once per distinct swap
+size. DESIGN.md "Non-blocking host-tier swap pipeline".
 
 ISSUE-3 allocator mirror: the FMMU serving state carries a
 device-resident free-list allocator (decode macro-steps allocate KV
@@ -49,7 +57,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fmmu import batch as fb
-from repro.core.fmmu.types import (COND_UPDATE, FMMUGeometry, NIL, UPDATE)
+from repro.core.fmmu.types import (COND_UPDATE, FMMUGeometry, NIL,
+                                   SWAP_IN, SWAP_OUT, UPDATE)
 from repro.paging.pool import HOST_BASE, BlockPool, OutOfBlocks
 
 # Host-level call counters (the PROBE_TRACES pattern, at op granularity):
@@ -94,7 +103,7 @@ class KVPageManager:
         self.geom = _geometry(n_slots, max_pages)
         self.fns = fb.make_jitted(self.geom)
         self.state = fb.init_serving_state(self.geom, n_device_blocks,
-                                           n_host_blocks)
+                                           n_host_blocks, n_lanes=n_slots)
         self.pool = BlockPool(n_device_blocks, n_host_blocks)
         self.seq_pages: Dict[int, List[int]] = {}   # slot -> block ids
         # host-tier page count per slot, maintained by the swap ops so
@@ -113,6 +122,15 @@ class KVPageManager:
             functools.partial(self._retranslate, self.geom),
             static_argnums=(1, 2), donate_argnums=(0,))
         self._set_alloc = jax.jit(fb.set_allocator, donate_argnums=(0,))
+        # fused swap jits, cached per (padded lane count, block axis,
+        # pool count): state + pools donated, re-traced O(log) times.
+        # swap_pad (optional) pins a fixed lane count instead of the
+        # next-pow2 policy: every swap then shares ONE compiled fn per
+        # direction (pad moves are idempotent row copies), trading a
+        # little extra gather/scatter width for zero mid-run
+        # recompiles — latency-sensitive runs and benchmarks pin it
+        self._swap_jits: Dict[Tuple[int, int, int], object] = {}
+        self.swap_pad: Optional[int] = None
 
     # ----------------------------------------------------------- helpers
     def _dlpns(self, slot: int, pages: range) -> np.ndarray:
@@ -199,6 +217,11 @@ class KVPageManager:
         return (len(self.seq_pages.get(slot, ()))
                 - self._host_pages.get(slot, 0))
 
+    def n_host_pages(self, slot: int) -> int:
+        """Host-tier pages held by `slot` — the device blocks a
+        swap-in would consume (the serving scheduler's cost term)."""
+        return self._host_pages.get(slot, 0)
+
     def block_tables(self) -> jnp.ndarray:
         """[n_slots, max_pages] int32 device view of the incremental
         table — zero-cost: no translation, no state mutation. NIL for
@@ -232,9 +255,15 @@ class KVPageManager:
         dev[:len(self.pool._free_dev)] = self.pool._free_dev
         host = np.full(self.pool.n_host, NIL, np.int32)
         host[:len(self.pool._free_host)] = self.pool._free_host
+        # refresh the residency lane in the same call: host-side frees
+        # of swapped-out slots leave swap_pending stale until here, and
+        # every such free also dirtied the pool
+        resid = np.zeros(self.n_slots, bool)
+        for s, c in self._host_pages.items():
+            resid[s] = c > 0
         self.state = self._set_alloc(
             self.state, dev, np.int32(len(self.pool._free_dev)),
-            host, np.int32(len(self.pool._free_host)))
+            host, np.int32(len(self.pool._free_host)), resid)
         self._alloc_dirty = False
 
     def reconcile_macro(self, grow_seq: List[int]) -> Dict[int, List[int]]:
@@ -257,64 +286,105 @@ class KVPageManager:
         return got
 
     # ----------------------------------------------------------- swapping
-    def swap_out(self, slot: int, pools: List[jnp.ndarray],
-                 block_axis: int = 0) -> Tuple[List[jnp.ndarray], int]:
-        """Relocate all device blocks of `slot` to the host tier.
-        pools: list of [NB_dev(+host), ...] tensors (k & v per layer
-        group); host region lives at [n_device:]. Returns updated pools
-        and the number of relocated blocks. CondUpdate guards each move."""
-        blocks = self.seq_pages[slot]
-        dev = [b for b in blocks if not BlockPool.is_host(b)]
-        if not dev:
-            return pools, 0
-        host = self.pool.alloc(len(dev), host=True)
-        self._alloc_dirty = True
-        dl = []
-        for i, b in enumerate(blocks):
-            if not BlockPool.is_host(b):
-                dl.append(slot * self.max_pages + i)
-        _, ok = self._xlate(COND_UPDATE, dl, host, dev)
-        okh = np.asarray(ok)
-        assert okh.all(), "swap_out raced with a concurrent relocation"
-        # move data: host block h stored at row n_device + (h - HOST_BASE)
-        src = jnp.asarray(dev, jnp.int32)
-        dst = jnp.asarray([self.pool.n_device + (h - HOST_BASE)
-                           for h in host], jnp.int32)
-        pools = [_move_rows(p, src, dst, block_axis) for p in pools]
-        self.pool.free(dev)
-        self.seq_pages[slot] = [
-            host[dev.index(b)] if b in dev else b for b in blocks]
-        self._host_pages[slot] = sum(
-            BlockPool.is_host(b) for b in self.seq_pages[slot])
-        self.pool.stats.swaps_out += len(dev)
-        return pools, len(dev)
+    def _swap_fn(self, cap: int, block_axis: int, n_pools: int):
+        """Build (or fetch) the fused swap jit for a padded lane count.
+        ONE donated call per swap: CondUpdate commits through the
+        single-probe fused translate, pool rows gather/scatter, and the
+        swap_pending residency lane flips — no host roundtrip between
+        the map write and the data it guards."""
+        key = (cap, block_axis, n_pools)
+        fn = self._swap_jits.get(key)
+        if fn is None:
+            g = self.geom
 
-    def swap_in(self, slot: int, pools: List[jnp.ndarray],
-                block_axis: int = 0) -> Tuple[List[jnp.ndarray], int]:
-        """Bring a swapped-out sequence back to device blocks."""
+            def f(ms, pools, dl, newb, oldb, src, dst, lane, pending):
+                opc = jnp.full((cap,), COND_UPDATE, jnp.int32)
+                ms, _, ok = fb.translate_serving(g, ms, opc, dl, newb,
+                                                 oldb)
+                pools = [_move_rows(p, src, dst, block_axis)
+                         for p in pools]
+                ms = fb.mark_swap(ms, lane, pending)
+                return ms, pools, ok
+
+            fn = jax.jit(f, donate_argnums=(0, 1))
+            self._swap_jits[key] = fn
+        return fn
+
+    def _swap(self, direction: int, slot: int, pools, block_axis: int,
+              check: bool) -> Tuple[List[jnp.ndarray], int]:
+        """Shared body of swap_out/swap_in: host bookkeeping + one
+        fused donated jit. Lane arrays are padded to the next power of
+        two (pad lanes are inactive map ops and idempotent row moves),
+        bounding re-traces at O(log max_pages) per (axis, pool-count)."""
         blocks = self.seq_pages[slot]
-        hostb = [b for b in blocks if BlockPool.is_host(b)]
-        if not hostb:
+        out = direction == SWAP_OUT
+        moving = [b for b in blocks if BlockPool.is_host(b) != out]
+        if not moving:
             return pools, 0
-        dev = self.pool.alloc(len(hostb))
+        fresh = self.pool.alloc(len(moving), host=out)
         self._alloc_dirty = True
         dl = [slot * self.max_pages + i for i, b in enumerate(blocks)
-              if BlockPool.is_host(b)]
-        _, ok = self._xlate(COND_UPDATE, dl, dev, hostb)
-        assert np.asarray(ok).all()
-        src = jnp.asarray([self.pool.n_device + (h - HOST_BASE)
-                           for h in hostb], jnp.int32)
-        dst = jnp.asarray(dev, jnp.int32)
-        pools = [_move_rows(p, src, dst, block_axis) for p in pools]
-        self.pool.free(hostb)
+              if BlockPool.is_host(b) != out]
+        row = self.pool.host_row
+        src = [row(b) if not out else b for b in moving]
+        dst = [b if not out else row(b) for b in fresh]
+        n = len(moving)
+        cap = 1 << (n - 1).bit_length()
+        if self.swap_pad:
+            cap = max(cap, self.swap_pad)   # pinned: one fn per direction
+        pad = cap - n
+
+        def arr(xs, fill):
+            return np.asarray(list(xs) + [fill] * pad, np.int32)
+
+        XLATE_CALLS[0] += 1
+        fn = self._swap_fn(cap, block_axis, len(pools))
+        # pad map lanes are inactive (dl=-1); pad moves repeat lane 0's
+        # (src, dst) pair — duplicate writes of an identical value
+        self.state, pools, ok = fn(
+            self.state, list(pools), arr(dl, -1), arr(fresh, 0),
+            arr(moving, 0), arr(src, src[0]), arr(dst, dst[0]),
+            np.int32(slot), out)
+        if check:
+            assert np.asarray(ok)[:n].all(), \
+                "swap raced with a concurrent relocation"
+        self.pool.free(moving)
         self.seq_pages[slot] = [
-            dev[hostb.index(b)] if b in hostb else b for b in blocks]
+            fresh[moving.index(b)] if b in moving else b for b in blocks]
         self._host_pages[slot] = sum(
             BlockPool.is_host(b) for b in self.seq_pages[slot])
-        self.pool.stats.swaps_in += len(hostb)
-        return pools, len(hostb)
+        if out:
+            self.pool.stats.swaps_out += n
+        else:
+            self.pool.stats.swaps_in += n
+        return pools, n
+
+    def swap_out(self, slot: int, pools: List[jnp.ndarray],
+                 block_axis: int = 0, check: bool = True
+                 ) -> Tuple[List[jnp.ndarray], int]:
+        """Relocate all device blocks of `slot` to the host tier in ONE
+        donated jitted call (CondUpdate-guarded map commit + pool-row
+        gather/scatter + swap_pending lane set). pools: list of
+        [NB_dev(+host), ...] tensors (k & v per layer group); the host
+        region lives at rows [n_device:]. Returns (pools, n moved).
+        ``check=False`` skips the guard-mask readback so the caller
+        never blocks on the swap (the serving scheduler's mode)."""
+        return self._swap(SWAP_OUT, slot, pools, block_axis, check)
+
+    def swap_in(self, slot: int, pools: List[jnp.ndarray],
+                block_axis: int = 0, check: bool = True
+                ) -> Tuple[List[jnp.ndarray], int]:
+        """Bring a swapped-out sequence back to device blocks (same
+        fused non-blocking pipeline as swap_out; clears the lane)."""
+        return self._swap(SWAP_IN, slot, pools, block_axis, check)
 
     def hit_stats(self) -> dict:
         s = np.asarray(self.state.fmmu.stats)
         return {"hits": int(s[0]), "misses": int(s[1]),
-                "fills": int(s[2]), "updates": int(s[3])}
+                "fills": int(s[2]), "updates": int(s[3]),
+                # swap/tier activity (ISSUE-4): the zero-fallback claim
+                # is asserted from counters, not inferred from timings
+                "swaps_out": self.pool.stats.swaps_out,
+                "swaps_in": self.pool.stats.swaps_in,
+                "host_resident_slots": sum(
+                    1 for c in self._host_pages.values() if c > 0)}

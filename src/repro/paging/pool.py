@@ -41,6 +41,14 @@ class BlockPool:
     def is_host(block: int) -> bool:
         return block >= HOST_BASE
 
+    def host_row(self, block: int) -> int:
+        """Pool-tensor row backing a host-tier block id: the host
+        region lives at rows [n_device, n_device + n_host). One home
+        for the formula — the swap gather/scatter (kv_manager) and the
+        data-integrity tests must agree on it."""
+        assert block >= HOST_BASE, block
+        return self.n_device + (block - HOST_BASE)
+
     @property
     def free_device(self) -> int:
         return len(self._free_dev)

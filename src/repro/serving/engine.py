@@ -26,13 +26,42 @@ device->host sync (tokens + allocation log) per K tokens. The host
 pool stays authoritative at macro-step boundaries only: admission,
 swap, preemption and the reconciliation of allocator deltas
 (``KVPageManager.reconcile_macro``) happen between scans, and the
-engine falls back to the single-step path whenever a macro-step could
-exhaust the device pool (proactive worst-case check; the in-graph
-``oob`` flag is the reactive backstop) or a slot needs swap-in. Slots
+engine falls back to the single-step path only when the decoding
+lanes' worst-case growth cannot be made to fit the device pool even
+by swapping (proactive check; the in-graph ``oob`` flag is the
+reactive backstop) — e.g. with no host tier configured. Slots
 that finish mid-scan (EOS / max_new budget) are retired *inside* the
 scan with single-step pause semantics — masked to the scratch block,
 context frozen, no further growth — and freed by the host at the
 boundary, so a K-step scan is bit-identical to K single steps.
+
+Non-blocking host-tier swap pipeline (DESIGN.md, ISSUE 4)
+---------------------------------------------------------
+The paper's FMMU services outstanding requests while a map-cache miss
+is handled; the serving analogue is a slot whose KV pages live in the
+host tier. With ``nonblocking_swap`` (the default) such slots no
+longer drop the engine out of the fused macro path: they are
+**swap-pending lanes** — masked inside the scan from the
+``ServingMapState.swap_pending`` residency lane exactly like paused
+slots — while every other slot keeps decoding. A boundary scheduler
+(``_swap_schedule``) plans tier moves between macro-steps: it swaps
+out victims until the residents' worst-case K-step growth fits the
+free pool, swaps waiting slots back in FIFO, and rotates by aging
+(``swap_patience``) so sustained 2x oversubscription runs steady-state
+with ZERO single-step fallbacks (counter-enforced). Swap data
+movement itself is one donated jitted gather/scatter per swap with the
+CondUpdate map commits riding the single-probe fused translate
+(``KVPageManager.swap_out/swap_in``, ``check=False``: the host never
+blocks on a swap). ``nonblocking_swap=False`` restores the PR-3
+fall-back-on-pressure behavior (the serve_bench baseline).
+
+Continuous-batching admission rides the same boundaries: ``_admit``
+spends at most ``admit_tokens`` prompt tokens per scheduling round;
+a longer prompt is chunk-prefilled — its first chunk goes through the
+prefill kernel and the remainder streams through the decode scans as
+**forced lanes** (the scan consumes the known prompt token instead of
+the sampled one and the boundary prediction is discarded), so
+admission never stalls the decode batch.
 """
 from __future__ import annotations
 
@@ -71,13 +100,19 @@ class Request:
     slot: int = -1
     src_emb: Optional[jnp.ndarray] = None
     prefix_emb: Optional[jnp.ndarray] = None
+    # chunked admission: prompt tokens not yet fed to the model — they
+    # stream through the decode path as forced lanes (predictions over
+    # this range are discarded; the true next token is known)
+    pending_prompt: List[int] = dataclasses.field(default_factory=list)
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, *, n_slots: int,
                  max_ctx: int, n_device_blocks: Optional[int] = None,
                  n_host_blocks: int = 0, eos_id: int = -1,
-                 macro_k: int = 0):
+                 macro_k: int = 0, nonblocking_swap: bool = True,
+                 admit_tokens: Optional[int] = None,
+                 swap_patience: int = 4):
         self.m = model
         self.cfg = model.cfg
         self.rt = model.rt
@@ -127,14 +162,30 @@ class ServeEngine:
         self._macro = self._macro_simple = None
         if self.macro_k >= 2:
             self._macro = jax.jit(self._macro_fn, donate_argnums=(1, 2),
-                                  static_argnums=(9,))
+                                  static_argnums=(10,))
             self._macro_simple = jax.jit(
                 functools.partial(self._macro_fn, simple=True),
-                donate_argnums=(1, 2), static_argnums=(9,))
+                donate_argnums=(1, 2), static_argnums=(10,))
         self.min_page_bucket = 4
+        # non-blocking swap pipeline + continuous-batching admission
+        # (module docstring): swap-pending slots are masked scan lanes,
+        # the boundary scheduler rotates residency by aging, and
+        # admission spends at most admit_tokens prompt tokens per round
+        # (None = admit whole prompts, the pre-ISSUE-4 behavior)
+        self.nonblocking_swap = bool(nonblocking_swap)
+        if admit_tokens is not None and admit_tokens <= 0:
+            raise ValueError(
+                f"admit_tokens={admit_tokens}: a non-positive budget "
+                "would never admit anything (pass None for unlimited)")
+        self.admit_tokens = admit_tokens
+        self.swap_patience = int(swap_patience)
+        self._boundary = 0
+        self._pending_since: Dict[int, int] = {}
+        self._resident_since: Dict[int, int] = {}
         self.metrics = {"prefills": 0, "decode_steps": 0, "preemptions": 0,
                         "generated": 0, "macro_steps": 0,
-                        "macro_fallbacks": 0}
+                        "macro_fallbacks": 0, "swaps_out": 0,
+                        "swaps_in": 0, "chunked_prefills": 0}
 
     # ------------------------------------------------------------- API
     def submit(self, tokens: List[int], max_new: int = 16, *,
@@ -154,11 +205,14 @@ class ServeEngine:
 
     # ------------------------------------------------------------- steps
     def step(self, done: Dict[int, List[int]]) -> bool:
-        """One scheduling round: admissions, then either ONE fused
-        K-step macro-step (when eligible) or one single decode step."""
+        """One scheduling round: admissions (budgeted), boundary swap
+        planning, then either ONE fused K-step macro-step (swap-pending
+        slots masked as paused lanes) or one single decode step."""
         self._admit()
         if not self.active:
             return bool(self.queue)
+        if self._macro is not None and self.nonblocking_swap:
+            self._swap_schedule()
         if self._macro_eligible():
             self._macro_decode_step(done)
         else:
@@ -172,19 +226,31 @@ class ServeEngine:
         return [s for s in range(self.n_slots) if s not in used]
 
     def _admit(self):
+        """Continuous-batching admission: admit + prefill queued
+        requests under a per-round token budget (``admit_tokens``). A
+        prompt longer than the remaining budget is CHUNK-prefilled:
+        its first chunk goes through the prefill kernel now and the
+        remainder streams through the decode scans as forced lanes, so
+        one long prompt cannot stall the decode batch for a round."""
         if not self.queue:
             return
+        budget = self.admit_tokens
         free = self._free_slots()
         while self.queue and free:
             req = self.queue[0]
             slot = free[0]
-            # on-demand allocation: admission reserves only the prompt
+            chunk = len(req.tokens)
+            if budget is not None:
+                if budget <= 0:
+                    return                  # token budget spent this round
+                chunk = min(chunk, budget)
+            # on-demand allocation: admission reserves only the chunk
             # (+prefix) pages that prefill actually writes; decode grows
             # the mapping page-by-page (batched, one fused map call per
             # step) instead of parking max_new worth of blocks up front
             n_prefix = (req.prefix_emb.shape[0]
                         if req.prefix_emb is not None else 0)
-            n_pages = -(-(len(req.tokens) + n_prefix) // self.page)
+            n_pages = -(-(chunk + n_prefix) // self.page)
             n_pages = max(1, min(n_pages, self.max_pages))
             try:
                 self.kvm.new_seq(slot, n_pages)
@@ -196,7 +262,10 @@ class ServeEngine:
             free.pop(0)
             req.slot = slot
             self.active[req.rid] = req
-            self._do_prefill(req)
+            self._resident_since[slot] = self._boundary
+            self._do_prefill(req, chunk)
+            if budget is not None:
+                budget -= chunk
 
     def _preempt(self, exclude: int) -> bool:
         """Swap the longest active sequence that still holds device
@@ -205,19 +274,10 @@ class ServeEngine:
         tier itself cannot take the blocks."""
         if self.kvm.pool.n_host == 0:
             return False
-        victims = [r for r in self.active.values()
-                   if r.slot != exclude
-                   and self.kvm.n_device_pages(r.slot) > 0]
+        victims = [r for r in self.active.values() if r.slot != exclude]
         for victim in sorted(victims, key=lambda r: self.ctx_lens[r.slot],
                              reverse=True):
-            pools = [self.caches["pool_k"], self.caches["pool_v"]]
-            try:
-                pools, moved = self.kvm.swap_out(victim.slot, pools,
-                                                 block_axis=2)
-            except OutOfBlocks:
-                continue    # doesn't fit the host tier; try a smaller one
-            self.caches["pool_k"], self.caches["pool_v"] = pools
-            if moved:
+            if self._swap_out_slot(victim.slot, check=True):
                 self.metrics["preemptions"] += 1
                 return True
         return False
@@ -232,13 +292,133 @@ class ServeEngine:
         for r in sorted(self.active.values(),
                         key=lambda r: len(self.kvm.seq_pages.get(r.slot, []))):
             if not self.kvm.is_resident(r.slot):
-                try:
-                    pools = [self.caches["pool_k"], self.caches["pool_v"]]
-                    pools, _ = self.kvm.swap_in(r.slot, pools,
-                                                block_axis=2)
-                    self.caches["pool_k"], self.caches["pool_v"] = pools
-                except OutOfBlocks:
-                    pass  # stays swapped & paused; retried next round
+                # a False return = stays swapped & paused; retried next
+                # round (same OutOfBlocks semantics as before the dedup)
+                self._swap_in_slot(r.slot, check=True)
+
+    # --------------------------------------------- boundary swap planner
+    def _growth_need(self, slot: int) -> int:
+        """Worst-case device blocks `slot` can pop during one K-step
+        scan — the same arithmetic the scan body and the reconcile
+        replay use (mirror protocol)."""
+        target = -(-(int(self.ctx_lens[slot]) + self.macro_k)
+                   // self.page)
+        return max(0, min(target, self.max_pages)
+                   - len(self.kvm.seq_pages[slot]))
+
+    def _swap_out_slot(self, slot: int, check: bool = False) -> bool:
+        """Move one slot's device pages to the host tier through the
+        fused swap jit; the ONE home for the engine's swap-out protocol
+        (pool pack + caches rebind + counters + residency stamps),
+        shared by the boundary scheduler (check=False: no readback,
+        the non-blocking mode) and the single-step preempt path
+        (check=True, the PR-3-faithful blocking guard). The slot
+        becomes a swap-pending lane — masked in the next scans — until
+        it is swapped back in."""
+        kvm = self.kvm
+        if kvm.n_device_pages(slot) == 0:
+            return False
+        pools = [self.caches["pool_k"], self.caches["pool_v"]]
+        try:
+            pools, moved = kvm.swap_out(slot, pools, block_axis=2,
+                                        check=check)
+        except OutOfBlocks:
+            return False               # host tier full: nothing moved
+        self.caches["pool_k"], self.caches["pool_v"] = pools
+        if not moved:
+            return False
+        self.metrics["swaps_out"] += 1
+        self._pending_since[slot] = self._boundary
+        return True
+
+    def _swap_in_slot(self, slot: int, check: bool = False) -> bool:
+        """Swap-out's dual: same single home, same check semantics."""
+        kvm = self.kvm
+        pools = [self.caches["pool_k"], self.caches["pool_v"]]
+        try:
+            pools, moved = kvm.swap_in(slot, pools, block_axis=2,
+                                       check=check)
+        except OutOfBlocks:
+            return False
+        self.caches["pool_k"], self.caches["pool_v"] = pools
+        if not moved:
+            return False
+        self.metrics["swaps_in"] += 1
+        self._resident_since[slot] = self._boundary
+        self._pending_since.pop(slot, None)
+        return True
+
+    def _swap_schedule(self):
+        """Boundary swap planner (DESIGN.md "Non-blocking host-tier
+        swap pipeline"): runs between macro-steps and keeps the fused
+        scan eligible — swap-pending slots become masked lanes instead
+        of dropping the engine to single-step mode. Three passes:
+
+          1. reserve — swap out victims (longest context first, like
+             ``_preempt``) until the residents' worst-case K-step
+             growth fits the free device pool;
+          2. resume — swap waiting slots back in, FIFO by the boundary
+             they were swapped out, while they fit beside the reserve;
+          3. aging — a slot pending longer than ``swap_patience``
+             boundaries evicts the longest-resident slots until it
+             fits: starvation-free rotation under sustained
+             oversubscription.
+
+        Every move is the fused donated swap with ``check=False`` —
+        the host dispatches it and keeps scheduling; nothing blocks
+        until the next token readback."""
+        kvm = self.kvm
+        if kvm.pool.n_host == 0 or not self.active:
+            return
+        self._boundary += 1
+        slots = {r.slot for r in self.active.values()}
+        residents = [s for s in slots if kvm.is_resident(s)]
+        pending = sorted((s for s in slots if not kvm.is_resident(s)),
+                         key=lambda s: self._pending_since.get(s, 0))
+        moved_now: set = set()
+
+        def cost(s):    # device blocks a swap-in consumes now + in-scan
+            return kvm.n_host_pages(s) + self._growth_need(s)
+
+        # 1. reserve: the scan must never run the device pool dry
+        total = sum(self._growth_need(s) for s in residents)
+        while total > kvm.pool.free_device and len(residents) > 1:
+            victim = max(residents, key=lambda s: int(self.ctx_lens[s]))
+            if not self._swap_out_slot(victim):
+                break
+            moved_now.add(victim)
+            residents.remove(victim)
+            pending.append(victim)
+            total = sum(self._growth_need(s) for s in residents)
+        # 2. resume FIFO while the reserve still holds
+        for s in list(pending):
+            if s in moved_now:
+                continue               # no ping-pong within one boundary
+            if cost(s) <= kvm.pool.free_device - total \
+                    and self._swap_in_slot(s):
+                moved_now.add(s)
+                pending.remove(s)
+                residents.append(s)
+                total += self._growth_need(s)
+        # 3. aging rotation: the oldest pending slot forces its way in
+        if pending and pending[0] not in moved_now:
+            oldest = pending[0]
+            waited = self._boundary - self._pending_since.get(
+                oldest, self._boundary)
+            if waited >= self.swap_patience:
+                while cost(oldest) > kvm.pool.free_device - total \
+                        and len(residents) > 1:
+                    cands = [s for s in residents if s not in moved_now]
+                    if not cands:
+                        break
+                    victim = min(cands, key=lambda s:
+                                 self._resident_since.get(s, 0))
+                    if not self._swap_out_slot(victim):
+                        break
+                    residents.remove(victim)
+                    total = sum(self._growth_need(s) for s in residents)
+                if cost(oldest) <= kvm.pool.free_device - total:
+                    self._swap_in_slot(oldest)
 
     # ------------------------------------------------------------- prefill
     def _prefill_fn(self, params, batch, caches, table_row, slot):
@@ -247,8 +427,13 @@ class ServeEngine:
                                   table_row, slot)
         return logits, caches
 
-    def _do_prefill(self, req: Request):
-        toks = jnp.asarray(req.tokens, jnp.int32)[None]
+    def _do_prefill(self, req: Request, n_chunk: Optional[int] = None):
+        """Prefill the first ``n_chunk`` prompt tokens (default: all).
+        A partial chunk leaves the rest on ``req.pending_prompt`` to
+        stream through the decode path as forced tokens; its boundary
+        prediction is discarded (the true next token is known)."""
+        n_chunk = len(req.tokens) if n_chunk is None else n_chunk
+        toks = jnp.asarray(req.tokens[:n_chunk], jnp.int32)[None]
         batch = {"tokens": toks}
         if req.prefix_emb is not None:
             batch["prefix_emb"] = req.prefix_emb[None]
@@ -258,15 +443,19 @@ class ServeEngine:
         row = self.kvm.block_tables()[req.slot]   # device slice, no sync
         logits, self.caches = self._prefill(self.params, batch, self.caches,
                                             row, req.slot)
-        n_ctx = len(req.tokens) + (req.prefix_emb.shape[0]
-                                   if req.prefix_emb is not None else 0)
+        n_ctx = n_chunk + (req.prefix_emb.shape[0]
+                           if req.prefix_emb is not None else 0)
         self.ctx_lens[req.slot] = n_ctx
         if req.src_emb is not None:
             self.src_lens[req.slot] = req.src_emb.shape[0]
-        tok = int(jnp.argmax(logits[0]))
-        req.out.append(tok)
+        if n_chunk < len(req.tokens):
+            req.pending_prompt = list(req.tokens[n_chunk:])
+            self.metrics["chunked_prefills"] += 1
+        else:
+            tok = int(jnp.argmax(logits[0]))
+            req.out.append(tok)
+            self.metrics["generated"] += 1
         self.metrics["prefills"] += 1
-        self.metrics["generated"] += 1
 
     # ------------------------------------------------------------- decode
     def _page_bucket(self, n_need: int) -> int:
@@ -360,7 +549,8 @@ class ServeEngine:
         tokens = np.zeros(self.n_slots, np.int32)
         resident_mask = np.zeros(self.n_slots, bool)
         for r in residents:
-            tokens[r.slot] = r.out[-1] if r.out else r.tokens[-1]
+            tokens[r.slot] = (r.pending_prompt[0] if r.pending_prompt
+                              else r.out[-1] if r.out else r.tokens[-1])
             resident_mask[r.slot] = True
         src_valid = None
         if self.cfg.n_enc_layers:
@@ -378,7 +568,7 @@ class ServeEngine:
 
     # ------------------------------------------------------ macro-steps
     def _macro_fn(self, params, ms, caches, cur_tok, ctx_lens, n_pages,
-                  alive, budget, src_valid=None, pages=None,
+                  alive, budget, forced, src_valid=None, pages=None,
                   simple=False):
         """K fused decode steps under ONE jit (lax.scan): per step, page
         -boundary detection -> device-side block alloc + fused map
@@ -395,10 +585,27 @@ class ServeEngine:
 
         ``simple`` (static) additionally drops the per-step retirement
         machinery: the caller guarantees no lane can finish mid-scan
-        (eos_id < 0 and every budget >= K), so the live set is the
-        input ``alive`` for the whole scan and the masked block table
-        only changes on growth steps (it rides the carry between
-        refreshes).
+        (eos_id < 0 and every budget covers the scan's emitted
+        tokens), so the live set is the input ``alive`` for the whole
+        scan and the masked block table only changes on growth steps
+        (it rides the carry between refreshes).
+
+        ``forced`` = (fmask [K,S], ftok [K,S], emit [K,S]): chunked
+        admission streams the un-prefilled remainder of a prompt
+        through the scan — where fmask, the step consumes ftok (the
+        known prompt token) instead of the carried sample, and only
+        steps with emit count against the max_new budget / EOS
+        retirement (predictions inside the prompt are discarded by the
+        host). ``forced=None`` (a separate trace, like simple/full) is
+        the steady state — no lane mid-prompt — and adds ZERO ops and
+        ZERO transfers to the scan: the macro hot path pays nothing
+        for the admission machinery.
+
+        The input ``alive`` mask is intersected with the device's own
+        ``ms.swap_pending`` residency lane: a slot whose pages sit in
+        (or are moving to) the host tier is a paused lane for the
+        whole scan — every other slot keeps decoding, which is what
+        makes swaps overlap decode instead of gating it.
 
         Returns (ms, caches, toks [K,S], oob). In full mode toks is
         NIL on lanes that emitted nothing (retired/paused); in simple
@@ -436,11 +643,19 @@ class ServeEngine:
             # [K,S] bool, grow_any [K] bool, dl_sched [K,S] int32) and
             # the scan body needs zero boundary-detection ops
             grow_sched, grow_any, dl_sched = n_pages
-            alive0 = alive
+            xs = (grow_sched, grow_any, dl_sched)
+            if forced is not None:
+                xs += forced[:2]            # (fmask, ftok); emit unused
+            # swap-pending slots are paused lanes for the whole scan
+            alive0 = alive & ~ms.swap_pending
 
             def body(carry, xs):
                 ms, caches, tok, ctx, tables = carry
-                gs, ga, dl = xs
+                if forced is None:
+                    gs, ga, dl = xs
+                else:
+                    gs, ga, dl, fm, ft = xs
+                    tok = jnp.where(fm & alive0, ft, tok)
 
                 def do_grow(ms):
                     # no lane can fail here (the host's worst-case
@@ -459,15 +674,21 @@ class ServeEngine:
                 return (ms, caches, jnp.where(alive0, nxt, 0),
                         ctx + alive0.astype(i32), tables), nxt
 
-            carry = (ms, caches, jnp.where(alive, cur_tok, 0), ctx_lens,
-                     mask_tables(ms, alive))
-            carry, toks = jax.lax.scan(
-                body, carry, (grow_sched, grow_any, dl_sched),
-                length=self.macro_k)
+            carry = (ms, caches, jnp.where(alive0, cur_tok, 0), ctx_lens,
+                     mask_tables(ms, alive0))
+            carry, toks = jax.lax.scan(body, carry, xs,
+                                       length=self.macro_k)
             return carry[0], carry[1], toks, carry[0].oob
 
-        def body(carry, _):
+        alive = alive & ~ms.swap_pending
+
+        def body(carry, xs):
             ms, caches, tok, ctx, npg, alive, bud = carry
+            if forced is None:
+                em = True
+            else:
+                fm, ft, em = xs
+                tok = jnp.where(fm & alive, ft, tok)
             need = (ctx + page) // page          # ceil((ctx+1)/page)
             grow = alive & (need > npg) & (npg < self.max_pages)
 
@@ -494,66 +715,96 @@ class ServeEngine:
                 block_table=mask_tables(ms, live), src_valid=src_valid)
             nxt = jnp.argmax(logits, axis=-1).astype(i32)
             # advance + retire finished lanes (EOS / budget) with pause
-            # semantics: frozen ctx, no growth, no tokens
+            # semantics: frozen ctx, no growth, no tokens. Only steps
+            # that EMIT (prediction past the prompt) spend budget or
+            # can retire — forced prompt steps never finish a lane.
             tok = jnp.where(live, nxt, tok)
             ctx = ctx + live.astype(i32)
-            bud = bud - live.astype(i32)
-            fin = live & ((nxt == self.eos_id) | (bud <= 0))
+            emitted = live & em
+            bud = bud - emitted.astype(i32)
+            fin = emitted & ((nxt == self.eos_id) | (bud <= 0))
             alive = alive & ~fin
             return (ms, caches, tok, ctx, npg, alive, bud), \
                 jnp.where(live, nxt, NIL)
 
         carry = (ms, caches, cur_tok, ctx_lens, n_pages, alive, budget)
-        carry, toks = jax.lax.scan(body, carry, None,
+        carry, toks = jax.lax.scan(body, carry, forced,
                                    length=self.macro_k)
         ms, caches = carry[0], carry[1]
         return ms, caches, toks, ms.oob
 
     def _macro_eligible(self) -> bool:
         """Macro-steps run only when the scan provably cannot need the
-        host mid-flight: every active slot resident, and the device
-        pool covers the worst-case K-step growth of all of them (so the
-        in-graph allocator cannot run dry — pool exhaustion falls back
-        to the single-step path, whose preempt/pause machinery needs
-        the host). Finishing mid-scan is fine (handled in-graph)."""
+        host mid-flight: the device pool covers the worst-case K-step
+        growth of every decoding lane (so the in-graph allocator
+        cannot run dry — pool exhaustion falls back to the single-step
+        path, whose preempt/pause machinery needs the host). Finishing
+        mid-scan is fine (handled in-graph). Under ``nonblocking_swap``
+        a non-resident slot is NOT a fallback: it is a swap-pending
+        lane, masked in the scan while everyone else decodes (the
+        boundary scheduler already reserved growth headroom for the
+        residents); pre-ISSUE-4 behavior required every slot
+        resident."""
         if self._macro is None or not self.active:
             return False
-        need = 0
+        need = n_res = 0
         for r in self.active.values():
             if not self.kvm.is_resident(r.slot):
-                return False
-            have = len(self.kvm.seq_pages[r.slot])
-            target = -(-(int(self.ctx_lens[r.slot]) + self.macro_k)
-                       // self.page)
-            need += max(0, min(target, self.max_pages) - have)
-        return need <= self.kvm.pool.free_device
+                if not self.nonblocking_swap:
+                    return False
+                continue        # swap-pending lane: masked, not a fallback
+            n_res += 1
+            need += self._growth_need(r.slot)
+        return n_res > 0 and need <= self.kvm.pool.free_device
 
     def _macro_decode_step(self, done: Dict[int, List[int]]):
         """Launch one K-step fused scan, then do the boundary work:
         ONE host sync (token matrix + oob flag), allocator-delta
         replay, token bookkeeping, frees."""
         self.kvm.sync_allocator()      # no-op unless the pool mutated
-        residents = list(self.active.values())
+        # swap-pending slots stay active but are NOT in the batch: they
+        # are masked lanes until the boundary scheduler resumes them
+        residents = [r for r in self.active.values()
+                     if self.kvm.is_resident(r.slot)]
+        K = self.macro_k
         tokens = np.zeros(self.n_slots, np.int32)
         alive = np.zeros(self.n_slots, bool)
         budget = np.zeros(self.n_slots, np.int32)
         npages = np.zeros(self.n_slots, np.int32)
+        pend = np.zeros(self.n_slots, np.int32)
+        fmask = np.zeros((K, self.n_slots), bool)
+        ftok = np.zeros((K, self.n_slots), np.int32)
+        emit = np.ones((K, self.n_slots), bool)
         slot2req: Dict[int, Request] = {}
         for r in residents:
-            tokens[r.slot] = r.out[-1] if r.out else r.tokens[-1]
-            alive[r.slot] = True
-            budget[r.slot] = r.max_new - len(r.out)
-            npages[r.slot] = len(self.kvm.seq_pages[r.slot])
-            slot2req[r.slot] = r
+            s = r.slot
+            tokens[s] = (r.pending_prompt[0] if r.pending_prompt
+                         else r.out[-1] if r.out else r.tokens[-1])
+            alive[s] = True
+            budget[s] = r.max_new - len(r.out)
+            npages[s] = len(self.kvm.seq_pages[s])
+            slot2req[s] = r
+            # forced lanes: steps [0, P) consume known prompt tokens;
+            # predictions before step P-1 are inside the prompt and
+            # neither emit nor spend budget
+            p = len(r.pending_prompt)
+            pend[s] = p
+            if p:
+                chunk = r.pending_prompt[:K]
+                fmask[:len(chunk), s] = True
+                ftok[:len(chunk), s] = chunk
+                emit[:min(p - 1, K), s] = False
         src_valid = None
         if self.cfg.n_enc_layers:
             src_valid = (np.arange(self.src_cap)[None, :]
                          < self.src_lens[:, None]).astype(np.int32)
         # the `simple` specialization applies when no lane can finish
         # mid-scan: without EOS the retirement machinery is dead weight
-        # on every scan step
+        # on every scan step. A forced lane only emits K - (P-1) tokens
+        # during the scan, so its budget needs to cover just that.
+        gen = K - np.maximum(pend - 1, 0)
         simple = self.eos_id < 0 and bool(
-            (budget[alive] >= self.macro_k).all())
+            (budget[alive] >= gen[alive]).all())
         if simple:
             # precompute the growth schedule the scan will follow (no
             # retirement ⟹ the live set is static ⟹ page crossings
@@ -582,20 +833,24 @@ class ServeEngine:
                                     + self.page - 1) // self.page))
             pages = self._page_bucket(int(end[alive].max()))
         MACRO_DISPATCHES[0] += 1
+        # steady state (no lane mid-prompt) uses the forced=None trace:
+        # the scan carries zero admission machinery
+        forced = (fmask, ftok, emit) if pend.any() else None
         st, self.caches, toks, oob = (
             self._macro_simple(
                 self.params, self.kvm.state, self.caches, tokens,
-                self.ctx_lens, sched, alive, budget, src_valid, pages)
+                self.ctx_lens, sched, alive, budget, forced, src_valid,
+                pages)
             if simple else
             self._macro(
                 self.params, self.kvm.state, self.caches, tokens,
-                self.ctx_lens, npages, alive, budget, src_valid, pages))
+                self.ctx_lens, npages, alive, budget, forced, src_valid,
+                pages))
         self.kvm.state = st
         HOST_SYNCS[0] += 1
         toks, oob = jax.device_get((toks, oob))
         self.metrics["macro_steps"] += 1
         if simple:
-            valid = np.broadcast_to(alive, toks.shape)
             # np.nonzero on [K,S] is row-major == the scan's step-major
             # slot-ascending pop order
             grow_seq = [int(s) for s in np.nonzero(grow_sched)[1]]
@@ -618,18 +873,28 @@ class ServeEngine:
                 ctx += live
         self.kvm.reconcile_macro(grow_seq)
         if simple:
-            # vectorized bookkeeping: every alive lane emitted exactly
-            # K tokens and none can have finished (budget >= K ... but
-            # budget == K retires at the boundary, handled below)
+            # vectorized bookkeeping: every alive lane ran all K steps
+            # and none can have finished mid-scan (the budget covered
+            # the emitted tokens; budget == emitted retires here at
+            # the boundary). A forced lane discards predictions inside
+            # its prompt: its outputs start at scan step P-1.
             self.metrics["decode_steps"] += self.macro_k
-            self.metrics["generated"] += self.macro_k * len(residents)
             for r in residents:
-                r.out.extend(int(t) for t in toks[:, r.slot])
-                self.ctx_lens[r.slot] += self.macro_k
+                s = r.slot
+                p = int(pend[s])
+                if p:
+                    del r.pending_prompt[:min(p, K)]
+                    outs = ([int(t) for t in toks[p - 1:, s]]
+                            if p <= K else [])
+                else:
+                    outs = [int(t) for t in toks[:, s]]
+                r.out.extend(outs)
+                self.metrics["generated"] += len(outs)
+                self.ctx_lens[s] += self.macro_k
                 if len(r.out) >= r.max_new:
                     done[r.rid] = r.out[:r.max_new]
-                    self.kvm.free_seq(r.slot)
-                    self.ctx_lens[r.slot] = 0
+                    self.kvm.free_seq(s)
+                    self.ctx_lens[s] = 0
                     del self.active[r.rid]
         else:
             for k in range(self.macro_k):
@@ -648,6 +913,12 @@ class ServeEngine:
         self.metrics["decode_steps"] += 1
         for r in list(residents):
             self.ctx_lens[r.slot] += 1
+            if r.pending_prompt:
+                # forced lane: the step consumed a known prompt token;
+                # its prediction only counts once the prompt is done
+                r.pending_prompt.pop(0)
+                if r.pending_prompt:
+                    continue
             tok = int(next_tok[r.slot])
             r.out.append(tok)
             self.metrics["generated"] += 1

@@ -1,0 +1,271 @@
+"""Non-blocking host-tier swap pipeline (ISSUE 4).
+
+Data-movement correctness: the fused donated jitted swap (CondUpdate
+map commits riding the single-probe translate + pool gather/scatter +
+swap_pending lane flip, one dispatch per swap) must be bit-identical
+to a host-numpy oracle that replays the same tier moves with plain
+take/set — under random interleavings of allocation churn, swaps, and
+device-side macro-step growth. Plus the residency-lane contract and
+the BENCH_serve.json schema gate used by CI's bench-smoke lane.
+"""
+import importlib.util
+import pathlib
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fmmu import batch as fb
+from repro.paging import kv_manager as KM
+from repro.paging.kv_manager import KVPageManager
+from repro.paging.pool import BlockPool, OutOfBlocks
+
+
+def _oracle_apply_swap(shadow: np.ndarray, kvm: KVPageManager,
+                       pre_pages, post_pages):
+    """Host-numpy oracle: replay one swap's tier moves on the shadow
+    pool. A page whose block id changed moved tiers; the data travels
+    from the old block's row to the new block's row (host blocks live
+    at pool.host_row(b))."""
+    row = lambda b: (kvm.pool.host_row(b) if BlockPool.is_host(b)
+                     else b)
+    src = [row(a) for a, b in zip(pre_pages, post_pages) if a != b]
+    dst = [row(b) for a, b in zip(pre_pages, post_pages) if a != b]
+    shadow[dst] = shadow[src]
+
+
+def test_fused_swap_bit_identical_to_oracle_roundtrip():
+    """One swap_out + swap_in cycle: the jitted pipeline's pool bytes
+    equal the numpy oracle's, the map commits are CondUpdate-guarded,
+    and the swap_pending lane flips with the data."""
+    kvm = KVPageManager(n_slots=2, max_pages=4, n_device_blocks=4,
+                        n_host_blocks=4)
+    kvm.swap_pad = 4      # pinned lane pad: one compiled fn, idempotent
+    kvm.new_seq(0, 3)     # pad moves (3 real lanes padded to 4)
+    pool = jnp.arange((4 + 4 + 1) * 5.0).reshape(9, 5)
+    shadow = np.array(pool)
+    for direction in ("out", "in"):
+        pre = list(kvm.seq_pages[0])
+        if direction == "out":
+            [pool], n = kvm.swap_out(0, [pool])
+            assert bool(np.asarray(kvm.state.swap_pending)[0])
+        else:
+            [pool], n = kvm.swap_in(0, [pool])
+            assert not bool(np.asarray(kvm.state.swap_pending)[0])
+        assert n == 3
+        _oracle_apply_swap(shadow, kvm, pre, kvm.seq_pages[0])
+        np.testing.assert_array_equal(np.asarray(pool), shadow,
+                                      f"swap_{direction}")
+    # table agrees with the from-scratch oracle after the round trip
+    np.testing.assert_array_equal(np.asarray(kvm.block_tables()),
+                                  np.asarray(kvm.retranslate_tables()))
+
+
+@pytest.mark.slow
+def test_swap_oracle_equivalence_random_interleavings():
+    """ISSUE-4 property test: under a random interleaving of
+    new/extend/free/swap_out/swap_in and device-side macro-step growth
+    (serving_grow + reconcile_macro, the scan's allocation path), the
+    jitted swap pipeline keeps the pool tensor bit-identical to the
+    host-numpy oracle, the incremental table bit-identical to the
+    retranslation oracle, and the allocator mirror exact."""
+    import functools
+
+    rng = random.Random(11)
+    n_slots, max_pages = 4, 6
+    kvm = KVPageManager(n_slots, max_pages, n_device_blocks=16,
+                        n_host_blocks=10)
+    n_rows = 16 + 10 + 1
+    pool = jnp.arange(n_rows * 3.0).reshape(n_rows, 3)
+    shadow = np.array(pool)
+    grow_fn = jax.jit(functools.partial(fb.serving_grow, kvm.geom),
+                      donate_argnums=(0,))
+    live = set()
+    for step in range(120):
+        ops = ["new"] if len(live) < n_slots else []
+        if live:
+            ops += ["extend", "free", "swap_out", "swap_in", "macro"]
+        op = rng.choice(ops)
+        try:
+            if op == "new":
+                slot = rng.choice([s for s in range(n_slots)
+                                   if s not in live])
+                kvm.new_seq(slot, rng.randint(1, 3))
+                live.add(slot)
+            elif op == "extend":
+                slot = rng.choice(sorted(live))
+                room = max_pages - len(kvm.seq_pages[slot])
+                if room:
+                    kvm.extend_seq(slot, rng.randint(1, room))
+            elif op == "free":
+                slot = rng.choice(sorted(live))
+                kvm.free_seq(slot)
+                live.discard(slot)
+            elif op in ("swap_out", "swap_in"):
+                slot = rng.choice(sorted(live))
+                pre = list(kvm.seq_pages[slot])
+                fn = kvm.swap_out if op == "swap_out" else kvm.swap_in
+                [pool], _ = fn(slot, [pool],
+                               check=rng.random() < 0.5)
+                _oracle_apply_swap(shadow, kvm, pre,
+                                   kvm.seq_pages[slot])
+            else:   # macro: device-side growth, host replays at the
+                    # boundary exactly like the engine does
+                slots = [s for s in sorted(live)
+                         if kvm.is_resident(s)
+                         and len(kvm.seq_pages[s]) < max_pages]
+                if not slots or kvm.pool.free_device < len(slots):
+                    continue
+                kvm.sync_allocator()
+                grow = np.zeros(len(slots), bool)
+                dl = np.zeros(len(slots), np.int32)
+                for i, s in enumerate(slots):
+                    grow[i] = True
+                    dl[i] = s * max_pages + len(kvm.seq_pages[s])
+                kvm.state, _, ok = grow_fn(kvm.state, grow, dl)
+                assert bool(np.asarray(ok).all())
+                kvm.reconcile_macro(list(slots))
+        except OutOfBlocks:
+            pass
+        np.testing.assert_array_equal(np.asarray(pool), shadow,
+                                      f"step {step}: pool diverged "
+                                      "from the numpy oracle")
+        if step % 15 == 14:
+            np.testing.assert_array_equal(
+                np.asarray(kvm.block_tables()),
+                np.asarray(kvm.retranslate_tables()), f"step {step}")
+            kvm.sync_allocator()
+            st = kvm.state
+            assert int(st.free_n) == kvm.pool.free_device
+            np.testing.assert_array_equal(
+                np.asarray(st.free_stack[:int(st.free_n)]),
+                np.asarray(kvm.pool._free_dev, np.int32))
+
+
+def test_swap_pending_lane_tracks_residency():
+    """The ServingMapState.swap_pending lane is the device's view of
+    host-tier residency: set by swap_out, cleared by swap_in, and
+    refreshed from host bookkeeping by sync_allocator after a
+    host-side free of a swapped-out slot."""
+    kvm = KVPageManager(n_slots=3, max_pages=4, n_device_blocks=8,
+                        n_host_blocks=8)
+    pool = jnp.zeros((8 + 8 + 1, 2))
+    kvm.new_seq(0, 2)
+    kvm.new_seq(1, 2)
+    lanes = lambda: list(np.asarray(kvm.state.swap_pending))
+    assert lanes() == [False, False, False]
+    [pool], _ = kvm.swap_out(1, [pool])
+    assert lanes() == [False, True, False]
+    assert not kvm.is_resident(1)       # host predicate agrees
+    [pool], _ = kvm.swap_out(0, [pool])
+    [pool], _ = kvm.swap_in(1, [pool])
+    assert lanes() == [True, False, False]
+    # free a swapped-out slot host-side: the lane goes stale until the
+    # (always-following) allocator sync refreshes it
+    kvm.free_seq(0)
+    assert kvm._alloc_dirty
+    kvm.sync_allocator()
+    assert lanes() == [False, False, False]
+
+
+def test_swap_is_one_fused_call_and_nonblocking_path():
+    """A swap is exactly ONE fused map call (XLATE_CALLS += 1) and
+    with check=False performs no guard-mask readback the caller could
+    block on; hit_stats surfaces the tier activity (ISSUE-4: the
+    zero-fallback/swap claims are counter-assertable)."""
+    kvm = KVPageManager(n_slots=2, max_pages=4, n_device_blocks=4,
+                        n_host_blocks=4)
+    kvm.new_seq(0, 3)
+    pool = jnp.zeros((4 + 4 + 1, 2))
+    x0 = KM.XLATE_CALLS[0]
+    [pool], n = kvm.swap_out(0, [pool], check=False)
+    assert n == 3
+    assert KM.XLATE_CALLS[0] - x0 == 1
+    st = kvm.hit_stats()
+    assert st["swaps_out"] == 3 and st["swaps_in"] == 0
+    assert st["host_resident_slots"] == 1
+    [pool], _ = kvm.swap_in(0, [pool], check=False)
+    assert KM.XLATE_CALLS[0] - x0 == 2
+    st = kvm.hit_stats()
+    assert st["swaps_in"] == 3 and st["host_resident_slots"] == 0
+
+
+# ---------------------------------------------------------------------
+# BENCH_serve.json schema gate (benchmarks/check_bench_json.py): CI
+# hard-fails on malformed/missing artifacts; validate both directions.
+# ---------------------------------------------------------------------
+def _load_checker():
+    root = pathlib.Path(__file__).resolve().parents[1]
+    spec = importlib.util.spec_from_file_location(
+        "check_bench_json", root / "benchmarks" / "check_bench_json.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _valid_doc():
+    modes = ("fused_macro", "single_step", "incremental",
+             "rebuild_legacy", "oversub_fused", "oversub_fallback")
+    return {
+        "bench": "serve_decode", "n_slots": 16, "max_pages": 64,
+        "macro_k": 8, "steps_timed": 24, "repeats": 2,
+        "steps_per_sec": {m: 100.0 for m in modes},
+        "dispersion": {m: {"median": 100.0, "min": 90.0, "iqr": 5.0,
+                           "windows": [99.0, 101.0]} for m in modes},
+        "speedups": {"fused_macro_vs_incremental": 2.0,
+                     "fused_macro_vs_single_step": 1.5,
+                     "single_step_vs_incremental": 1.4,
+                     "incremental_vs_rebuild": 2.0,
+                     "oversub_fused_vs_fallback": 1.5},
+        "oversubscription": {
+            "prompt_len": 80, "max_new": 48, "n_device_blocks": 76,
+            "n_host_blocks": 640,
+            "tokens_per_sec": {"oversub_fused": 900.0,
+                               "oversub_fallback": 600.0},
+            "modes": {m: {"macro_steps": 10, "macro_fallbacks": 0,
+                          "swaps_out": 4, "swaps_in": 4}
+                      for m in ("oversub_fused", "oversub_fallback")},
+        },
+    }
+
+
+def test_bench_schema_accepts_valid_and_rejects_malformed(tmp_path):
+    chk = _load_checker()
+    chk.check(_valid_doc())                      # no raise
+
+    import json
+    good = tmp_path / "BENCH_serve.json"
+    good.write_text(json.dumps(_valid_doc()))
+    hist = tmp_path / "hist.jsonl"
+    assert chk.main([str(good), "--append-history", str(hist)]) == 0
+    line = json.loads(hist.read_text())
+    assert line["speedups"]["oversub_fused_vs_fallback"] == 1.5
+    assert line["oversub_fallbacks"]["oversub_fused"] == 0
+    assert line["oversub_tokens_per_sec"]["oversub_fused"] == 900.0
+
+    # missing file and invalid JSON hard-fail
+    assert chk.main([str(tmp_path / "nope.json")]) == 1
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert chk.main([str(bad)]) == 1
+
+    # structural mutations every gate must catch
+    def broken(mutate):
+        doc = _valid_doc()
+        mutate(doc)
+        with pytest.raises(chk.SchemaError):
+            chk.check(doc)
+
+    broken(lambda d: d.pop("speedups"))
+    broken(lambda d: d["speedups"].pop("oversub_fused_vs_fallback"))
+    broken(lambda d: d["steps_per_sec"].pop("oversub_fused"))
+    broken(lambda d: d["steps_per_sec"].update(fused_macro="fast"))
+    broken(lambda d: d["dispersion"]["fused_macro"].pop("windows"))
+    broken(lambda d: d["dispersion"]["fused_macro"].update(windows=[1.0]))
+    broken(lambda d: d["oversubscription"]["modes"].pop("oversub_fused"))
+    broken(lambda d: d["oversubscription"]["modes"]["oversub_fused"]
+           .update(macro_fallbacks="none"))
+    broken(lambda d: d["oversubscription"]["tokens_per_sec"]
+           .pop("oversub_fallback"))
