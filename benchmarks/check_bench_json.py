@@ -52,7 +52,7 @@ def check(doc: dict) -> None:
     _req(isinstance(doc, dict), "top level is not an object")
     for key in ("bench", "n_slots", "max_pages", "macro_k",
                 "steps_timed", "repeats", "steps_per_sec", "dispersion",
-                "speedups", "oversubscription"):
+                "speedups", "oversubscription", "channel_scaling"):
         _req(key in doc, f"missing top-level key {key!r}")
     _req(doc["bench"] == "serve_decode",
          f"bench is {doc['bench']!r}, expected 'serve_decode'")
@@ -98,6 +98,56 @@ def check(doc: dict) -> None:
             _req(isinstance(counters.get(key), int),
                  f"oversubscription.modes[{mode!r}].{key} "
                  "is not an int")
+    # ISSUE-5: the channel-scaling sweep must record every swept N, the
+    # N8-vs-N1 headline, the CPU-bound caveat flag, and the per-channel
+    # routed-lane counters that carry the 1/N claim on CPU-bound hosts
+    cs = doc["channel_scaling"]
+    for key in ("channels", "device_count", "cpu_bound",
+                "steps_per_sec", "dispersion", "speedup_n8_vs_n1",
+                "per_channel_lanes"):
+        _req(key in cs, f"channel_scaling missing {key!r}")
+    _req(isinstance(cs["channels"], list) and cs["channels"]
+         and all(isinstance(n, int) and n > 0 for n in cs["channels"]),
+         "channel_scaling.channels is not a positive-int list")
+    # the headline key is literally n8-vs-n1: a trimmed sweep must not
+    # silently record a mislabeled ratio under the unchanged name
+    _req(1 in cs["channels"] and 8 in cs["channels"],
+         "channel_scaling.channels must include 1 and 8 (the "
+         "speedup_n8_vs_n1 endpoints)")
+    _req(isinstance(cs["cpu_bound"], bool),
+         "channel_scaling.cpu_bound is not a bool")
+    _req(isinstance(cs["device_count"], int) and cs["device_count"] > 0,
+         "channel_scaling.device_count is not a positive int")
+    _req(_num(cs["speedup_n8_vs_n1"]) and cs["speedup_n8_vs_n1"] > 0,
+         "channel_scaling.speedup_n8_vs_n1 is not a positive number")
+    for n in cs["channels"]:
+        key = f"n{n}"
+        _req(_num(cs["steps_per_sec"].get(key))
+             and cs["steps_per_sec"][key] > 0,
+             f"channel_scaling.steps_per_sec[{key!r}] "
+             "is not a positive number")
+        d = cs["dispersion"].get(key)
+        _req(isinstance(d, dict), f"channel_scaling.dispersion missing "
+             f"{key!r}")
+        for k in DISPERSION_KEYS:
+            _req(k in d, f"channel_scaling.dispersion[{key!r}] "
+                 f"missing {k!r}")
+        _req(isinstance(d["windows"], list) and d["windows"]
+             and all(_num(w) for w in d["windows"]),
+             f"channel_scaling.dispersion[{key!r}].windows is not a "
+             "number list")
+        _req(len(d["windows"]) == doc["repeats"],
+             f"channel_scaling.dispersion[{key!r}] has "
+             f"{len(d['windows'])} windows, expected "
+             f"repeats={doc['repeats']}")
+        if n > 1:
+            lanes = cs["per_channel_lanes"].get(key)
+            _req(isinstance(lanes, list) and len(lanes) == n
+                 and all(isinstance(x, int) and x >= 0 for x in lanes)
+                 and sum(lanes) > 0,
+                 f"channel_scaling.per_channel_lanes[{key!r}] is not "
+                 f"a length-{n} non-negative int list with a positive "
+                 "sum")
 
 
 def history_line(doc: dict) -> dict:
@@ -106,6 +156,9 @@ def history_line(doc: dict) -> dict:
         "sha": os.environ.get("GITHUB_SHA", "local"),
         "steps_per_sec": doc["steps_per_sec"],
         "speedups": doc["speedups"],
+        "channel_speedup_n8_vs_n1":
+            doc["channel_scaling"]["speedup_n8_vs_n1"],
+        "channel_cpu_bound": doc["channel_scaling"]["cpu_bound"],
         "oversub_tokens_per_sec": doc["oversubscription"]["tokens_per_sec"],
         "oversub_fallbacks": {
             mode: counters["macro_fallbacks"]

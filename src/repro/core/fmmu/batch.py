@@ -392,6 +392,210 @@ def translate_serving(g: FMMUGeometry, ms: ServingMapState, opcodes,
     return ms._replace(fmmu=st, table=table), out, ok
 
 
+# ----------------------------------------------- channel-sharded wrapper
+# ISSUE-5: the paper's headline claim is that the FMMU scales to a
+# 32-channel / 8-way SSD because translation state is partitioned per
+# channel. The serving adaptation stripes the logical page space across
+# N channels with a STATIC hash (owner(dlpn) = dlpn mod C — the paper's
+# channel-striping) and gives each channel its own complete
+# ServingMapState shard: a 1/C-sized CMT, a 1/C-sized backing table, a
+# 1/C slice of the incremental block table, and the free stacks of the
+# blocks that channel owns (block b belongs to channel b mod C, so a
+# page and the physical block backing it always live in the same
+# channel). Every per-channel transition is the UNCHANGED single-probe
+# fused pipeline above — sharding composes around it, never inside it.
+#
+# A sharded state is an ordinary ServingMapState whose leaves carry a
+# leading [C] channel axis, so the same pytree runs under jax.vmap
+# (single device: the portable lowering, bit-identical by construction)
+# or under shard_map over a 'channel' mesh axis (one shard per device;
+# the cross-channel combine becomes a psum). Lane results merge with
+# the +1 trick: exactly one channel owns each active lane, NIL is -1,
+# so sum_c(own_c ? out_c + 1 : 0) - 1 reconstructs the owner's answer
+# (and NIL for lanes no channel owns). DESIGN.md "Channel-sharded map
+# pipeline".
+
+
+def channel_of(dlpns, n_channels: int):
+    """Static dlpn -> channel hash (the paper's channel-striping)."""
+    return jnp.mod(dlpns, n_channels)
+
+
+def local_dlpn(dlpns, n_channels: int):
+    """Channel-local logical page id of a global dlpn."""
+    return dlpns // n_channels
+
+
+def channel_stack(n_blocks: int, n_channels: int, c: int, cap: int,
+                  base: int = 0):
+    """Free-stack init for one channel: the blocks it owns (global id
+    mod C == c), in per-channel BlockPool order (list(range)[::-1]
+    filtered to the channel: first pop yields block base+c), padded to
+    the channel-uniform capacity `cap` with NIL."""
+    import numpy as np
+    owned = np.asarray([base + b for b in range(n_blocks)
+                        if b % n_channels == c][::-1], np.int32)
+    out = np.full((cap,), NIL, np.int32)
+    out[:owned.shape[0]] = owned
+    return out, owned.shape[0]
+
+
+def init_sharded_state(g: FMMUGeometry, n_channels: int,
+                       n_device_blocks: int = 0, n_host_blocks: int = 0,
+                       n_lanes: int = 0) -> ServingMapState:
+    """Stack C per-channel ServingMapStates into one pytree with a
+    leading channel axis. `g` is the PER-CHANNEL geometry (its dlpn
+    space covers ceil(n_dlpns / C) local pages). Device/host blocks are
+    striped by block id mod C; stack capacities are channel-uniform
+    (ceil(n / C)) so the leaves stack rectangularly."""
+    import numpy as np
+    C = n_channels
+    dev_cap = -(-n_device_blocks // C) if n_device_blocks else 0
+    host_cap = -(-n_host_blocks // C) if n_host_blocks else 0
+    dev_stacks, dev_ns, host_stacks, host_ns = [], [], [], []
+    for c in range(C):
+        s, n = channel_stack(n_device_blocks, C, c, dev_cap)
+        dev_stacks.append(s)
+        dev_ns.append(n)
+        s, n = channel_stack(n_host_blocks, C, c, host_cap,
+                             base=HOST_BASE)
+        host_stacks.append(s)
+        host_ns.append(n)
+    one = init_serving_state(g, 0, 0, n_lanes=n_lanes)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), one)
+    return stacked._replace(
+        free_stack=jnp.asarray(np.stack(dev_stacks), I),
+        free_n=jnp.asarray(dev_ns, I),
+        host_stack=jnp.asarray(np.stack(host_stacks), I),
+        host_n=jnp.asarray(host_ns, I))
+
+
+def _sharded_translate_body(g: FMMUGeometry, C: int, c, ms_c, opcodes,
+                            dlpns, dppns, old_dppns, impl=None):
+    """One channel's slice of a mixed-op batch: mask lanes to the ones
+    this channel owns, run the UNCHANGED fused single-probe pipeline on
+    channel-local dlpns, and return +1-encoded combine contributions
+    (summed across channels by vmap or psum'd under shard_map)."""
+    active = dlpns >= 0
+    own = active & (channel_of(dlpns, C) == c)
+    dl = jnp.where(own, local_dlpn(dlpns, C), -1).astype(I)
+    ms_c, out, ok = translate_serving(g, ms_c, opcodes, dl, dppns,
+                                      old_dppns, impl=impl)
+    return (ms_c, jnp.where(own, out + 1, 0).astype(I),
+            jnp.where(own, ok, False))
+
+
+def translate_sharded(g: FMMUGeometry, C: int, ms: ServingMapState,
+                      opcodes, dlpns, dppns, old_dppns, impl=None
+                      ) -> Tuple[ServingMapState, jnp.ndarray, jnp.ndarray]:
+    """Channel-sharded ``translate_serving`` (portable vmap lowering).
+
+    ms leaves carry a leading [C] axis; each channel services exactly
+    the lanes it owns with ONE local probe + ONE local insert pass (the
+    per-channel single-probe/single-sort contract) and the per-lane
+    results merge by summation — exactly one channel contributes per
+    active lane. ``make_sharded_shard_body`` is the same body arranged
+    for shard_map over a device mesh; both lowerings are bit-identical
+    (the combine is the same sum)."""
+    def body(c, ms_c):
+        return _sharded_translate_body(g, C, c, ms_c, opcodes, dlpns,
+                                       dppns, old_dppns, impl=impl)
+
+    ms, outs, oks = jax.vmap(body)(jnp.arange(C, dtype=I), ms)
+    return ms, outs.sum(0) - 1, oks.sum(0) > 0
+
+
+def make_sharded_shard_body(g: FMMUGeometry, C: int, axis: str = "channel",
+                            impl=None):
+    """translate_sharded arranged as a shard_map body: the state shard
+    arrives with a leading [1] slice of the channel axis, the lane
+    arrays are replicated, and the combine is a psum over the mesh
+    axis. Wrap with parallel.sharding.shard_map(mesh=..., in_specs=
+    (P(axis), P(), P(), P(), P()), out_specs=(P(axis), P(), P()))."""
+    def body(ms, opcodes, dlpns, dppns, old_dppns):
+        c = jax.lax.axis_index(axis).astype(I)
+        ms_c = jax.tree.map(lambda x: x[0], ms)
+        ms_c, out_c, ok_c = _sharded_translate_body(
+            g, C, c, ms_c, opcodes, dlpns, dppns, old_dppns, impl=impl)
+        out = jax.lax.psum(out_c, axis) - 1
+        ok = jax.lax.psum(ok_c.astype(I), axis) > 0
+        return jax.tree.map(lambda x: x[None], ms_c), out, ok
+
+    return body
+
+
+def grow_sharded(g: FMMUGeometry, C: int, ms: ServingMapState, grow,
+                 dlpns, impl=None
+                 ) -> Tuple[ServingMapState, jnp.ndarray, jnp.ndarray]:
+    """Channel-sharded ``serving_grow``: each growth lane pops from its
+    OWNER channel's free stack (block and page stay in one channel) and
+    commits through that channel's fused translate. Combine uses the
+    same +1 encoding (blocks are >= 0, NIL on fail)."""
+    def body(c, ms_c):
+        own = grow & (channel_of(dlpns, C) == c)
+        dl = jnp.where(own, local_dlpn(dlpns, C), -1).astype(I)
+        ms_c, blocks, ok = serving_grow(g, ms_c, own, dl, impl=impl)
+        return (ms_c, jnp.where(own & ok, blocks + 1, 0).astype(I),
+                jnp.where(own, ok, False))
+
+    ms, blks, oks = jax.vmap(body)(jnp.arange(C, dtype=I), ms)
+    return ms, blks.sum(0) - 1, oks.sum(0) > 0
+
+
+def set_allocator_sharded(ms: ServingMapState, free_stack, free_n,
+                          host_stack, host_n, swap_pending=None
+                          ) -> ServingMapState:
+    """``set_allocator`` on a channel-stacked state: tier stacks arrive
+    as [C, cap] arrays (one row per channel, host pool order), the
+    per-channel OutOfBlocks flags clear, and the (replicated) residency
+    lane refreshes across every channel's copy."""
+    C = ms.oob.shape[0]
+    sp = ms.swap_pending
+    if swap_pending is not None:
+        sp = jnp.broadcast_to(jnp.asarray(swap_pending, bool)[None],
+                              ms.swap_pending.shape)
+    return ms._replace(
+        free_stack=jnp.asarray(free_stack, I),
+        free_n=jnp.asarray(free_n, I),
+        host_stack=jnp.asarray(host_stack, I),
+        host_n=jnp.asarray(host_n, I),
+        oob=jnp.zeros((C,), bool),
+        swap_pending=sp)
+
+
+def mark_swap_sharded(ms: ServingMapState, lane, pending
+                      ) -> ServingMapState:
+    """``mark_swap`` on a channel-stacked state: the residency lane is
+    replicated per channel (every shard masks the same slots), so the
+    flip lands in all channels' copies."""
+    return ms._replace(
+        swap_pending=ms.swap_pending.at[:, lane].set(pending))
+
+
+def interleave_table(table, n: int) -> jnp.ndarray:
+    """THE one home of the shard-interleave layout: a [C, L] stack of
+    per-channel table shards flattens to global dlpn order (global d
+    lives at shard [d mod C, d // C], so the transpose IS the
+    cross-channel all-gather under a mesh; on one device it is a cheap
+    relayout). A flat [L] table (unstacked, channels=1) passes through
+    with a slice. Every consumer of the striping layout — dense_table,
+    the serving engine's decode paths, the sharded retranslation
+    oracle — must go through here."""
+    if table.ndim == 1:
+        return table[:n]
+    return table.T.reshape(-1)[:n]
+
+
+def dense_table(ms: ServingMapState, C: int, n: int) -> jnp.ndarray:
+    """Materialize the global block table from a (possibly channel-
+    stacked) serving state — ``interleave_table`` on ``ms.table``.
+    Handles a C=1 *stacked* state ([1, L]) correctly too: the branch is
+    on the table's rank, not on C."""
+    del C  # layout is carried by the table's rank
+    return interleave_table(ms.table, n)
+
+
 # ------------------------------------------------------------ wrappers
 def lookup_batch(g: FMMUGeometry, st: BatchFMMUState, dlpns,
                  impl=None) -> Tuple[BatchFMMUState, jnp.ndarray]:

@@ -37,6 +37,20 @@ correctness). Swap lane counts are padded to the next power of two so
 the jit re-traces O(log max_pages) times, not once per distinct swap
 size. DESIGN.md "Non-blocking host-tier swap pipeline".
 
+ISSUE-5 channel sharding: ``channels=N`` partitions the whole map
+state by the static hash ``channel(dlpn) = dlpn mod N`` — each channel
+holds a complete 1/N-sized ServingMapState shard (CMT, backing, table
+slice, the free stacks of the blocks it owns: block ``b`` belongs to
+channel ``b mod N``) stacked on a leading [C] pytree axis, and every
+fused entry above runs as ONE sharded translate (shard_map over a
+'channel' mesh when >= C devices are visible, else a bit-identical
+jax.vmap). The pool free lists stripe per channel the same way
+(``BlockPool(n_channels=N)``), macro-scan growth is pre-committed at
+the boundary (``precommit_growth``) so the scan needs no in-graph
+allocator, and ``block_tables()`` interleaves the shards back to
+global order (the boundary all-gather). DESIGN.md "Channel-sharded
+map pipeline". ``channels=1`` (default) bypasses every sharded branch.
+
 ISSUE-3 allocator mirror: the FMMU serving state carries a
 device-resident free-list allocator (decode macro-steps allocate KV
 blocks without leaving the jit). The host ``BlockPool`` stays
@@ -79,8 +93,13 @@ def _move_rows(pool, src, dst, axis: int):
     return jnp.moveaxis(pm, 0, axis)
 
 
-def _geometry(n_slots: int, max_pages: int) -> FMMUGeometry:
-    n_dlpns = n_slots * max_pages
+def _geometry(n_slots: int, max_pages: int,
+              channels: int = 1) -> FMMUGeometry:
+    """Map geometry sized for one channel's shard: with C channels each
+    shard owns ceil(n_dlpns / C) logical pages, so its CMT and backing
+    table are 1/C-sized — the paper's per-channel FMMU partitioning
+    (translate work per channel scales as 1/N)."""
+    n_dlpns = -(-n_slots * max_pages // channels)
     ept = max(64, min(4096, max_pages))
     return FMMUGeometry(
         cmt_sets=max(8, min(512, n_dlpns // 64)),
@@ -97,14 +116,57 @@ class KVPageManager:
     """Host-driven control plane; device-resident map + pools."""
 
     def __init__(self, n_slots: int, max_pages: int, n_device_blocks: int,
-                 n_host_blocks: int = 0):
+                 n_host_blocks: int = 0, channels: int = 1,
+                 use_mesh: Optional[bool] = None):
         self.n_slots = n_slots
         self.max_pages = max_pages
-        self.geom = _geometry(n_slots, max_pages)
+        self.channels = C = int(channels)
+        self.geom = _geometry(n_slots, max_pages, C)
         self.fns = fb.make_jitted(self.geom)
-        self.state = fb.init_serving_state(self.geom, n_device_blocks,
-                                           n_host_blocks, n_lanes=n_slots)
-        self.pool = BlockPool(n_device_blocks, n_host_blocks)
+        # ISSUE-5 channel sharding: with channels > 1 the map state is C
+        # per-channel ServingMapState shards stacked on a leading axis
+        # (each shard: 1/C-sized CMT + backing + table slice + the free
+        # stacks of the blocks its channel owns). Requests route by the
+        # static hash owner(dlpn) = dlpn mod C; every fused map call
+        # goes through ONE sharded translate (each channel keeps the
+        # single-probe/single-sort contract locally). The lowering is
+        # shard_map over a 'channel' mesh axis when the process has >= C
+        # devices (use_mesh=None auto-detects; CI's tier1-sharded lane
+        # forces 8 host devices), else jax.vmap — both bit-identical.
+        self.mesh = None
+        if C > 1:
+            self.state = fb.init_sharded_state(
+                self.geom, C, n_device_blocks, n_host_blocks,
+                n_lanes=n_slots)
+            if use_mesh is None:
+                use_mesh = len(jax.devices()) >= C
+            if use_mesh:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+
+                from repro.parallel.sharding import channel_mesh, shard_map
+                self.mesh = channel_mesh(C)
+                self._xlate_graph = shard_map(
+                    fb.make_sharded_shard_body(self.geom, C),
+                    mesh=self.mesh,
+                    in_specs=(P("channel"), P(), P(), P(), P()),
+                    out_specs=(P("channel"), P(), P()))
+                self.state = jax.device_put(
+                    self.state, NamedSharding(self.mesh, P("channel")))
+            else:
+                self._xlate_graph = functools.partial(
+                    fb.translate_sharded, self.geom, C)
+            self._serve_sharded = jax.jit(self._xlate_graph,
+                                          donate_argnums=(0,))
+            # per-channel routed-lane counters: the 1/N-translate-work
+            # claim is asserted from these, not inferred from timings
+            self.channel_lanes = np.zeros(C, np.int64)
+        else:
+            self.state = fb.init_serving_state(
+                self.geom, n_device_blocks, n_host_blocks,
+                n_lanes=n_slots)
+            self.channel_lanes = np.zeros(1, np.int64)
+        self.pool = BlockPool(n_device_blocks, n_host_blocks,
+                              n_channels=C)
         self.seq_pages: Dict[int, List[int]] = {}   # slot -> block ids
         # host-tier page count per slot, maintained by the swap ops so
         # the per-step residency predicate is O(1), not a page-list scan
@@ -118,10 +180,19 @@ class KVPageManager:
         # — both sides applied the same delta, so the mirror holds and
         # steady-state decode needs zero sync pushes.
         self._alloc_dirty = False
-        self._retrans_fn = jax.jit(
-            functools.partial(self._retranslate, self.geom),
-            static_argnums=(1, 2), donate_argnums=(0,))
-        self._set_alloc = jax.jit(fb.set_allocator, donate_argnums=(0,))
+        if C > 1:
+            self._retrans_fn = jax.jit(
+                functools.partial(self._retranslate_sharded, self.geom,
+                                  C, n_slots, max_pages),
+                donate_argnums=(0,))
+            self._set_alloc = jax.jit(fb.set_allocator_sharded,
+                                      donate_argnums=(0,))
+        else:
+            self._retrans_fn = jax.jit(
+                functools.partial(self._retranslate, self.geom),
+                static_argnums=(1, 2), donate_argnums=(0,))
+            self._set_alloc = jax.jit(fb.set_allocator,
+                                      donate_argnums=(0,))
         # fused swap jits, cached per (padded lane count, block axis,
         # pool count): state + pools donated, re-traced O(log) times.
         # swap_pad (optional) pins a fixed lane count instead of the
@@ -138,9 +209,9 @@ class KVPageManager:
                           np.int32)
 
     def _xlate(self, kind: int, dlpns, dppns, olds=None):
-        """Single fused map entry: one translate_serving call (one
-        probe, one insert, incremental table scatter) services the
-        whole op batch; state is donated and rebound."""
+        """Single fused map entry: one translate call (one probe, one
+        insert, incremental table scatter — PER CHANNEL when sharded)
+        services the whole op batch; state is donated and rebound."""
         XLATE_CALLS[0] += 1
         # numpy in, jit transfers: cheaper than explicit device_puts
         dl = np.asarray(dlpns, np.int32)
@@ -148,9 +219,26 @@ class KVPageManager:
         dp = np.asarray(dppns, np.int32)
         od = (np.zeros(dl.shape, np.int32) if olds is None
               else np.asarray(olds, np.int32))
-        self.state, out, ok = self.fns["serve"](self.state, opc, dl,
-                                                dp, od)
+        if self.channels > 1:
+            self.channel_lanes += np.bincount(
+                dl[dl >= 0] % self.channels, minlength=self.channels)
+            self.state, out, ok = self._serve_sharded(self.state, opc,
+                                                      dl, dp, od)
+        else:
+            self.channel_lanes[0] += int((dl >= 0).sum())
+            self.state, out, ok = self.fns["serve"](self.state, opc, dl,
+                                                    dp, od)
         return out, ok
+
+    def _alloc_blocks(self, dlpns, *, host: bool = False):
+        """Pool allocation for a batch of dlpns: channel-agnostic pops
+        at channels=1 (the legacy path, bit-identical), per-owner-
+        channel pops otherwise — page and backing block always share a
+        channel, so each channel's device stack mirror stays exact."""
+        if self.channels == 1:
+            return self.pool.alloc(len(dlpns), host=host)
+        return self.pool.alloc_for(
+            [int(d) % self.channels for d in dlpns], host=host)
 
     @staticmethod
     def _retranslate(geom, fmmu, n_slots, max_pages):
@@ -159,12 +247,27 @@ class KVPageManager:
         fmmu, out = fb.lookup_batch(geom, fmmu, dl)
         return fmmu, out.reshape(n_slots, max_pages)
 
+    @staticmethod
+    def _retranslate_sharded(geom, C, n_slots, max_pages, fmmu):
+        """Sharded retranslation oracle: every channel looks up all of
+        its local dlpns, and the per-channel results interleave back to
+        the global order (global dlpn d = local l * C + channel c)."""
+
+        def body(fm):
+            L = geom.n_tvpns * geom.entries_per_tp
+            return fb.lookup_batch(geom, fm,
+                                   jnp.arange(L, dtype=jnp.int32))
+
+        fmmu, outs = jax.vmap(body)(fmmu)
+        flat = fb.interleave_table(outs, n_slots * max_pages)
+        return fmmu, flat.reshape(n_slots, max_pages)
+
     # ----------------------------------------------------------- API
     def new_seq(self, slot: int, n_pages: int) -> List[int]:
         assert slot not in self.seq_pages, f"slot {slot} busy"
-        blocks = self.pool.alloc(n_pages)
-        self._alloc_dirty = True
         dl = self._dlpns(slot, range(n_pages))
+        blocks = self._alloc_blocks(dl)
+        self._alloc_dirty = True
         self._xlate(UPDATE, dl, blocks)
         self.seq_pages[slot] = list(blocks)
         return blocks
@@ -185,7 +288,7 @@ class KVPageManager:
             have = len(self.seq_pages[slot])    # KeyError leaks nothing
             dl.extend(slot * self.max_pages + p
                       for p in range(have, have + n))
-        blocks = self.pool.alloc(len(dl))
+        blocks = self._alloc_blocks(dl)
         self._alloc_dirty = True
         got: Dict[int, List[int]] = {}
         i = 0
@@ -218,18 +321,23 @@ class KVPageManager:
                 - self._host_pages.get(slot, 0))
 
     def n_host_pages(self, slot: int) -> int:
-        """Host-tier pages held by `slot` — the device blocks a
-        swap-in would consume (the serving scheduler's cost term)."""
+        """Host-tier pages held by `slot`, O(1) (swap-maintained
+        count). The serving scheduler's cost term is the per-channel
+        ``host_pages_vec``; this total remains for host-side
+        bookkeeping and diagnostics."""
         return self._host_pages.get(slot, 0)
 
     def block_tables(self) -> jnp.ndarray:
         """[n_slots, max_pages] int32 device view of the incremental
         table — zero-cost: no translation, no state mutation. NIL for
         unmapped; host-tier blocks appear tagged (callers must swap in
-        before attention). The view is invalidated by the next map op
-        (donated state); re-fetch, don't hold."""
+        before attention). With channels > 1 the per-channel shards
+        interleave back to the global order (the boundary all-gather;
+        a relayout, still no translation). The view is invalidated by
+        the next map op (donated state); re-fetch, don't hold."""
         n = self.n_slots * self.max_pages    # table is geometry-padded
-        return self.state.table[:n].reshape(self.n_slots, self.max_pages)
+        return fb.dense_table(self.state, self.channels, n).reshape(
+            self.n_slots, self.max_pages)
 
     def retranslate_tables(self) -> jnp.ndarray:
         """From-scratch full-map retranslation (the pre-incremental
@@ -237,8 +345,11 @@ class KVPageManager:
         churn-equivalence test oracle and the legacy serving-bench
         baseline; the serving hot path must use ``block_tables()``."""
         FULL_TABLE_CALLS[0] += 1
-        fmmu, tables = self._retrans_fn(self.state.fmmu, self.n_slots,
-                                        self.max_pages)
+        if self.channels > 1:
+            fmmu, tables = self._retrans_fn(self.state.fmmu)
+        else:
+            fmmu, tables = self._retrans_fn(self.state.fmmu,
+                                            self.n_slots, self.max_pages)
         self.state = self.state._replace(fmmu=fmmu)
         return tables
 
@@ -251,19 +362,36 @@ class KVPageManager:
         if not self._alloc_dirty:
             return
         ALLOC_SYNCS[0] += 1
-        dev = np.full(self.pool.n_device, NIL, np.int32)
-        dev[:len(self.pool._free_dev)] = self.pool._free_dev
-        host = np.full(self.pool.n_host, NIL, np.int32)
-        host[:len(self.pool._free_host)] = self.pool._free_host
         # refresh the residency lane in the same call: host-side frees
         # of swapped-out slots leave swap_pending stale until here, and
         # every such free also dirtied the pool
         resid = np.zeros(self.n_slots, bool)
         for s, c in self._host_pages.items():
             resid[s] = c > 0
-        self.state = self._set_alloc(
-            self.state, dev, np.int32(len(self.pool._free_dev)),
-            host, np.int32(len(self.pool._free_host)), resid)
+        if self.channels > 1:
+            C = self.channels
+            dev = np.full(self.state.free_stack.shape, NIL, np.int32)
+            host = np.full(self.state.host_stack.shape, NIL, np.int32)
+            for c in range(C):
+                dev[c, :self.pool.free_device_ch(c)] = \
+                    self.pool._free_dev_ch[c]
+                host[c, :self.pool.free_host_ch(c)] = \
+                    self.pool._free_host_ch[c]
+            self.state = self._set_alloc(
+                self.state, dev,
+                np.asarray([self.pool.free_device_ch(c)
+                            for c in range(C)], np.int32),
+                host,
+                np.asarray([self.pool.free_host_ch(c)
+                            for c in range(C)], np.int32), resid)
+        else:
+            dev = np.full(self.pool.n_device, NIL, np.int32)
+            dev[:len(self.pool._free_dev)] = self.pool._free_dev
+            host = np.full(self.pool.n_host, NIL, np.int32)
+            host[:len(self.pool._free_host)] = self.pool._free_host
+            self.state = self._set_alloc(
+                self.state, dev, np.int32(len(self.pool._free_dev)),
+                host, np.int32(len(self.pool._free_host)), resid)
         self._alloc_dirty = False
 
     def reconcile_macro(self, grow_seq: List[int]) -> Dict[int, List[int]]:
@@ -276,6 +404,13 @@ class KVPageManager:
         is NOT marked dirty: both sides applied the same delta, so the
         mirror still holds. Returns {slot: [new blocks]} in page
         order."""
+        # the channel-sharded macro path never runs this replay: its
+        # scans pop nothing device-side (growth is pre-committed by
+        # precommit_growth), so replaying here would shrink the host
+        # lists while the device stacks stand still — mirror broken
+        assert self.channels == 1, \
+            "reconcile_macro is the channels=1 replay; sharded macro " \
+            "steps pre-commit growth via precommit_growth instead"
         got: Dict[int, List[int]] = {}
         if not grow_seq:
             return got
@@ -283,6 +418,47 @@ class KVPageManager:
         for slot, b in zip(grow_seq, blocks):
             self.seq_pages[slot].append(b)
             got.setdefault(slot, []).append(b)
+        return got
+
+    def _grow_dlpns(self, grow_seq: List[int]) -> List[int]:
+        """Growth dlpns for a pop sequence: each entry is the slot's
+        next unmapped page at that point in the sequence."""
+        pages = {s: len(self.seq_pages[s]) for s in set(grow_seq)}
+        dl = []
+        for s in grow_seq:
+            dl.append(s * self.max_pages + pages[s])
+            pages[s] += 1
+        return dl
+
+    def precommit_growth(self, grow_seq: List[int],
+                         dlpns: Optional[List[int]] = None
+                         ) -> Dict[int, List[int]]:
+        """Channel-sharded macro-step growth: commit a whole K-step
+        growth schedule AHEAD of the scan — one channel-aware pool
+        allocation in the scan's pop order (step-major, slot-ascending,
+        identical to what K single steps would pop) plus ONE fused
+        sharded map dispatch. The scan then decodes against the
+        materialized post-growth table and needs no in-graph allocator
+        at all: the cross-channel traffic stays at the macro boundary
+        (DESIGN.md "Channel-sharded map pipeline").
+
+        ``dlpns`` (aligned with grow_seq) is the dl schedule the
+        caller's growth walk already produced — pass it so there is
+        ONE derivation of which page each pop maps (the engine's
+        ``_growth_walk``); when omitted, the schedule is re-derived
+        from the page lists (test drivers)."""
+        got: Dict[int, List[int]] = {}
+        if not grow_seq:
+            return got
+        dl = (list(dlpns) if dlpns is not None
+              else self._grow_dlpns(grow_seq))
+        assert len(dl) == len(grow_seq)
+        blocks = self._alloc_blocks(dl)
+        self._alloc_dirty = True
+        for slot, b in zip(grow_seq, blocks):
+            self.seq_pages[slot].append(b)
+            got.setdefault(slot, []).append(b)
+        self._xlate(UPDATE, dl, blocks)
         return got
 
     # ----------------------------------------------------------- swapping
@@ -296,14 +472,23 @@ class KVPageManager:
         fn = self._swap_jits.get(key)
         if fn is None:
             g = self.geom
+            sharded = self.channels > 1
 
             def f(ms, pools, dl, newb, oldb, src, dst, lane, pending):
                 opc = jnp.full((cap,), COND_UPDATE, jnp.int32)
-                ms, _, ok = fb.translate_serving(g, ms, opc, dl, newb,
-                                                 oldb)
+                if sharded:
+                    # same fused shape, channel-sharded commit: each
+                    # channel CondUpdates the swap lanes it owns (the
+                    # shard_map/vmap graph composes under this jit)
+                    ms, _, ok = self._xlate_graph(ms, opc, dl, newb,
+                                                  oldb)
+                    ms = fb.mark_swap_sharded(ms, lane, pending)
+                else:
+                    ms, _, ok = fb.translate_serving(g, ms, opc, dl,
+                                                     newb, oldb)
+                    ms = fb.mark_swap(ms, lane, pending)
                 pools = [_move_rows(p, src, dst, block_axis)
                          for p in pools]
-                ms = fb.mark_swap(ms, lane, pending)
                 return ms, pools, ok
 
             fn = jax.jit(f, donate_argnums=(0, 1))
@@ -321,10 +506,10 @@ class KVPageManager:
         moving = [b for b in blocks if BlockPool.is_host(b) != out]
         if not moving:
             return pools, 0
-        fresh = self.pool.alloc(len(moving), host=out)
-        self._alloc_dirty = True
         dl = [slot * self.max_pages + i for i, b in enumerate(blocks)
               if BlockPool.is_host(b) != out]
+        fresh = self._alloc_blocks(dl, host=out)
+        self._alloc_dirty = True
         row = self.pool.host_row
         src = [row(b) if not out else b for b in moving]
         dst = [b if not out else row(b) for b in fresh]
@@ -338,6 +523,12 @@ class KVPageManager:
             return np.asarray(list(xs) + [fill] * pad, np.int32)
 
         XLATE_CALLS[0] += 1
+        if self.channels > 1:
+            self.channel_lanes += np.bincount(
+                np.asarray(dl) % self.channels,
+                minlength=self.channels)
+        else:
+            self.channel_lanes[0] += n
         fn = self._swap_fn(cap, block_axis, len(pools))
         # pad map lanes are inactive (dl=-1); pad moves repeat lane 0's
         # (src, dst) pair — duplicate writes of an identical value
@@ -378,8 +569,27 @@ class KVPageManager:
         fused non-blocking pipeline as swap_out; clears the lane)."""
         return self._swap(SWAP_IN, slot, pools, block_axis, check)
 
+    def free_device_vec(self) -> np.ndarray:
+        """Free device blocks per channel ([total] at channels=1): the
+        engine's growth-reserve checks compare per channel, because a
+        dry channel is real pool pressure even while others have
+        blocks."""
+        return np.asarray([self.pool.free_device_ch(c)
+                           for c in range(self.channels)], np.int64)
+
+    def host_pages_vec(self, slot: int) -> np.ndarray:
+        """Host-tier pages of `slot` per owner channel — the per-
+        channel device blocks its swap-in would consume."""
+        out = np.zeros(self.channels, np.int64)
+        for b in self.seq_pages.get(slot, ()):
+            if BlockPool.is_host(b):
+                out[self.pool.channel_of(b)] += 1
+        return out
+
     def hit_stats(self) -> dict:
         s = np.asarray(self.state.fmmu.stats)
+        if self.channels > 1:
+            s = s.sum(axis=0)
         return {"hits": int(s[0]), "misses": int(s[1]),
                 "fills": int(s[2]), "updates": int(s[3]),
                 # swap/tier activity (ISSUE-4): the zero-fallback claim

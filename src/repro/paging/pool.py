@@ -6,11 +6,20 @@ ids are tier-tagged: device blocks are [0, n_device); host blocks are
 [HOST_BASE, HOST_BASE + n_host). The allocator is host-side (scheduler
 thread), like the BM in the paper; the FMMU map holds the tier-tagged
 physical ids and CondUpdate arbitrates relocation races.
+
+Channel-sharded serving (ISSUE 5) stripes both tiers across N channels:
+block b belongs to channel b mod C (host blocks by their tier-local
+index), mirroring the dlpn -> channel hash, so a page and the block
+backing it always live in the same channel and each channel's
+device-resident free stack (core/fmmu/batch.init_sharded_state) mirrors
+exactly one per-channel free list here. ``n_channels=1`` keeps the
+single flat free list bit-identical to the pre-sharding pool (the
+channel-0 list IS the old list object).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Sequence
 
 from repro.core.fmmu.types import HOST_BASE
 
@@ -29,17 +38,34 @@ class PoolStats:
 
 
 class BlockPool:
-    def __init__(self, n_device: int, n_host: int = 0):
+    def __init__(self, n_device: int, n_host: int = 0,
+                 n_channels: int = 1):
         self.n_device = n_device
         self.n_host = n_host
-        self._free_dev: List[int] = list(range(n_device))[::-1]
-        self._free_host: List[int] = [HOST_BASE + i
-                                      for i in range(n_host)][::-1]
+        self.n_channels = n_channels
+        # per-channel striped free lists; first pop of channel c yields
+        # block c (tier-local), matching init_sharded_state's stacks.
+        # For n_channels=1 the channel-0 list is the legacy flat list.
+        self._free_dev_ch: List[List[int]] = [
+            [b for b in range(n_device) if b % n_channels == c][::-1]
+            for c in range(n_channels)]
+        self._free_host_ch: List[List[int]] = [
+            [HOST_BASE + i for i in range(n_host)
+             if i % n_channels == c][::-1]
+            for c in range(n_channels)]
+        self._free_dev = self._free_dev_ch[0]
+        self._free_host = self._free_host_ch[0]
+        self._rr = 0        # channel-agnostic alloc's round-robin cursor
         self.stats = PoolStats()
 
     @staticmethod
     def is_host(block: int) -> bool:
         return block >= HOST_BASE
+
+    def channel_of(self, block: int) -> int:
+        """Owner channel of a block id (tier-local index mod C)."""
+        b = block - HOST_BASE if block >= HOST_BASE else block
+        return b % self.n_channels
 
     def host_row(self, block: int) -> int:
         """Pool-tensor row backing a host-tier block id: the host
@@ -51,25 +77,70 @@ class BlockPool:
 
     @property
     def free_device(self) -> int:
-        return len(self._free_dev)
+        return sum(len(ch) for ch in self._free_dev_ch)
 
     @property
     def free_host(self) -> int:
-        return len(self._free_host)
+        return sum(len(ch) for ch in self._free_host_ch)
+
+    def free_device_ch(self, c: int) -> int:
+        return len(self._free_dev_ch[c])
+
+    def free_host_ch(self, c: int) -> int:
+        return len(self._free_host_ch[c])
+
+    def _bump_alloc(self, n: int):
+        self.stats.allocs += n
+        used = self.n_device - self.free_device
+        self.stats.peak_used = max(self.stats.peak_used, used)
 
     def alloc(self, n: int, *, host: bool = False) -> List[int]:
-        pool = self._free_host if host else self._free_dev
-        if len(pool) < n:
+        """Channel-agnostic allocation (the n_channels=1 fast path;
+        with channels the caller should route by dlpn owner via
+        ``alloc_for``). Pops round-robin across channels so unchanneled
+        callers cannot silently drain one channel."""
+        lists = self._free_host_ch if host else self._free_dev_ch
+        if sum(len(ch) for ch in lists) < n:
             raise OutOfBlocks(
                 f"need {n} {'host' if host else 'device'} blocks, "
-                f"have {len(pool)}")
-        out = [pool.pop() for _ in range(n)]
-        self.stats.allocs += n
-        used = self.n_device - len(self._free_dev)
-        self.stats.peak_used = max(self.stats.peak_used, used)
+                f"have {sum(len(ch) for ch in lists)}")
+        if self.n_channels == 1:
+            pool = lists[0]
+            out = [pool.pop() for _ in range(n)]
+        else:
+            # cursor persists across calls: repeated alloc(1) visits
+            # every channel instead of draining channel 0 first
+            out = []
+            while len(out) < n:
+                if lists[self._rr % self.n_channels]:
+                    out.append(lists[self._rr % self.n_channels].pop())
+                self._rr += 1
+        self._bump_alloc(n)
+        return out
+
+    def alloc_for(self, channels: Sequence[int], *,
+                  host: bool = False) -> List[int]:
+        """Pop one block per requested owner channel, in order; the
+        channel-sharded allocation path (block i backs a page owned by
+        channels[i]). Raises BEFORE any pop when any channel's list is
+        short — per-channel pool pressure is a real OutOfBlocks even
+        while other channels still hold blocks."""
+        lists = self._free_host_ch if host else self._free_dev_ch
+        need = [0] * self.n_channels
+        for c in channels:
+            need[c] += 1
+        for c, k in enumerate(need):
+            if k > len(lists[c]):
+                raise OutOfBlocks(
+                    f"need {k} {'host' if host else 'device'} blocks "
+                    f"in channel {c}, have {len(lists[c])}")
+        out = [lists[c].pop() for c in channels]
+        self._bump_alloc(len(out))
         return out
 
     def free(self, blocks: List[int]):
         for b in blocks:
-            (self._free_host if self.is_host(b) else self._free_dev).append(b)
+            lists = (self._free_host_ch if self.is_host(b)
+                     else self._free_dev_ch)
+            lists[self.channel_of(b)].append(b)
         self.stats.frees += len(blocks)

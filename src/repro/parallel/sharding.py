@@ -51,11 +51,26 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False,
     return _shard_map(f, **kw)
 
 
+def channel_mesh(n_channels: int) -> Mesh:
+    """1-D mesh over the FMMU channel axis (ISSUE-5 map sharding): one
+    device per channel. CI's tier1-sharded lane provides 8 host-platform
+    devices via XLA_FLAGS=--xla_force_host_platform_device_count=8; on
+    real hardware the channels ride the accelerator mesh."""
+    if len(jax.devices()) < n_channels:
+        raise ValueError(
+            f"channel_mesh({n_channels}): only {len(jax.devices())} "
+            "devices visible (set --xla_force_host_platform_device_count"
+            " or shard with the vmap lowering instead)")
+    return make_mesh((n_channels,), ("channel",))
+
+
 @dataclasses.dataclass(frozen=True)
 class ParallelCtx:
     mesh: Mesh
     dp: Tuple[str, ...] = ("data",)   # batch axes, outermost first
     tp: str = "model"
+    ch: Optional[str] = None   # FMMU channel axis (map-state sharding);
+    #                            None = unsharded map (pre-ISSUE-5)
     fsdp_params: bool = False  # ZeRO-3/FSDP: also shard params over dp
     spec_dim_fallback: bool = False  # non-dividing dim: slide the axis to
     #                                  the next dividing dim (e.g. arctic's
@@ -68,6 +83,10 @@ class ParallelCtx:
     @property
     def tp_size(self) -> int:
         return int(self.mesh.shape[self.tp])
+
+    @property
+    def ch_size(self) -> int:
+        return int(self.mesh.shape[self.ch]) if self.ch else 1
 
     @property
     def n_devices(self) -> int:
@@ -88,6 +107,8 @@ class ParallelCtx:
             return self.dp if len(self.dp) > 1 else self.dp[0]
         if logical == "model":
             return self.tp
+        if logical == "channel":
+            return self.ch
         if isinstance(logical, (tuple, list)):
             out = []
             for l in logical:
@@ -162,3 +183,14 @@ def trivial_ctx() -> ParallelCtx:
 
 def test_ctx(data: int = 2, model: int = 2) -> ParallelCtx:
     return ParallelCtx(mesh=make_mesh((data, model), ("data", "model")))
+
+
+def channel_ctx(channels: int, data: int = 1,
+                model: int = 1) -> ParallelCtx:
+    """Mesh with an FMMU 'channel' axis alongside data/model: logical
+    'channel' specs resolve onto it (map-state leaves carry a leading
+    channel dim), everything else is unaffected."""
+    return ParallelCtx(
+        mesh=make_mesh((data, model, channels),
+                       ("data", "model", "channel")),
+        ch="channel")

@@ -55,6 +55,20 @@ CondUpdate map commits riding the single-probe fused translate
 blocks on a swap). ``nonblocking_swap=False`` restores the PR-3
 fall-back-on-pressure behavior (the serve_bench baseline).
 
+Channel-sharded map (DESIGN.md "Channel-sharded map pipeline", ISSUE 5)
+-----------------------------------------------------------------------
+``ServeEngine(channels=N)`` shards the FMMU map state across N
+channels by the static hash ``dlpn mod N`` (KVPageManager above). The
+macro path then PRE-COMMITS each scan's worst-case growth at the
+boundary — one channel-aware pool allocation in the scan's own
+step-major pop order plus ONE fused sharded map dispatch — and runs a
+pure-decode K-step scan (``_macro_sharded_fn``) against the table
+materialized from the channel shards once per dispatch. Eligibility
+and the swap scheduler's reserve arithmetic compare need against free
+blocks PER CHANNEL (a dry channel is real pressure even while others
+hold blocks). ``channels=1`` (default) is the unsharded path above,
+bit-identical.
+
 Continuous-batching admission rides the same boundaries: ``_admit``
 spends at most ``admit_tokens`` prompt tokens per scheduling round;
 a longer prompt is chunk-prefilled — its first chunk goes through the
@@ -112,7 +126,8 @@ class ServeEngine:
                  n_host_blocks: int = 0, eos_id: int = -1,
                  macro_k: int = 0, nonblocking_swap: bool = True,
                  admit_tokens: Optional[int] = None,
-                 swap_patience: int = 4):
+                 swap_patience: int = 4, channels: int = 1,
+                 use_mesh: Optional[bool] = None):
         self.m = model
         self.cfg = model.cfg
         self.rt = model.rt
@@ -121,8 +136,26 @@ class ServeEngine:
         self.page = self.rt.page_size
         self.max_pages = -(-max_ctx // self.page)
         n_dev = n_device_blocks or (n_slots * self.max_pages)
+        # ISSUE-5: channels > 1 shards the FMMU map state (CMT, backing,
+        # incremental table, free-list allocator, swap lanes) across an
+        # N-channel mesh by the static hash owner(dlpn) = dlpn mod N;
+        # the decode scans consume the table materialized from the
+        # shards at macro-step boundaries. channels=1 (default) is the
+        # unsharded pre-ISSUE-5 path, bit-identical.
+        self.channels = int(channels)
+        # the engine pins the portable vmap lowering for its map manager
+        # even when >= C devices are visible (use_mesh=None): the model
+        # jits carry single-device sharding constraints, and feeding
+        # them mesh-committed tables/caches trips jax's incompatible-
+        # device check. Model-and-map co-residency on one mesh is the
+        # ROADMAP "real multi-host channel mesh" item; the shard_map
+        # lowering itself is pinned bit-identical to vmap at the map
+        # level (tests/test_sharded_map.py), so nothing is lost in
+        # results. An explicit use_mesh=True is forwarded for setups
+        # whose model is already mesh-sharded.
         self.kvm = KVPageManager(n_slots, self.max_pages, n_dev,
-                                 n_host_blocks)
+                                 n_host_blocks, channels=self.channels,
+                                 use_mesh=bool(use_mesh))
         src_len = _src_len(self.cfg, max_ctx)
         # +1 scratch block: unmapped table entries (inactive slots) write
         # their garbage KV there instead of corrupting block 0
@@ -160,12 +193,28 @@ class ServeEngine:
         # retirement with pause semantics.
         self.macro_k = int(macro_k)
         self._macro = self._macro_simple = None
+        self._macro_sh = self._macro_sh_simple = None
         if self.macro_k >= 2:
-            self._macro = jax.jit(self._macro_fn, donate_argnums=(1, 2),
-                                  static_argnums=(10,))
-            self._macro_simple = jax.jit(
-                functools.partial(self._macro_fn, simple=True),
-                donate_argnums=(1, 2), static_argnums=(10,))
+            if self.channels == 1:
+                self._macro = jax.jit(self._macro_fn,
+                                      donate_argnums=(1, 2),
+                                      static_argnums=(10,))
+                self._macro_simple = jax.jit(
+                    functools.partial(self._macro_fn, simple=True),
+                    donate_argnums=(1, 2), static_argnums=(10,))
+            else:
+                # channel-sharded scans: growth is pre-committed at the
+                # boundary, so the scan takes no map state — only the
+                # caches donate and the sharded table materializes once
+                # inside the jit (static arg 9 = live-page bucket)
+                self._macro_sh = jax.jit(self._macro_sharded_fn,
+                                         donate_argnums=(1,),
+                                         static_argnums=(9,))
+                self._macro_sh_simple = jax.jit(
+                    functools.partial(self._macro_sharded_fn,
+                                      simple=True),
+                    donate_argnums=(1,), static_argnums=(9,))
+        self._macro_on = self.macro_k >= 2
         self.min_page_bucket = 4
         # non-blocking swap pipeline + continuous-batching admission
         # (module docstring): swap-pending slots are masked scan lanes,
@@ -211,12 +260,12 @@ class ServeEngine:
         self._admit()
         if not self.active:
             return bool(self.queue)
-        if self._macro is not None and self.nonblocking_swap:
+        if self._macro_on and self.nonblocking_swap:
             self._swap_schedule()
         if self._macro_eligible():
             self._macro_decode_step(done)
         else:
-            if self._macro is not None:
+            if self._macro_on:
                 self.metrics["macro_fallbacks"] += 1
             self._decode_step(done)
         return bool(self.active or self.queue)
@@ -298,13 +347,29 @@ class ServeEngine:
 
     # --------------------------------------------- boundary swap planner
     def _growth_need(self, slot: int) -> int:
-        """Worst-case device blocks `slot` can pop during one K-step
-        scan — the same arithmetic the scan body and the reconcile
-        replay use (mirror protocol)."""
-        target = -(-(int(self.ctx_lens[slot]) + self.macro_k)
-                   // self.page)
-        return max(0, min(target, self.max_pages)
-                   - len(self.kvm.seq_pages[slot]))
+        """Total worst-case device blocks `slot` can pop during one
+        K-step scan (sum of ``_growth_need_ch`` — the one home of the
+        growth arithmetic the scan body and the reconcile replay
+        mirror)."""
+        return int(self._growth_need_ch(slot).sum())
+
+    def _growth_need_ch(self, slot: int) -> np.ndarray:
+        """Worst-case K-step growth of `slot` per owner channel
+        ([total] at channels=1): page p pops from channel
+        (slot * max_pages + p) mod C, so the reserve checks must fit
+        per channel, not in aggregate. Same page-boundary arithmetic
+        as the scan body and the reconcile replay (mirror
+        protocol)."""
+        C = self.channels
+        have = len(self.kvm.seq_pages[slot])
+        target = min(self.max_pages,
+                     -(-(int(self.ctx_lens[slot]) + self.macro_k)
+                       // self.page))
+        out = np.zeros(C, np.int64)
+        base = slot * self.max_pages
+        for p in range(have, target):
+            out[(base + p) % C] += 1
+        return out
 
     def _swap_out_slot(self, slot: int, check: bool = False) -> bool:
         """Move one slot's device pages to the host tier through the
@@ -377,36 +442,44 @@ class ServeEngine:
                          key=lambda s: self._pending_since.get(s, 0))
         moved_now: set = set()
 
+        # all quantities are per-channel vectors ([total] at channels=1,
+        # where every comparison reduces to the old scalar one): a
+        # reserve that fits in aggregate can still dry out one channel
         def cost(s):    # device blocks a swap-in consumes now + in-scan
-            return kvm.n_host_pages(s) + self._growth_need(s)
+            return kvm.host_pages_vec(s) + self._growth_need_ch(s)
 
-        # 1. reserve: the scan must never run the device pool dry
-        total = sum(self._growth_need(s) for s in residents)
-        while total > kvm.pool.free_device and len(residents) > 1:
+        def growth_total(slots):
+            return sum((self._growth_need_ch(s) for s in slots),
+                       np.zeros(self.channels, np.int64))
+
+        free = kvm.free_device_vec
+        # 1. reserve: the scan must never run any channel's pool dry
+        total = growth_total(residents)
+        while (total > free()).any() and len(residents) > 1:
             victim = max(residents, key=lambda s: int(self.ctx_lens[s]))
             if not self._swap_out_slot(victim):
                 break
             moved_now.add(victim)
             residents.remove(victim)
             pending.append(victim)
-            total = sum(self._growth_need(s) for s in residents)
+            total = growth_total(residents)
         # 2. resume FIFO while the reserve still holds
         for s in list(pending):
             if s in moved_now:
                 continue               # no ping-pong within one boundary
-            if cost(s) <= kvm.pool.free_device - total \
+            if (cost(s) <= free() - total).all() \
                     and self._swap_in_slot(s):
                 moved_now.add(s)
                 pending.remove(s)
                 residents.append(s)
-                total += self._growth_need(s)
+                total += self._growth_need_ch(s)
         # 3. aging rotation: the oldest pending slot forces its way in
         if pending and pending[0] not in moved_now:
             oldest = pending[0]
             waited = self._boundary - self._pending_since.get(
                 oldest, self._boundary)
             if waited >= self.swap_patience:
-                while cost(oldest) > kvm.pool.free_device - total \
+                while (cost(oldest) > free() - total).any() \
                         and len(residents) > 1:
                     cands = [s for s in residents if s not in moved_now]
                     if not cands:
@@ -416,8 +489,8 @@ class ServeEngine:
                     if not self._swap_out_slot(victim):
                         break
                     residents.remove(victim)
-                    total = sum(self._growth_need(s) for s in residents)
-                if cost(oldest) <= kvm.pool.free_device - total:
+                    total = growth_total(residents)
+                if (cost(oldest) <= free() - total).all():
                     self._swap_in_slot(oldest)
 
     # ------------------------------------------------------------- prefill
@@ -469,22 +542,37 @@ class ServeEngine:
             p *= 2
         return min(p, self.max_pages)
 
+    def _table_grid(self, table, pages):
+        """Flat (or [C, L] channel-sharded) incremental table ->
+        [n_slots, <=pages] global grid: ``fb.interleave_table`` (the
+        one home of the shard-interleave layout — under a mesh the
+        transpose IS the boundary all-gather of the tentpole) plus the
+        live-page bucket slice. Every decode path (_decode_fn,
+        _macro_fn, _macro_sharded_fn) must read the table through here
+        or bit-identity across paths breaks."""
+        n = self.n_slots * self.max_pages    # table is geometry-padded
+        grid = fb.interleave_table(table, n).reshape(self.n_slots,
+                                                     self.max_pages)
+        return grid[:, :pages or self.max_pages]
+
+    def _mask_tables(self, grid, live):
+        """Mask dead lanes to the scratch block (their garbage KV write
+        lands there) and clamp out-of-range entries (NIL / host-tier
+        tags) — the ONE shared clamp; see _table_grid."""
+        t = jnp.where(live[:, None], grid, self.scratch_block)
+        return jnp.where((t < 0) | (t >= self.scratch_block),
+                         self.scratch_block, t)
+
     def _decode_fn(self, params, tokens, caches, ctx_lens, table,
                    resident_mask, src_valid=None, pages=None):
         """Single-fused serving map step: the flat device-resident table
         is reshaped and sliced to the live-page bucket (attention never
         touches pages beyond any mapped context), paused/inactive slots
-        are masked to the scratch block (their garbage KV write lands
-        there) with zeroed ctx, and out-of-range entries (NIL /
-        host-tier tags) are clamped — all inside the decode jit, so no
-        table bytes cross the host."""
-        n = self.n_slots * self.max_pages    # table is geometry-padded
-        tables = table[:n].reshape(self.n_slots, self.max_pages)
-        tables = tables[:, :pages or self.max_pages]
-        tables = jnp.where(resident_mask[:, None], tables,
-                           self.scratch_block)
-        tables = jnp.where((tables < 0) | (tables >= self.scratch_block),
-                           self.scratch_block, tables)
+        are masked to the scratch block with zeroed ctx, and
+        out-of-range entries (NIL / host-tier tags) are clamped — all
+        inside the decode jit, so no table bytes cross the host."""
+        tables = self._mask_tables(self._table_grid(table, pages),
+                                   resident_mask)
         ctx = jnp.where(resident_mask, ctx_lens, 0)
         logits, caches = self.m.decode_step(
             params, tokens, caches, ctx_lens=ctx, block_table=tables,
@@ -552,10 +640,7 @@ class ServeEngine:
             tokens[r.slot] = (r.pending_prompt[0] if r.pending_prompt
                               else r.out[-1] if r.out else r.tokens[-1])
             resident_mask[r.slot] = True
-        src_valid = None
-        if self.cfg.n_enc_layers:
-            src_valid = (np.arange(self.src_cap)[None, :]
-                         < self.src_lens[:, None]).astype(np.int32)
+        src_valid = self._src_valid()
         # numpy args go straight to the jit (its shard_args transfer is
         # cheaper than an explicit device_put per array); the only
         # per-step host sync is the next_tok readback
@@ -618,16 +703,12 @@ class ServeEngine:
         page = self.page
         i32 = jnp.int32
         slots = jnp.arange(self.n_slots, dtype=i32)
-        n = self.n_slots * self.max_pages    # table is geometry-padded
 
         def mask_tables(ms, live):
-            # live-page bucket slice (static): attention work scales
-            # with actual context, exactly like _decode_fn
-            t = ms.table[:n].reshape(self.n_slots, self.max_pages)
-            t = t[:, :pages or self.max_pages]
-            t = jnp.where(live[:, None], t, self.scratch_block)
-            return jnp.where((t < 0) | (t >= self.scratch_block),
-                             self.scratch_block, t)
+            # shared grid + clamp (bucket slice is static): attention
+            # work scales with actual context, exactly like _decode_fn
+            return self._mask_tables(self._table_grid(ms.table, pages),
+                                     live)
 
         def grow_commit(ms, npg, grow):
             # pop from the device free stack + commit dlpn->block in
@@ -745,28 +826,33 @@ class ServeEngine:
         boundary scheduler already reserved growth headroom for the
         residents); pre-ISSUE-4 behavior required every slot
         resident."""
-        if self._macro is None or not self.active:
+        if not self._macro_on or not self.active:
             return False
-        need = n_res = 0
+        need = np.zeros(self.channels, np.int64)
+        n_res = 0
         for r in self.active.values():
             if not self.kvm.is_resident(r.slot):
                 if not self.nonblocking_swap:
                     return False
                 continue        # swap-pending lane: masked, not a fallback
             n_res += 1
-            need += self._growth_need(r.slot)
-        return n_res > 0 and need <= self.kvm.pool.free_device
+            need += self._growth_need_ch(r.slot)
+        # per-channel fit: a dry channel is real pool pressure even
+        # while other channels still hold blocks (channels=1 reduces to
+        # the old total comparison)
+        return n_res > 0 and bool(
+            (need <= self.kvm.free_device_vec()).all())
 
-    def _macro_decode_step(self, done: Dict[int, List[int]]):
-        """Launch one K-step fused scan, then do the boundary work:
-        ONE host sync (token matrix + oob flag), allocator-delta
-        replay, token bookkeeping, frees."""
-        self.kvm.sync_allocator()      # no-op unless the pool mutated
-        # swap-pending slots stay active but are NOT in the batch: they
-        # are masked lanes until the boundary scheduler resumes them
-        residents = [r for r in self.active.values()
-                     if self.kvm.is_resident(r.slot)]
-        K = self.macro_k
+    def _src_valid(self):
+        if not self.cfg.n_enc_layers:
+            return None
+        return (np.arange(self.src_cap)[None, :]
+                < self.src_lens[:, None]).astype(np.int32)
+
+    def _macro_lanes(self, residents, K: int):
+        """Lane arrays for one K-step scan (shared by the unsharded and
+        channel-sharded macro steps): tokens/alive/budget/pages plus
+        the forced-lane schedule for chunk-prefilled prompts."""
         tokens = np.zeros(self.n_slots, np.int32)
         alive = np.zeros(self.n_slots, bool)
         budget = np.zeros(self.n_slots, np.int32)
@@ -794,10 +880,86 @@ class ServeEngine:
                 fmask[:len(chunk), s] = True
                 ftok[:len(chunk), s] = chunk
                 emit[:min(p - 1, K), s] = False
-        src_valid = None
-        if self.cfg.n_enc_layers:
-            src_valid = (np.arange(self.src_cap)[None, :]
-                         < self.src_lens[:, None]).astype(np.int32)
+        return (tokens, alive, budget, npages, pend, fmask, ftok, emit,
+                slot2req)
+
+    def _growth_walk(self, live_of_step, npages, ctx):
+        """The mirror-protocol page-boundary walk: which slots pop a
+        block at each of the K scan steps. ONE home for the arithmetic
+        (`need = (ctx + page) // page; grow = live & (need > npg) &
+        (npg < max_pages)`) — the C=1 simple scheduler, the full-mode
+        reconcile replay, and the sharded pre-commit must pop
+        bit-identically or the host/device allocator mirror breaks.
+        ``live_of_step(k)`` -> [S] bool mask of lanes decoding at step
+        k. Returns (grow [K,S] bool, dl [K,S] int32 — each slot's next
+        unmapped dlpn at that step, npg_end [S])."""
+        K, S = self.macro_k, self.n_slots
+        grow = np.zeros((K, S), bool)
+        dl = np.zeros((K, S), np.int32)
+        base = np.arange(S, dtype=np.int32) * self.max_pages
+        npg = npages.copy()
+        ctx = ctx.copy()
+        for k in range(K):
+            live = live_of_step(k)
+            need = (ctx + self.page) // self.page
+            grow[k] = live & (need > npg) & (npg < self.max_pages)
+            dl[k] = base + npg
+            npg += grow[k]
+            ctx += live
+        return grow, dl, npg
+
+    def _macro_book_simple(self, residents, toks, pend, K: int,
+                           done: Dict[int, List[int]]):
+        """Boundary bookkeeping for a simple-mode scan: every alive
+        lane ran all K steps and none can have finished mid-scan (the
+        budget covered the emitted tokens; budget == emitted retires
+        here at the boundary). A forced lane discards predictions
+        inside its prompt: its outputs start at scan step P-1."""
+        self.metrics["decode_steps"] += K
+        for r in residents:
+            s = r.slot
+            p = int(pend[s])
+            if p:
+                del r.pending_prompt[:min(p, K)]
+                outs = ([int(t) for t in toks[p - 1:, s]]
+                        if p <= K else [])
+            else:
+                outs = [int(t) for t in toks[:, s]]
+            r.out.extend(outs)
+            self.metrics["generated"] += len(outs)
+            self.ctx_lens[s] += K
+            if len(r.out) >= r.max_new:
+                done[r.rid] = r.out[:r.max_new]
+                self.kvm.free_seq(s)
+                self.ctx_lens[s] = 0
+                del self.active[r.rid]
+
+    def _macro_book_full(self, valid, toks, slot2req,
+                         done: Dict[int, List[int]]):
+        """Boundary bookkeeping for a full-mode scan: replay the
+        emitted tokens step by step (NIL lanes emitted nothing)."""
+        for k in range(valid.shape[0]):
+            if not valid[k].any():
+                break                  # everyone retired: steps k.. idle
+            stepped = [slot2req[s] for s in range(self.n_slots)
+                       if valid[k, s]]
+            self._finish_step(stepped, toks[k], done)
+
+    def _macro_decode_step(self, done: Dict[int, List[int]]):
+        """Launch one K-step fused scan, then do the boundary work:
+        ONE host sync (token matrix + oob flag), allocator-delta
+        replay, token bookkeeping, frees."""
+        if self.channels > 1:
+            return self._macro_decode_step_sharded(done)
+        self.kvm.sync_allocator()      # no-op unless the pool mutated
+        # swap-pending slots stay active but are NOT in the batch: they
+        # are masked lanes until the boundary scheduler resumes them
+        residents = [r for r in self.active.values()
+                     if self.kvm.is_resident(r.slot)]
+        K = self.macro_k
+        (tokens, alive, budget, npages, pend, fmask, ftok, emit,
+         slot2req) = self._macro_lanes(residents, K)
+        src_valid = self._src_valid()
         # the `simple` specialization applies when no lane can finish
         # mid-scan: without EOS the retirement machinery is dead weight
         # on every scan step. A forced lane only emits K - (P-1) tokens
@@ -809,18 +971,8 @@ class ServeEngine:
             # precompute the growth schedule the scan will follow (no
             # retirement ⟹ the live set is static ⟹ page crossings
             # are a pure function of ctx/pages the host already holds)
-            grow_sched = np.zeros((self.macro_k, self.n_slots), bool)
-            dl_sched = np.zeros((self.macro_k, self.n_slots), np.int32)
-            base = np.arange(self.n_slots, dtype=np.int32) \
-                * self.max_pages
-            ctx = self.ctx_lens.copy()
-            for k in range(self.macro_k):
-                need = (ctx + self.page) // self.page
-                grow_sched[k] = alive & (need > npages) \
-                    & (npages < self.max_pages)
-                dl_sched[k] = base + npages
-                npages += grow_sched[k]
-                ctx += alive
+            grow_sched, dl_sched, npages = self._growth_walk(
+                lambda k: alive, npages, self.ctx_lens)
             sched = (grow_sched, grow_sched.any(axis=1), dl_sched)
         # live-page bucket: worst-case pages any slot can hold by scan
         # end (exact post-schedule count in simple mode)
@@ -856,57 +1008,150 @@ class ServeEngine:
             grow_seq = [int(s) for s in np.nonzero(grow_sched)[1]]
         else:
             # NIL marks lanes that emitted nothing (retired/paused);
-            # replay the scan's growth decisions (same arithmetic as
-            # the scan body, gated on the same live mask) to recover
+            # replay the scan's growth decisions (the same _growth_walk
+            # arithmetic, gated on the scan's own live mask) to recover
             # the allocation sequence — the allocator mirror makes the
             # popped block ids predictable, so no log left the device
             valid = (toks >= 0) & alive[None, :]
-            ctx = self.ctx_lens.copy()
-            grow_seq = []
-            for k in range(self.macro_k):
-                live = valid[k]
-                need = (ctx + self.page) // self.page
-                grew = live & (need > npages) \
-                    & (npages < self.max_pages)
-                grow_seq.extend(int(s) for s in np.nonzero(grew)[0])
-                npages += grew
-                ctx += live
+            grew, _, npages = self._growth_walk(
+                lambda k: valid[k], npages, self.ctx_lens)
+            grow_seq = [int(s) for s in np.nonzero(grew)[1]]
         self.kvm.reconcile_macro(grow_seq)
         if simple:
-            # vectorized bookkeeping: every alive lane ran all K steps
-            # and none can have finished mid-scan (the budget covered
-            # the emitted tokens; budget == emitted retires here at
-            # the boundary). A forced lane discards predictions inside
-            # its prompt: its outputs start at scan step P-1.
-            self.metrics["decode_steps"] += self.macro_k
-            for r in residents:
-                s = r.slot
-                p = int(pend[s])
-                if p:
-                    del r.pending_prompt[:min(p, K)]
-                    outs = ([int(t) for t in toks[p - 1:, s]]
-                            if p <= K else [])
-                else:
-                    outs = [int(t) for t in toks[:, s]]
-                r.out.extend(outs)
-                self.metrics["generated"] += len(outs)
-                self.ctx_lens[s] += self.macro_k
-                if len(r.out) >= r.max_new:
-                    done[r.rid] = r.out[:r.max_new]
-                    self.kvm.free_seq(s)
-                    self.ctx_lens[s] = 0
-                    del self.active[r.rid]
+            self._macro_book_simple(residents, toks, pend, K, done)
         else:
-            for k in range(self.macro_k):
-                if not valid[k].any():
-                    break              # everyone retired: steps k.. idle
-                stepped = [slot2req[s] for s in range(self.n_slots)
-                           if valid[k, s]]
-                self._finish_step(stepped, toks[k], done)
+            self._macro_book_full(valid, toks, slot2req, done)
         if oob:
             # the proactive check makes this unreachable; if it trips,
             # re-sync (clears the flag) and let single-step mode recover
             self.kvm._alloc_dirty = True
+
+    # -------------------------------------- channel-sharded macro-steps
+    def _macro_sharded_fn(self, params, caches, table, cur_tok,
+                          ctx_lens, alive, budget, forced,
+                          src_valid=None, pages=None, simple=False):
+        """K decode steps against a PRE-COMMITTED channel-sharded map
+        (DESIGN.md "Channel-sharded map pipeline"): the boundary
+        already popped every block the scan can need and committed the
+        mappings through the sharded fused translate, so the scan
+        consumes a read-only table — the [C, L] shard stack
+        interleaves back to global dlpn order ONCE here (on a channel
+        mesh that transpose lowers to the cross-channel all-gather;
+        this is the tentpole's one boundary collective). Pages mapped
+        ahead of a lane's current context are invisible to attention
+        (it reads ctx_lens positions only), so a scan step stays
+        bit-identical to a single step. Lane masking, forced lanes and
+        EOS/budget retirement mirror ``_macro_fn`` exactly; there is
+        no in-graph allocator and no oob flag — per-channel pool
+        pressure was resolved by the eligibility check before
+        dispatch."""
+        i32 = jnp.int32
+        tbl = self._table_grid(table, pages)    # interleave ONCE
+
+        def mask_tables(live):
+            return self._mask_tables(tbl, live)
+
+        if simple:
+            alive0 = alive
+            tables = mask_tables(alive0)
+            xs = forced[:2] if forced is not None else None
+
+            def body(carry, xs):
+                caches, tok, ctx = carry
+                if forced is not None:
+                    fm, ft = xs
+                    tok = jnp.where(fm & alive0, ft, tok)
+                logits, caches = self.m.decode_step(
+                    params, tok, caches,
+                    ctx_lens=jnp.where(alive0, ctx, 0),
+                    block_table=tables, src_valid=src_valid)
+                nxt = jnp.argmax(logits, axis=-1).astype(i32)
+                return (caches, jnp.where(alive0, nxt, 0),
+                        ctx + alive0.astype(i32)), nxt
+
+            carry, toks = jax.lax.scan(
+                body, (caches, jnp.where(alive0, cur_tok, 0), ctx_lens),
+                xs, length=self.macro_k)
+            return carry[0], toks
+
+        def body(carry, xs):
+            caches, tok, ctx, alive, bud = carry
+            if forced is None:
+                em = True
+            else:
+                fm, ft, em = xs
+                tok = jnp.where(fm & alive, ft, tok)
+            live = alive
+            logits, caches = self.m.decode_step(
+                params, jnp.where(live, tok, 0), caches,
+                ctx_lens=jnp.where(live, ctx, 0),
+                block_table=mask_tables(live), src_valid=src_valid)
+            nxt = jnp.argmax(logits, axis=-1).astype(i32)
+            tok = jnp.where(live, nxt, tok)
+            ctx = ctx + live.astype(i32)
+            emitted = live & em
+            bud = bud - emitted.astype(i32)
+            fin = emitted & ((nxt == self.eos_id) | (bud <= 0))
+            alive = alive & ~fin
+            return (caches, tok, ctx, alive, bud), \
+                jnp.where(live, nxt, NIL)
+
+        carry, toks = jax.lax.scan(
+            body, (caches, cur_tok, ctx_lens, alive, budget), forced,
+            length=self.macro_k)
+        return carry[0], toks
+
+    def _macro_decode_step_sharded(self, done: Dict[int, List[int]]):
+        """Channel-sharded boundary step: commit the scan's WORST-CASE
+        growth schedule ahead of time — one channel-aware pool
+        allocation in the scan's pop order (step-major,
+        slot-ascending: exactly what K single steps would pop) + ONE
+        fused sharded map dispatch (``KVPageManager.precommit_growth``)
+        — then run the pure-decode K-step scan and the usual token
+        bookkeeping. Per K tokens: 1 MACRO_DISPATCHES, 1 HOST_SYNCS,
+        at most 1 XLATE_CALLS (growth boundaries only), 0 ALLOC_SYNCS
+        (the device free stacks are not consumed in-graph; they lazily
+        mirror for tests). A lane that retires mid-scan (full mode)
+        keeps its pre-committed pages until the slot frees — the pool
+        order then differs from the single-step schedule, which is the
+        one sharding-vs-single divergence (tokens never differ)."""
+        residents = [r for r in self.active.values()
+                     if self.kvm.is_resident(r.slot)]
+        K = self.macro_k
+        (tokens, alive, budget, npages, pend, fmask, ftok, emit,
+         slot2req) = self._macro_lanes(residents, K)
+        # worst-case growth schedule, no-retirement arithmetic — the
+        # same _growth_walk the C=1 simple scheduler and the reconcile
+        # replay use (mirror protocol, one home); the walk's own dl
+        # schedule rides along so pre-commit maps exactly those pages
+        grow_sched, dl_walk, npg = self._growth_walk(
+            lambda k: alive, npages, self.ctx_lens)
+        grow_seq = [int(s) for s in np.nonzero(grow_sched)[1]]
+        self.kvm.precommit_growth(
+            grow_seq, dlpns=[int(d) for d in dl_walk[grow_sched]])
+        src_valid = self._src_valid()
+        gen = K - np.maximum(pend - 1, 0)
+        simple = self.eos_id < 0 and bool(
+            (budget[alive] >= gen[alive]).all())
+        pages = self._page_bucket(int(npg[alive].max()))
+        MACRO_DISPATCHES[0] += 1
+        forced = (fmask, ftok, emit) if pend.any() else None
+        if simple:
+            self.caches, toks = self._macro_sh_simple(
+                self.params, self.caches, self.kvm.state.table, tokens,
+                self.ctx_lens, alive, budget, forced, src_valid, pages)
+        else:
+            self.caches, toks = self._macro_sh(
+                self.params, self.caches, self.kvm.state.table, tokens,
+                self.ctx_lens, alive, budget, forced, src_valid, pages)
+        HOST_SYNCS[0] += 1
+        toks = jax.device_get(toks)
+        self.metrics["macro_steps"] += 1
+        if simple:
+            self._macro_book_simple(residents, toks, pend, K, done)
+        else:
+            valid = (toks >= 0) & alive[None, :]
+            self._macro_book_full(valid, toks, slot2req, done)
 
     def _finish_step(self, residents, next_tok: np.ndarray,
                      done: Dict[int, List[int]]):

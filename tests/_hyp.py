@@ -1,15 +1,30 @@
 """Import shim for hypothesis: the real package when installed, else a
-stub that marks property tests as skipped (some containers ship no
+stub that REPLAYS explicit ``@example`` cases (some containers ship no
 hypothesis wheel and nothing may be pip-installed there). Seeded
-randomized loops in the same test modules keep coverage in that case.
+randomized loops in the same test modules keep broad coverage in that
+case; the explicit examples carry the pinned regression seeds from
+earlier PRs, which previously vanished with the skip — a property test
+with ``@example`` decorators now runs exactly those cases instead of
+skipping outright (tests with no examples still skip).
+
+Decorator order matches real hypothesis: ``@example`` stacks OUTSIDE
+``@given``::
+
+    @example([(True, [3], 7)])          # pinned regression case
+    @settings(max_examples=25)
+    @given(st.lists(...))
+    def test_prop(ops): ...
 """
 try:
-    from hypothesis import given, settings, strategies as st  # noqa: F401
+    from hypothesis import (example, given, settings,  # noqa: F401
+                            strategies as st)
     HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
-    import pytest
-
     HAVE_HYPOTHESIS = False
+    given, settings, st, example = None, None, None, None
+
+if not HAVE_HYPOTHESIS:
+    import pytest
 
     class _Strategy:
         """Absorbs any strategy-construction call chain."""
@@ -28,10 +43,32 @@ except ModuleNotFoundError:
     def given(*a, **k):
         def deco(fn):
             # zero-arg replacement: pytest must not mistake the wrapped
-            # test's hypothesis parameters for fixtures
-            def skipper():
-                pytest.skip("hypothesis not installed in this environment")
-            skipper.__name__ = fn.__name__
-            skipper.__doc__ = fn.__doc__
-            return skipper
+            # test's hypothesis parameters for fixtures. @example
+            # decorators applied outside this wrapper append to
+            # _examples; the runner replays them (regression seeds stay
+            # live in no-wheel containers) and only skips when none
+            # were pinned.
+            def runner():
+                if not runner._examples:
+                    pytest.skip(
+                        "hypothesis not installed in this environment")
+                for args, kwargs in runner._examples:
+                    runner._inner(*args, **kwargs)
+
+            runner._inner = fn
+            runner._examples = []
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+        return deco
+
+    def example(*args, **kwargs):
+        def deco(fn):
+            # applied above @given: fn is the runner; register on it.
+            # (Applied below @given — unusual but legal — there is
+            # nothing to replay through, so ignore silently, matching
+            # the old behavior rather than erroring.)
+            if hasattr(fn, "_examples"):
+                fn._examples.append((args, kwargs))
+            return fn
         return deco

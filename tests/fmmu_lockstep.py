@@ -285,6 +285,122 @@ def batch_lockstep(seed, n_batches=60, geom_kw=None, overflow=False):
     return f'OK:{lanes_done}'
 
 
+def sharded_geometries(n_channels, **kw):
+    """(single-device, per-channel) geometry pair covering the same
+    global dlpn space: the local shard owns ceil(n_pages / C) pages."""
+    base = dict(cmt_sets=8, cmt_ways=4)
+    base.update(kw)
+    g1 = small_geometry(**base)
+    n_pages = g1.n_tvpns * g1.entries_per_tp
+    loc = dict(base)
+    loc["n_tvpns"] = max(1, -(-(-(-n_pages // n_channels))
+                             // g1.entries_per_tp))
+    return g1, small_geometry(**loc)
+
+
+def sharded_lockstep(seed, n_channels, n_batches=40, geom_kw=None,
+                     table_every=5):
+    """ISSUE-5 oracle sweep: drive the channel-sharded translate and
+    the single-device serving path on IDENTICAL random mixed-op
+    batches (unconstrained: duplicate cache blocks, > W distinct new
+    blocks per set, duplicate read dlpns, inactive lanes — write
+    dlpns dedup'd per the caller contract) and assert
+
+      * per-lane outputs and CondUpdate ok masks bit-identical,
+      * the materialized sharded table bit-identical to the
+        single-device incremental table (every `table_every` batches
+        and at the end),
+      * both against the shadow dict (reads pre-batch, writes post).
+
+    The per-channel CMT geometry is 1/C-sized, so cache *internals*
+    legitimately differ — the contract is the architectural mapping
+    state, which is what the serving layer consumes.
+    Returns 'OK:<n_lanes>' or a divergence description."""
+    C = n_channels
+    g1, gC = sharded_geometries(C, **(geom_kw or {}))
+    n_pages = g1.n_tvpns * g1.entries_per_tp
+    n_blocks = n_pages // g1.cmt_entries
+    rng = random.Random(seed)
+    nprng = np.random.RandomState(seed)
+    ms1 = FB.init_serving_state(g1)
+    msC = FB.init_sharded_state(gC, C)
+    shadow = {}
+    lanes_done = 0
+
+    def gen_lanes(kind, max_blocks=4):
+        blks = nprng.choice(np.arange(n_blocks),
+                            rng.randint(1, max_blocks), replace=False)
+        dl = []
+        for b in blks:
+            for _ in range(rng.randint(1, 3)):
+                dl.append(int(b) * g1.cmt_entries
+                          + rng.randrange(g1.cmt_entries))
+        return [(kind, d) for d in dict.fromkeys(dl)]
+
+    for it in range(n_batches):
+        batch = (gen_lanes(LOOKUP) + gen_lanes(UPDATE)
+                 + gen_lanes(COND_UPDATE))
+        seen_w, dedup = set(), []
+        for k, d in batch:
+            if k != LOOKUP:
+                if d in seen_w:
+                    continue
+                seen_w.add(d)
+            dedup.append((k, d))
+        batch = dedup
+        rng.shuffle(batch)
+        if rng.random() < 0.3:
+            batch.append((LOOKUP, -1))          # inactive lane
+        # pad to a fixed lane width (inactive lanes are no-ops in both
+        # paths): one trace per geometry instead of one per batch size
+        batch = batch[:40] + [(LOOKUP, -1)] * (40 - len(batch))
+        kinds = np.array([k for k, _ in batch], np.int32)
+        dls = np.array([d for _, d in batch], np.int32)
+        dps = nprng.randint(0, 10 ** 6, len(batch)).astype(np.int32)
+        olds = np.array([shadow.get(int(d), NIL) if rng.random() < .6
+                         else rng.randrange(10 ** 6) for d in dls],
+                        np.int32)
+        ms1, out1, ok1 = FB.translate_serving(
+            g1, ms1, jnp.array(kinds), jnp.array(dls), jnp.array(dps),
+            jnp.array(olds))
+        msC, outC, okC = FB.translate_sharded(
+            gC, C, msC, jnp.array(kinds), jnp.array(dls),
+            jnp.array(dps), jnp.array(olds))
+        out1, ok1 = np.asarray(out1), np.asarray(ok1)
+        outC, okC = np.asarray(outC), np.asarray(okC)
+        if (out1 != outC).any():
+            i = int(np.nonzero(out1 != outC)[0][0])
+            return (f'batch {it} lane {i}: sharded out {outC[i]} != '
+                    f'single {out1[i]} (kind {kinds[i]} dlpn {dls[i]})')
+        if (ok1 != okC).any():
+            return f'batch {it}: ok mask sharded != single'
+        for i, (k, d) in enumerate(batch):
+            if d < 0:
+                continue
+            want = shadow.get(d, NIL)
+            if out1[i] != want:
+                return (f'batch {it} lane {i}: out {out1[i]} != shadow '
+                        f'{want}')
+            if k == COND_UPDATE and bool(ok1[i]) != (want == olds[i]):
+                return f'batch {it} lane {i}: ok mismatch vs shadow'
+        for i, (k, d) in enumerate(batch):
+            if d >= 0 and (k == UPDATE or (k == COND_UPDATE and ok1[i])):
+                shadow[d] = int(dps[i])
+        if it % table_every == table_every - 1:
+            t1 = np.asarray(ms1.table[:n_pages])
+            tC = np.asarray(FB.dense_table(msC, C, n_pages))
+            if (t1 != tC).any():
+                d = int(np.nonzero(t1 != tC)[0][0])
+                return (f'batch {it}: table diverged at dlpn {d} '
+                        f'(single {t1[d]} sharded {tC[d]})')
+        lanes_done += len(batch)
+    t1 = np.asarray(ms1.table[:n_pages])
+    tC = np.asarray(FB.dense_table(msC, C, n_pages))
+    if (t1 != tC).any():
+        return 'final table divergence'
+    return f'OK:{lanes_done}'
+
+
 if __name__ == '__main__':
     import sys
     sys.path.insert(0, 'src')
@@ -296,3 +412,5 @@ if __name__ == '__main__':
         print('batch', seed, batch_lockstep(seed))
         print('batch-ovf', seed, batch_lockstep(seed, overflow=True))
     print('batch-1way', batch_lockstep(9, geom_kw=dict(cmt_ways=1)))
+    for C in (1, 2, 4, 8):
+        print(f'sharded-C{C}', sharded_lockstep(5, C))

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hyp import given, settings, st
+from _hyp import example, given, settings, st
 
 from fmmu_lockstep import batch_lockstep
 from repro.core.fmmu import batch as B
@@ -90,6 +90,15 @@ def test_batch_capacity_eviction(setup):
     np.testing.assert_array_equal(np.asarray(out), np.asarray(dl) + 1)
 
 
+# pinned regression cases (replayed even without a hypothesis wheel —
+# tests/_hyp.py): same-set eviction churn across update/lookup rounds
+# (the PR-2 incremental-table seed), and a re-written dlpn read back
+# through a cold cache (the PR-4 swap CondUpdate shape)
+@example([(True, [0, 1, 2, 3], 100), (False, [3, 2, 1, 0], 0),
+          (True, [0, 64], 7), (False, [64, 0], 0),
+          (True, [0, 4, 8, 12, 16], 55), (False, [16, 0, 8], 0)])
+@example([(False, [127], 0), (True, [127], 5), (False, [127], 0),
+          (True, [127], 9), (False, [127], 0)])
 @settings(max_examples=25, deadline=None)
 @given(st.lists(st.tuples(st.booleans(),
                           st.lists(st.integers(0, 127), min_size=1,

@@ -228,6 +228,19 @@ def _valid_doc():
                           "swaps_out": 4, "swaps_in": 4}
                       for m in ("oversub_fused", "oversub_fallback")},
         },
+        "channel_scaling": {
+            "channels": [1, 2, 4, 8],
+            "device_count": 8, "cpu_bound": False,
+            "steps_per_sec": {f"n{n}": 100.0 * n
+                              for n in (1, 2, 4, 8)},
+            "dispersion": {f"n{n}": {"median": 100.0, "min": 90.0,
+                                     "iqr": 5.0,
+                                     "windows": [99.0, 101.0]}
+                           for n in (1, 2, 4, 8)},
+            "speedup_n8_vs_n1": 2.0,
+            "per_channel_lanes": {f"n{n}": [10] * n
+                                  for n in (2, 4, 8)},
+        },
     }
 
 
@@ -269,3 +282,15 @@ def test_bench_schema_accepts_valid_and_rejects_malformed(tmp_path):
            .update(macro_fallbacks="none"))
     broken(lambda d: d["oversubscription"]["tokens_per_sec"]
            .pop("oversub_fallback"))
+    # ISSUE-5 channel_scaling gates
+    broken(lambda d: d.pop("channel_scaling"))
+    broken(lambda d: d["channel_scaling"].update(channels=[1, 2, 4]))
+    broken(lambda d: d["channel_scaling"].pop("speedup_n8_vs_n1"))
+    broken(lambda d: d["channel_scaling"]["steps_per_sec"].pop("n8"))
+    broken(lambda d: d["channel_scaling"].update(cpu_bound="maybe"))
+    broken(lambda d: d["channel_scaling"]["per_channel_lanes"]
+           .update(n8=[10] * 7))        # wrong width for N=8
+    broken(lambda d: d["channel_scaling"]["per_channel_lanes"]
+           .update(n4=[0, 0, 0, 0]))    # zero routed lanes
+    broken(lambda d: d["channel_scaling"]["dispersion"]["n2"]
+           .update(windows=[1.0]))
