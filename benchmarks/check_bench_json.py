@@ -52,7 +52,8 @@ def check(doc: dict) -> None:
     _req(isinstance(doc, dict), "top level is not an object")
     for key in ("bench", "n_slots", "max_pages", "macro_k",
                 "steps_timed", "repeats", "steps_per_sec", "dispersion",
-                "speedups", "oversubscription", "channel_scaling"):
+                "speedups", "oversubscription", "channel_scaling",
+                "fault_injection"):
         _req(key in doc, f"missing top-level key {key!r}")
     _req(doc["bench"] == "serve_decode",
          f"bench is {doc['bench']!r}, expected 'serve_decode'")
@@ -148,6 +149,44 @@ def check(doc: dict) -> None:
                  f"channel_scaling.per_channel_lanes[{key!r}] is not "
                  f"a length-{n} non-negative int list with a positive "
                  "sum")
+    # ISSUE-6: the fault-injection group must record the degraded
+    # retention headline, both modes' delivered throughput, and the
+    # recovery counters that prove the degraded run exercised the plane
+    fi = doc["fault_injection"]
+    for key in ("channels", "stall", "swap_fail_p", "seed",
+                "retention_degraded_vs_healthy", "tokens_per_sec",
+                "modes"):
+        _req(key in fi, f"fault_injection missing {key!r}")
+    _req(isinstance(fi["channels"], int) and fi["channels"] > 0,
+         "fault_injection.channels is not a positive int")
+    _req(isinstance(fi["stall"], list)
+         and len(fi["stall"]) == fi["channels"]
+         and all(_num(s) and s >= 1.0 for s in fi["stall"]),
+         "fault_injection.stall is not a per-channel >=1 number list")
+    _req(_num(fi["retention_degraded_vs_healthy"])
+         and fi["retention_degraded_vs_healthy"] > 0,
+         "fault_injection.retention_degraded_vs_healthy is not a "
+         "positive number")
+    for mode in ("faults_healthy", "faults_degraded"):
+        _req(_num(fi["tokens_per_sec"].get(mode))
+             and fi["tokens_per_sec"][mode] > 0,
+             f"fault_injection.tokens_per_sec[{mode!r}] "
+             "is not a positive number")
+        counters = fi["modes"].get(mode)
+        _req(isinstance(counters, dict),
+             f"fault_injection.modes missing {mode!r}")
+        for key in ("swap_faults", "quarantines",
+                    "watchdog_quarantines", "requeues",
+                    "retired_blocks", "program_faults"):
+            _req(isinstance(counters.get(key), int),
+                 f"fault_injection.modes[{mode!r}].{key} is not an int")
+    # the degraded run must actually have hit faults, and the healthy
+    # control must not have — otherwise the retention number is
+    # measuring nothing
+    _req(fi["modes"]["faults_degraded"]["swap_faults"] > 0,
+         "fault_injection degraded run fired zero swap faults")
+    _req(fi["modes"]["faults_healthy"]["swap_faults"] == 0,
+         "fault_injection healthy control fired swap faults")
 
 
 def history_line(doc: dict) -> dict:
@@ -164,6 +203,8 @@ def history_line(doc: dict) -> dict:
             mode: counters["macro_fallbacks"]
             for mode, counters in doc["oversubscription"]["modes"].items()
         },
+        "degraded_retention":
+            doc["fault_injection"]["retention_degraded_vs_healthy"],
     }
 
 

@@ -86,12 +86,23 @@ OVERSUB_HOST = 640
 # windows as the main decode group, in its own group (its engines are
 # only comparable to each other)
 CHANNEL_SWEEP = (1, 2, 4, 8)
+# fault-injection degraded mode (ISSUE 6): the oversubscribed fused
+# engine, channel-sharded, with ONE channel browned out 4x and a 1%
+# injected swap-failure rate — measured as the same completion rounds
+# as the oversub pair against an identical healthy engine. The
+# deterministic plan regenerates from the seed (core/faults.make_plan)
+FAULT_CHANNELS = 4
+FAULT_STALL = (4.0, 1.0, 1.0, 1.0)
+FAULT_SWAP_P = 0.01
+FAULT_SEED = 2026
 # in-run speedup targets (ISSUE 3: fused >= 1.5x incremental;
 # ISSUE 4: non-blocking swap >= 1.3x the fall-back-on-pressure PR-3
-# behavior under 2x oversubscription)
+# behavior under 2x oversubscription; ISSUE 6: the degraded engine
+# retains >= 60% of the healthy fused engine's delivered tokens/sec)
 TARGETS = {"fused_macro_vs_incremental": 1.5,
            "incremental_vs_rebuild": 1.5,
-           "oversub_fused_vs_fallback": 1.3}
+           "oversub_fused_vs_fallback": 1.3,
+           "degraded_retention": 0.6}
 
 
 def _build_engine(mode: str):
@@ -147,6 +158,24 @@ def _build_engine(mode: str):
         return ServeEngine(m, params, n_slots=N_SLOTS, max_ctx=max_ctx,
                            macro_k=MACRO_K,
                            channels=int(mode.rsplit("_", 1)[1]))
+    if mode.startswith("faults_"):
+        # ISSUE-6 pair: identical channel-sharded oversubscribed fused
+        # engines; the degraded one carries the fault plane (brownout
+        # on channel 0 + injected swap failures) — the delta measured
+        # is exactly the cost of degradation plus recovery
+        from repro.core.faults import FaultPlane, make_plan
+        plane = None
+        if mode == "faults_degraded":
+            plane = FaultPlane(make_plan(
+                FAULT_SEED, channels=FAULT_CHANNELS,
+                swap_fail_p=FAULT_SWAP_P, stall=list(FAULT_STALL)))
+        eng = ServeEngine(m, params, n_slots=N_SLOTS, max_ctx=max_ctx,
+                          n_device_blocks=OVERSUB_DEV,
+                          n_host_blocks=OVERSUB_HOST, macro_k=MACRO_K,
+                          swap_patience=4, channels=FAULT_CHANNELS,
+                          fault_plane=plane)
+        eng.kvm.swap_pad = MAX_PAGES
+        return eng
     eng = ServeEngine(m, params, n_slots=N_SLOTS, max_ctx=max_ctx,
                       macro_k=MACRO_K if mode == "fused_macro" else 0)
     if pr2:
@@ -421,6 +450,55 @@ def _run_oversub(modes, repeats: int):
     return sps, tps, engines
 
 
+def _run_faults(repeats: int):
+    """ISSUE-6 measurement: graceful degradation under an adverse
+    fault schedule. Two identical channel-sharded oversubscribed fused
+    engines run interleaved completion rounds (same protocol as
+    ``_run_oversub``); the degraded one carries a deterministic fault
+    plane — one channel browned out 4x (its advertised free-block
+    budget shrinks, pushing residency/growth to healthy channels) and
+    a 1% injected swap-failure rate (retried with backoff; persistent
+    failers quarantine and restart). Throughput is DELIVERED
+    tokens/sec — tokens in completed outputs, not raw generation — so
+    a quarantined request's regenerated prefix cannot pad the degraded
+    number. Acceptance: the degraded engine retains >= 60% of healthy
+    throughput (TARGETS['degraded_retention'])."""
+    modes = ("faults_healthy", "faults_degraded")
+    engines = {}
+
+    def one_round(eng):
+        for i in range(N_SLOTS):
+            eng.submit(list(range(1 + i, 1 + i + OVERSUB_PROMPT)),
+                       max_new=OVERSUB_MAX_NEW)
+        done: dict = {}
+        eng.step(done)          # admissions + prefills + first step
+        t0 = time.perf_counter()
+        done.update(eng.run())
+        dt = time.perf_counter() - t0
+        assert not eng.active and not eng.queue, "round did not drain"
+        # the handful of pre-window tokens (prefill + first step) is
+        # identical across modes, so the retention ratio is unbiased
+        return sum(len(v) for v in done.values()) / dt
+
+    for mode in modes:
+        eng = _build_engine(mode)
+        need = -(-(OVERSUB_PROMPT + OVERSUB_MAX_NEW) // 8)
+        eng.min_page_bucket = 1 << (need - 1).bit_length()
+        one_round(eng)                       # warm-up, unmeasured
+        engines[mode] = eng
+    tps = {mode: [] for mode in modes}
+    for rep in range(repeats):
+        order = list(modes)[rep % len(modes):] \
+            + list(modes)[:rep % len(modes)]
+        for mode in order:
+            tps[mode].append(one_round(engines[mode]))
+    deg = engines["faults_degraded"]
+    assert deg.metrics["swap_faults"] > 0, \
+        "degraded mode never fired an injected swap failure"
+    assert engines["faults_healthy"].metrics["swap_faults"] == 0
+    return tps, engines
+
+
 def _dispersion(sps):
     qs = statistics.quantiles(sps, n=4) if len(sps) >= 2 else [sps[0]] * 3
     return {"median": round(statistics.median(sps), 2),
@@ -448,6 +526,9 @@ def main() -> None:
     over_sps, over_tps, over_eng = _run_oversub(
         ("oversub_fused", "oversub_fallback"), repeats)
     all_sps.update(over_sps)
+    # ISSUE-6 group: graceful degradation under faults (its own
+    # interleaved completion rounds; delivered tokens/sec)
+    fault_tps, fault_eng = _run_faults(repeats)
     # ISSUE-5 group: the fused macro engine across channel counts (its
     # own interleaved group — the engines are only comparable to each
     # other). On a host with fewer devices than channels the sharded
@@ -542,6 +623,17 @@ def main() -> None:
         emit(f"serve_decode_{mode}_tokens", 1e6 / max(d["median"], 1e-9),
              f"tokens_per_sec={d['median']:.2f}"
              f"_min={d['min']:.2f}_iqr={d['iqr']:.2f}")
+    # ISSUE-6 headline: median of per-round delivered-throughput ratios
+    # (same correlated-noise rationale as the other speedups)
+    retention = round(statistics.median(
+        x / y for x, y in zip(fault_tps["faults_degraded"],
+                              fault_tps["faults_healthy"])), 2)
+    fault_tokens = {m: _dispersion(w) for m, w in fault_tps.items()}
+    for mode, d in fault_tokens.items():
+        emit(f"serve_decode_{mode}_tokens", 1e6 / max(d["median"], 1e-9),
+             f"tokens_per_sec={d['median']:.2f}"
+             f"_min={d['min']:.2f}_iqr={d['iqr']:.2f}")
+    emit("serve_decode_degraded_retention", 0.0, f"x{retention:.2f}")
     for name, x in speedups.items():
         emit(f"serve_decode_speedup_{name}", 0.0, f"x{x:.2f}")
 
@@ -551,8 +643,10 @@ def main() -> None:
     # between runs, so a hard gate would be pure noise
     warnings = []
     for name, target in TARGETS.items():
-        if speedups[name] < target:
-            warnings.append(f"speedup {name} x{speedups[name]:.2f} "
+        got = retention if name == "degraded_retention" \
+            else speedups[name]
+        if got < target:
+            warnings.append(f"speedup {name} x{got:.2f} "
                             f"below x{target:.2f} target")
     # ISSUE-5 acceptance: >= 1.5x at N=8 on a real 8-device mesh; on a
     # CPU-bound host the lane counters above carry the claim instead
@@ -613,6 +707,32 @@ def main() -> None:
                         "swaps_in_blocks": eng.kvm.pool.stats.swaps_in,
                     },
                 } for mode, eng in over_eng.items()
+            },
+        },
+        # ISSUE-6: graceful degradation under a deterministic fault
+        # plan — retention is the acceptance headline, the recovery
+        # counters prove the degraded run actually exercised the plane
+        "fault_injection": {
+            "channels": FAULT_CHANNELS,
+            "stall": list(FAULT_STALL),
+            "swap_fail_p": FAULT_SWAP_P,
+            "seed": FAULT_SEED,
+            "retention_degraded_vs_healthy": retention,
+            "tokens_per_sec": {m: d["median"]
+                               for m, d in fault_tokens.items()},
+            "tokens_dispersion": fault_tokens,
+            "modes": {
+                mode: {
+                    "swap_faults": eng.metrics["swap_faults"],
+                    "quarantines": eng.metrics["quarantines"],
+                    "watchdog_quarantines":
+                        eng.metrics["watchdog_quarantines"],
+                    "requeues": eng.metrics["requeues"],
+                    "retired_blocks":
+                        eng.kvm.hit_stats()["retired_blocks"],
+                    "program_faults":
+                        eng.kvm.hit_stats()["program_faults"],
+                } for mode, eng in fault_eng.items()
             },
         },
     }

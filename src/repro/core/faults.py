@@ -1,0 +1,180 @@
+"""Deterministic, seedable fault-injection plane for the serving stack.
+
+The paper's FMMU exists because real NAND misbehaves: programs fail
+(bad blocks), channels stall, and relocation must therefore be
+retryable — which is exactly what the CondUpdate discipline (commit
+only if the mapping still points at the old block) buys. This module
+gives the reproduction the missing half: a fault model the layers
+above (BlockPool, KVPageManager, ServeEngine) can be driven against.
+
+Design (DESIGN.md "Fault plane as a pytree, recovery as relocation"):
+
+* A ``FaultPlan`` is a **pytree of precomputed schedule arrays**, not a
+  set of Python callbacks. Every axis is a function of ``(seed, axis,
+  op index)`` through a splitmix64 hash, so a plan is (a) fully
+  replayable from its integer seed — the chaos harness prints the seed
+  of a failing run and nothing else is needed to reproduce it — (b)
+  serializable/shippable like any other state pytree, and (c) inert
+  data: consuming it never traces, so attaching a plan to a manager
+  provably cannot change any device graph (the jaxpr-identity tests
+  assert exactly this).
+
+* Faults are **consumed at host commit points** (swap dispatch, pool
+  allocation, map-commit of freshly programmed blocks), indexed by
+  per-axis operation counters — never inside a jit. The hot path
+  therefore pays zero cost when faults are off *and* when they are on:
+  failure and recovery are host-side scheduling decisions, and
+  recovery itself reuses the existing fused CondUpdate relocation
+  machinery (a bad block is "just another relocation").
+
+Axes modeled (mirroring Copycat/SimpleSSD's per-operation error axes):
+
+* ``swap_fail``  — the i-th tier-move (gather/scatter swap) fails
+  before any state mutation; the engine retries with capped
+  exponential backoff and quarantines persistent failers.
+* ``program_fail`` — the i-th block program fails (a bad block); the
+  pool retires the block and the manager re-drives the write through
+  the fused CondUpdate path on a same-channel replacement.
+* ``alloc_fail`` — the i-th pool allocation transiently reports
+  exhaustion (typed ``PoolExhausted(transient=True)``); callers pause
+  and retry instead of treating it as terminal pressure.
+* ``stall``      — per-channel brownout multipliers (>= 1.0): the
+  engine divides a browned-out channel's advertised free-block budget
+  by its multiplier, shrinking admission/growth there while the other
+  channels keep decoding at full rate.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+# schedule-axis tags folded into the hash (stable across versions)
+AX_SWAP, AX_PROGRAM, AX_ALLOC, AX_STALL = 0, 1, 2, 3
+
+_GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_M2 = np.uint64(0x94D049BB133111EB)
+
+
+class SwapFault(RuntimeError):
+    """An injected tier-move (swap gather/scatter) failure. Raised by
+    ``KVPageManager._swap`` BEFORE any state mutation — map, pools,
+    page lists and free lists are exactly as they were, so the caller
+    may simply retry the swap later (capped exponential backoff in
+    ``ServeEngine``)."""
+
+    def __init__(self, slot: int, direction: int, n_blocks: int):
+        super().__init__(
+            f"injected swap failure: slot={slot} direction={direction} "
+            f"n_blocks={n_blocks}")
+        self.slot = slot
+        self.direction = direction
+        self.n_blocks = n_blocks
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer: stable forever, everywhere —
+    schedules must not drift across numpy versions or platforms.
+    uint64 wraparound is the algorithm, not an accident."""
+    with np.errstate(over="ignore"):
+        z = (x + _GOLDEN).astype(np.uint64)
+        z = (z ^ (z >> np.uint64(30))) * _M1
+        z = (z ^ (z >> np.uint64(27))) * _M2
+        return z ^ (z >> np.uint64(31))
+
+
+def _unit(seed: int, axis: int, n: int) -> np.ndarray:
+    """n deterministic floats in [0, 1) for (seed, axis)."""
+    with np.errstate(over="ignore"):
+        base = _splitmix64(np.uint64(seed & 0xFFFFFFFFFFFFFFFF)
+                           ^ (np.uint64(axis) * _M2))
+        idx = np.arange(n, dtype=np.uint64)
+        bits = _splitmix64(base + idx * _GOLDEN)
+    return (bits >> np.uint64(11)).astype(np.float64) * (2.0 ** -53)
+
+
+class FaultPlan(NamedTuple):
+    """Pytree of per-operation failure schedules. All leaves are plain
+    data (numpy); ``seed`` regenerates the whole plan via
+    ``make_plan``. Schedules are indexed with wraparound by the
+    consuming ``FaultPlane``'s per-axis op counters."""
+    seed: int
+    swap_fail: np.ndarray      # [H] bool — i-th swap op fails
+    program_fail: np.ndarray   # [H] bool — i-th block program fails
+    alloc_fail: np.ndarray     # [H] bool — i-th pool alloc is transient-dry
+    stall: np.ndarray          # [C] float >= 1 — per-channel brownout
+
+
+def make_plan(seed: int, *, channels: int = 1,
+              swap_fail_p: float = 0.0, program_fail_p: float = 0.0,
+              alloc_fail_p: float = 0.0,
+              stall: Optional[Sequence[float]] = None,
+              horizon: int = 2048) -> FaultPlan:
+    """Build a deterministic plan: schedule bit i of axis a is
+    ``hash(seed, a, i) < p``. Two calls with the same arguments yield
+    bit-identical plans on any platform."""
+    assert horizon > 0
+    st = (np.ones(channels, np.float64) if stall is None
+          else np.asarray(stall, np.float64))
+    assert st.shape == (channels,), (st.shape, channels)
+    assert (st >= 1.0).all(), "stall multipliers are >= 1 (1 = healthy)"
+    return FaultPlan(
+        seed=int(seed),
+        swap_fail=_unit(seed, AX_SWAP, horizon) < swap_fail_p,
+        program_fail=_unit(seed, AX_PROGRAM, horizon) < program_fail_p,
+        alloc_fail=_unit(seed, AX_ALLOC, horizon) < alloc_fail_p,
+        stall=st)
+
+
+class FaultPlane:
+    """Host-side consumer of a ``FaultPlan``: one monotone op counter
+    per axis, advanced at each commit point the axis models. Purely
+    host state — it never enters a traced graph, which is what makes
+    the disabled-fault path jaxpr-identical by construction."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.ops = {"swap": 0, "program": 0, "alloc": 0}
+        self.fired = {"swap": 0, "program": 0, "alloc": 0}
+
+    def _next(self, axis: str, sched: np.ndarray) -> bool:
+        i = self.ops[axis]
+        self.ops[axis] = i + 1
+        hit = bool(sched[i % len(sched)]) if len(sched) else False
+        if hit:
+            self.fired[axis] += 1
+        return hit
+
+    def swap_fails(self) -> bool:
+        """Consume the next swap-op schedule entry."""
+        return self._next("swap", self.plan.swap_fail)
+
+    def program_fails(self) -> bool:
+        """Consume the next block-program schedule entry."""
+        return self._next("program", self.plan.program_fail)
+
+    def alloc_fails(self) -> bool:
+        """Consume the next pool-allocation schedule entry."""
+        return self._next("alloc", self.plan.alloc_fail)
+
+    def stall_vec(self, channels: int) -> np.ndarray:
+        """Per-channel stall multipliers, broadcast to `channels` when
+        the plan was built for one channel."""
+        st = self.plan.stall
+        if len(st) == channels:
+            return st
+        assert len(st) == 1, (len(st), channels)
+        return np.full(channels, float(st[0]))
+
+    def counts(self) -> dict:
+        """Fired-fault counts per axis (for hit_stats / diagnostics)."""
+        return dict(self.fired)
+
+    def describe(self) -> str:
+        p = self.plan
+        return (f"FaultPlan(seed={p.seed}, "
+                f"swap={int(p.swap_fail.sum())}/{len(p.swap_fail)}, "
+                f"program={int(p.program_fail.sum())}/{len(p.program_fail)}, "
+                f"alloc={int(p.alloc_fail.sum())}/{len(p.alloc_fail)}, "
+                f"stall={np.asarray(p.stall).tolist()})")

@@ -246,6 +246,17 @@ class ServingMapState(NamedTuple):
     failed in-graph alloc sets it instead of raising, and the host
     falls back to single-step mode when it reads the flag.
 
+    Detection latency (ISSUE 6): the flag is written in-graph but only
+    *observable* at a host sync — a K-step macro scan that runs a
+    channel dry at scan step j surfaces the failure at the boundary,
+    up to K tokens after the fact. Stickiness is what makes the
+    deferred read lossless: the flag cannot un-set until the host
+    acknowledges it (``set_allocator`` clears it during the resync).
+    Hosts fold observed flags into the typed per-channel exhaustion
+    counts via ``KVPageManager.observe_exhaustion`` (read through
+    ``oob_vec`` — per-channel at C>1, where each shard raises its own
+    flag and a silent wedge would otherwise hide real pool pressure).
+
     ``swap_pending`` [n_lanes] is the host-tier residency lane
     (DESIGN.md "Non-blocking host-tier swap pipeline"): True while a
     serving slot's KV pages live in the host tier (swapped out, or a
@@ -280,6 +291,14 @@ def init_serving_state(g: FMMUGeometry, n_device_blocks: int = 0,
         host_n=jnp.asarray(n_host_blocks, I),
         oob=jnp.asarray(False),
         swap_pending=jnp.zeros((n_lanes,), bool))
+
+
+def oob_vec(ms: ServingMapState) -> jnp.ndarray:
+    """The sticky OutOfBlocks flag lane as a [C] vector ([1] for the
+    unsharded state, whose flag is a scalar): the ONE home of the
+    flag-read layout, so every boundary observer (engine, tests,
+    KVPageManager.observe_exhaustion) indexes channels identically."""
+    return jnp.atleast_1d(ms.oob)
 
 
 # ------------------------------------------------- device allocator ops

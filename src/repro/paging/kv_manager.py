@@ -70,10 +70,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as flt
 from repro.core.fmmu import batch as fb
 from repro.core.fmmu.types import (COND_UPDATE, FMMUGeometry, NIL,
                                    SWAP_IN, SWAP_OUT, UPDATE)
-from repro.paging.pool import HOST_BASE, BlockPool, OutOfBlocks
+from repro.paging.pool import (HOST_BASE, BlockPool, OutOfBlocks,
+                               PoolExhausted)
 
 # Host-level call counters (the PROBE_TRACES pattern, at op granularity):
 # bumped once per *invocation*, so tests can assert that a steady-state
@@ -83,6 +85,12 @@ from repro.paging.pool import HOST_BASE, BlockPool, OutOfBlocks
 XLATE_CALLS = [0]
 FULL_TABLE_CALLS = [0]
 ALLOC_SYNCS = [0]
+
+# bad-block re-drive bound: a retirement chain retires at most this
+# many consecutive schedule-failed replacement candidates before the
+# last candidate is kept regardless (bounded recovery — no infinite
+# retirement cascade can stall a boundary)
+_MAX_REDRIVE = 4
 
 
 def _move_rows(pool, src, dst, axis: int):
@@ -117,12 +125,22 @@ class KVPageManager:
 
     def __init__(self, n_slots: int, max_pages: int, n_device_blocks: int,
                  n_host_blocks: int = 0, channels: int = 1,
-                 use_mesh: Optional[bool] = None):
+                 use_mesh: Optional[bool] = None,
+                 faults: Optional["flt.FaultPlane"] = None):
         self.n_slots = n_slots
         self.max_pages = max_pages
+        self._n_dev = n_device_blocks
+        self._n_host = n_host_blocks
         self.channels = C = int(channels)
         self.geom = _geometry(n_slots, max_pages, C)
         self.fns = fb.make_jitted(self.geom)
+        # fault-injection plane (ISSUE 6, core/faults.py): consulted at
+        # host commit points only — swap dispatch (_swap), pool
+        # allocation (_alloc_blocks), and fresh-block program commits
+        # (new_seq / extend_seqs / precommit_growth). None (default)
+        # costs nothing and, because the plane never enters a traced
+        # graph, attaching one cannot change any jaxpr either.
+        self.faults = faults
         # ISSUE-5 channel sharding: with channels > 1 the map state is C
         # per-channel ServingMapState shards stacked on a leading axis
         # (each shard: 1/C-sized CMT + backing + table slice + the free
@@ -135,13 +153,10 @@ class KVPageManager:
         # forces 8 host devices), else jax.vmap — both bit-identical.
         self.mesh = None
         if C > 1:
-            self.state = fb.init_sharded_state(
-                self.geom, C, n_device_blocks, n_host_blocks,
-                n_lanes=n_slots)
             if use_mesh is None:
                 use_mesh = len(jax.devices()) >= C
             if use_mesh:
-                from jax.sharding import NamedSharding, PartitionSpec as P
+                from jax.sharding import PartitionSpec as P
 
                 from repro.parallel.sharding import channel_mesh, shard_map
                 self.mesh = channel_mesh(C)
@@ -150,8 +165,6 @@ class KVPageManager:
                     mesh=self.mesh,
                     in_specs=(P("channel"), P(), P(), P(), P()),
                     out_specs=(P("channel"), P(), P()))
-                self.state = jax.device_put(
-                    self.state, NamedSharding(self.mesh, P("channel")))
             else:
                 self._xlate_graph = functools.partial(
                     fb.translate_sharded, self.geom, C)
@@ -161,10 +174,8 @@ class KVPageManager:
             # claim is asserted from these, not inferred from timings
             self.channel_lanes = np.zeros(C, np.int64)
         else:
-            self.state = fb.init_serving_state(
-                self.geom, n_device_blocks, n_host_blocks,
-                n_lanes=n_slots)
             self.channel_lanes = np.zeros(1, np.int64)
+        self.state = self._fresh_state()
         self.pool = BlockPool(n_device_blocks, n_host_blocks,
                               n_channels=C)
         self.seq_pages: Dict[int, List[int]] = {}   # slot -> block ids
@@ -204,6 +215,38 @@ class KVPageManager:
         self.swap_pad: Optional[int] = None
 
     # ----------------------------------------------------------- helpers
+    def _fresh_state(self):
+        """Build (or rebuild) the device-resident map state pytree —
+        the ONE home of the init-and-shard logic, shared by __init__
+        and ``reset``."""
+        if self.channels > 1:
+            st = fb.init_sharded_state(
+                self.geom, self.channels, self._n_dev, self._n_host,
+                n_lanes=self.n_slots)
+            if self.mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                st = jax.device_put(
+                    st, NamedSharding(self.mesh, P("channel")))
+            return st
+        return fb.init_serving_state(self.geom, self._n_dev,
+                                     self._n_host, n_lanes=self.n_slots)
+
+    def reset(self, faults: Optional["flt.FaultPlane"] = None):
+        """Reinitialize map state, pool and bookkeeping while KEEPING
+        every compiled closure (_swap_jits, the serve/retranslate/
+        set-alloc jits): jitted bound methods trace per *instance*, so
+        a fresh manager would recompile the world — the chaos harness
+        (tests/chaos/) replays hundreds of fault schedules against ONE
+        manager via this. Optionally installs a new fault plane."""
+        self.state = self._fresh_state()
+        self.pool = BlockPool(self._n_dev, self._n_host,
+                              n_channels=self.channels)
+        self.seq_pages = {}
+        self._host_pages = {}
+        self._alloc_dirty = False
+        self.channel_lanes[:] = 0
+        self.faults = faults
+
     def _dlpns(self, slot: int, pages: range) -> np.ndarray:
         return np.asarray([slot * self.max_pages + p for p in pages],
                           np.int32)
@@ -235,6 +278,17 @@ class KVPageManager:
         at channels=1 (the legacy path, bit-identical), per-owner-
         channel pops otherwise — page and backing block always share a
         channel, so each channel's device stack mirror stays exact."""
+        if self.faults is not None and len(dlpns) \
+                and self.faults.alloc_fails():
+            # injected transient exhaustion: raised BEFORE any pop, so
+            # the caller's retry sees an untouched pool. transient=True
+            # tells the engine's livelock guard this is not terminal.
+            c = int(dlpns[0]) % self.channels
+            self.pool.note_exhausted(c)
+            raise PoolExhausted(
+                f"injected transient {'host' if host else 'device'} "
+                f"allocator exhaustion ({len(dlpns)} blocks)",
+                channel=c, transient=True)
         if self.channels == 1:
             return self.pool.alloc(len(dlpns), host=host)
         return self.pool.alloc_for(
@@ -270,7 +324,11 @@ class KVPageManager:
         self._alloc_dirty = True
         self._xlate(UPDATE, dl, blocks)
         self.seq_pages[slot] = list(blocks)
-        return blocks
+        # program-fault check AFTER the map commit, BEFORE any data is
+        # written (prefill follows admission): a bad block here needs
+        # only the CondUpdate re-drive, no row copy
+        self._maybe_retire_programs(dl, blocks)
+        return list(self.seq_pages[slot])
 
     def extend_seq(self, slot: int, n_new: int) -> List[int]:
         return self.extend_seqs({slot: n_new}).get(slot, [])
@@ -297,6 +355,10 @@ class KVPageManager:
             i += n
             self.seq_pages[slot].extend(got[slot])
         self._xlate(UPDATE, dl, blocks)
+        # growth blocks are programmed by the decode step that follows;
+        # a schedule-failed program re-drives map-only (no data yet)
+        if self._maybe_retire_programs(dl, blocks):
+            got = {s: self.seq_pages[s][-n:] for s, n in wants.items()}
         return got
 
     def free_seq(self, slot: int):
@@ -362,6 +424,13 @@ class KVPageManager:
         if not self._alloc_dirty:
             return
         ALLOC_SYNCS[0] += 1
+        if self.channels > 1:
+            # the re-push clears the sticky per-channel oob flag lane;
+            # fold any set flags into the typed exhaustion counts FIRST
+            # — the C>1 engine otherwise never reads the lane (the
+            # ISSUE-6 "silent case"; the C=1 macro boundary passes its
+            # already-synced flag to observe_exhaustion instead)
+            self.observe_exhaustion()
         # refresh the residency lane in the same call: host-side frees
         # of swapped-out slots leave swap_pending stale until here, and
         # every such free also dirtied the pool
@@ -455,11 +524,162 @@ class KVPageManager:
         assert len(dl) == len(grow_seq)
         blocks = self._alloc_blocks(dl)
         self._alloc_dirty = True
+        counts: Dict[int, int] = {}
         for slot, b in zip(grow_seq, blocks):
             self.seq_pages[slot].append(b)
             got.setdefault(slot, []).append(b)
+            counts[slot] = counts.get(slot, 0) + 1
         self._xlate(UPDATE, dl, blocks)
+        # pre-committed growth blocks are programmed by the scan that
+        # follows this boundary, so (like extend_seqs) a bad block here
+        # re-drives map-only — the scan then writes the replacement
+        if self._maybe_retire_programs(dl, blocks):
+            got = {s: self.seq_pages[s][-n:] for s, n in counts.items()}
         return got
+
+    # -------------------------------------- bad-block retirement (ISSUE 6)
+    def _maybe_retire_programs(self, dl, blocks) -> int:
+        """Consult the fault plane once per freshly programmed device
+        block (allocation order); retire + re-drive any that failed.
+        Map-only recovery — callers invoke this before the block's
+        data is written. Returns the number of blocks retired."""
+        f = self.faults
+        if f is None:
+            return 0
+        bad = [(int(d), int(b)) for d, b in zip(dl, blocks)
+               if not BlockPool.is_host(int(b)) and f.program_fails()]
+        if not bad:
+            return 0
+        _, n = self.retire_bad_blocks(bad)
+        return n
+
+    def retire_bad_blocks(self, bad: List[Tuple[int, int]], pools=None,
+                          block_axis: int = 0):
+        """Bad-block retirement: for each (dlpn, block) whose program
+        failed, pop a replacement from the SAME channel, commit
+        dlpn -> replacement through the fused CondUpdate single-probe
+        path (failure-is-just-another-relocation: the paper's GC
+        discipline already arbitrates racing relocations, so a program
+        failure needs no new invariants), and permanently retire the
+        bad block from the pool. With ``pools`` the relocation also
+        copies the KV rows old -> new inside the same donated jit (for
+        blocks whose data was already programmed, e.g. in-scan macro
+        growth reconciled at the boundary); without, only the map
+        commits — detection preceded the data write. Replacement
+        programs re-consult the plane: a bounded re-drive chain
+        (_MAX_REDRIVE) retires runs of bad blocks. A dry channel
+        defers retirement — the original block stays in service and
+        data stays intact either way. Returns (pools, n_retired)."""
+        f = self.faults
+        done: List[Tuple[int, int, int]] = []    # (dlpn, old, new)
+        for dlpn, old in bad:
+            assert not BlockPool.is_host(old), \
+                "program faults model device-tier block programs"
+            c = self.pool.channel_of(old)
+            chain = [old]
+            new = None
+            for i in range(_MAX_REDRIVE):
+                try:
+                    cand = self.pool.alloc_for([c])[0]
+                except OutOfBlocks:
+                    break
+                chain.append(cand)
+                if f is None or i == _MAX_REDRIVE - 1 \
+                        or not f.program_fails():
+                    new = cand
+                    break
+            if new is None:
+                continue    # dry channel: old block serves on, un-retired
+            self.pool.retire([b for b in chain if b != new])
+            done.append((dlpn, old, new))
+        if not done:
+            return pools, 0
+        self._alloc_dirty = True
+        dl = [d for d, _, _ in done]
+        olds = [o for _, o, _ in done]
+        news = [n for _, _, n in done]
+        if pools is None:
+            self._xlate(COND_UPDATE, dl, news, olds)
+        else:
+            pools = self._retire_move(dl, news, olds, pools, block_axis)
+        for d, o, n in done:
+            pages = self.seq_pages[d // self.max_pages]
+            pages[pages.index(o)] = n
+        return pools, len(done)
+
+    def _retire_fn(self, cap: int, block_axis: int, n_pools: int):
+        """Fused retirement-relocation jit (cached beside the swap
+        jits): CondUpdate map commit + device-row copy old -> new in
+        ONE donated call — the swap pipeline's shape minus the
+        residency-lane flip (retirement never changes tier)."""
+        key = ("retire", cap, block_axis, n_pools)
+        fn = self._swap_jits.get(key)
+        if fn is None:
+            g = self.geom
+            sharded = self.channels > 1
+
+            def f(ms, pools, dl, newb, oldb, src, dst):
+                opc = jnp.full((cap,), COND_UPDATE, jnp.int32)
+                if sharded:
+                    ms, _, ok = self._xlate_graph(ms, opc, dl, newb,
+                                                  oldb)
+                else:
+                    ms, _, ok = fb.translate_serving(g, ms, opc, dl,
+                                                     newb, oldb)
+                pools = [_move_rows(p, src, dst, block_axis)
+                         for p in pools]
+                return ms, pools, ok
+
+            fn = jax.jit(f, donate_argnums=(0, 1))
+            self._swap_jits[key] = fn
+        return fn
+
+    def _retire_move(self, dl, news, olds, pools, block_axis):
+        """Dispatch one fused retirement relocation (lanes padded to
+        the next power of two, exactly like ``_swap``). Device-tier
+        rows are the block ids themselves."""
+        n = len(dl)
+        cap = 1 << (n - 1).bit_length()
+        pad = cap - n
+
+        def arr(xs, fill):
+            return np.asarray(list(xs) + [fill] * pad, np.int32)
+
+        XLATE_CALLS[0] += 1
+        if self.channels > 1:
+            self.channel_lanes += np.bincount(
+                np.asarray(dl) % self.channels,
+                minlength=self.channels)
+        else:
+            self.channel_lanes[0] += n
+        fn = self._retire_fn(cap, block_axis, len(pools))
+        # pad map lanes are inactive (dl=-1); pad moves repeat lane 0's
+        # (src, dst) pair — duplicate writes of an identical value
+        self.state, pools, ok = fn(
+            self.state, list(pools), arr(dl, -1), arr(news, 0),
+            arr(olds, 0), arr(olds, olds[0]), arr(news, news[0]))
+        return pools
+
+    def observe_exhaustion(self, flags=None) -> np.ndarray:
+        """Fold the sticky in-graph OutOfBlocks flag lane into the
+        typed per-channel exhaustion counts (``pool.exhausted_ch`` /
+        hit_stats "pool_exhausted"). ``flags`` (host values) avoids a
+        device readback when the caller already synced them — the C=1
+        macro boundary passes the scan's returned flag; ``None`` reads
+        ``state.oob``. Detection latency: an in-graph allocation
+        failure at scan step j only becomes observable here, at the
+        next boundary/sync — up to K tokens after the fact (documented
+        + asserted in tests/test_faults.py). Any set flag marks the
+        allocator dirty so the next ``sync_allocator`` re-push clears
+        the lane."""
+        if flags is None:
+            flags = jax.device_get(self.state.oob)
+        flags = np.atleast_1d(np.asarray(flags))
+        for c, hit in enumerate(flags):
+            if hit:
+                self.pool.note_exhausted(c % self.channels)
+                self._alloc_dirty = True
+        return flags
 
     # ----------------------------------------------------------- swapping
     def _swap_fn(self, cap: int, block_axis: int, n_pools: int):
@@ -506,6 +726,12 @@ class KVPageManager:
         moving = [b for b in blocks if BlockPool.is_host(b) != out]
         if not moving:
             return pools, 0
+        if self.faults is not None and self.faults.swap_fails():
+            # injected BEFORE any mutation (allocs, map, pools, page
+            # lists): the caller may retry the identical swap later —
+            # the engine backs off exponentially and quarantines a
+            # slot whose swap keeps failing
+            raise flt.SwapFault(slot, direction, len(moving))
         dl = [slot * self.max_pages + i for i, b in enumerate(blocks)
               if BlockPool.is_host(b) != out]
         fresh = self._alloc_blocks(dl, host=out)
@@ -590,6 +816,7 @@ class KVPageManager:
         s = np.asarray(self.state.fmmu.stats)
         if self.channels > 1:
             s = s.sum(axis=0)
+        fired = self.faults.counts() if self.faults is not None else {}
         return {"hits": int(s[0]), "misses": int(s[1]),
                 "fills": int(s[2]), "updates": int(s[3]),
                 # swap/tier activity (ISSUE-4): the zero-fallback claim
@@ -597,4 +824,13 @@ class KVPageManager:
                 "swaps_out": self.pool.stats.swaps_out,
                 "swaps_in": self.pool.stats.swaps_in,
                 "host_resident_slots": sum(
-                    1 for c in self._host_pages.values() if c > 0)}
+                    1 for c in self._host_pages.values() if c > 0),
+                # fault/recovery plane (ISSUE 6): retirement + typed
+                # per-channel exhaustion attribution + fired-fault
+                # counts (all zero without a plane)
+                "retired_blocks": self.pool.stats.retired,
+                "retired_ch": list(self.pool.retired_ch),
+                "pool_exhausted": list(self.pool.exhausted_ch),
+                "swap_faults": fired.get("swap", 0),
+                "program_faults": fired.get("program", 0),
+                "alloc_faults": fired.get("alloc", 0)}

@@ -19,13 +19,29 @@ channel-0 list IS the old list object).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence, Set
 
 from repro.core.fmmu.types import HOST_BASE
 
 
 class OutOfBlocks(RuntimeError):
     pass
+
+
+class PoolExhausted(OutOfBlocks):
+    """Typed pool-pressure error (ISSUE 6): carries the channel the
+    shortage was attributed to and whether it was a *transient*
+    injected exhaustion (fault plane) rather than genuine dry-pool
+    pressure. Subclasses ``OutOfBlocks`` so every existing handler
+    keeps working; new code should match on this type and consult
+    ``transient`` — the engine's livelock guard must NOT treat an
+    injected transient shortage as terminal."""
+
+    def __init__(self, msg: str, *, channel: Optional[int] = None,
+                 transient: bool = False):
+        super().__init__(msg)
+        self.channel = channel
+        self.transient = transient
 
 
 @dataclasses.dataclass
@@ -35,6 +51,7 @@ class PoolStats:
     swaps_out: int = 0
     swaps_in: int = 0
     peak_used: int = 0
+    retired: int = 0          # bad blocks permanently removed (ISSUE 6)
 
 
 class BlockPool:
@@ -57,6 +74,15 @@ class BlockPool:
         self._free_host = self._free_host_ch[0]
         self._rr = 0        # channel-agnostic alloc's round-robin cursor
         self.stats = PoolStats()
+        # bad-block retirement (ISSUE 6): retired blocks never re-enter
+        # a free list — free() drops them — and capacity shrinks
+        # permanently, like marking a NAND block bad in the BBT
+        self._retired: Set[int] = set()
+        self.retired_ch = [0] * n_channels
+        # per-channel PoolExhausted attribution counts (typed error
+        # path; also bumped by KVPageManager.observe_exhaustion when
+        # the device-side sticky oob flag lane is read at a boundary)
+        self.exhausted_ch = [0] * n_channels
 
     @staticmethod
     def is_host(block: int) -> bool:
@@ -101,9 +127,13 @@ class BlockPool:
         callers cannot silently drain one channel."""
         lists = self._free_host_ch if host else self._free_dev_ch
         if sum(len(ch) for ch in lists) < n:
-            raise OutOfBlocks(
+            # aggregate shortage: attribute it to the emptiest channel
+            # (the binding constraint) for the per-channel counts
+            c = min(range(self.n_channels), key=lambda i: len(lists[i]))
+            self.note_exhausted(c)
+            raise PoolExhausted(
                 f"need {n} {'host' if host else 'device'} blocks, "
-                f"have {sum(len(ch) for ch in lists)}")
+                f"have {sum(len(ch) for ch in lists)}", channel=c)
         if self.n_channels == 1:
             pool = lists[0]
             out = [pool.pop() for _ in range(n)]
@@ -131,16 +161,46 @@ class BlockPool:
             need[c] += 1
         for c, k in enumerate(need):
             if k > len(lists[c]):
-                raise OutOfBlocks(
+                self.note_exhausted(c)
+                raise PoolExhausted(
                     f"need {k} {'host' if host else 'device'} blocks "
-                    f"in channel {c}, have {len(lists[c])}")
+                    f"in channel {c}, have {len(lists[c])}", channel=c)
         out = [lists[c].pop() for c in channels]
         self._bump_alloc(len(out))
         return out
 
     def free(self, blocks: List[int]):
+        n = 0
         for b in blocks:
+            if b in self._retired:
+                continue        # retired blocks never re-enter service
             lists = (self._free_host_ch if self.is_host(b)
                      else self._free_dev_ch)
             lists[self.channel_of(b)].append(b)
-        self.stats.frees += len(blocks)
+            n += 1
+        self.stats.frees += n
+
+    # ------------------------------------------------ faults (ISSUE 6)
+    def retire(self, blocks: Sequence[int]):
+        """Permanently remove blocks from service (bad-block
+        retirement): they are dropped from any future ``free`` and
+        counted per channel. Callers retire blocks they currently own
+        (allocated, not on a free list) after relocating their mapping
+        to a replacement — failure-is-just-another-relocation."""
+        for b in blocks:
+            assert b not in self._retired, f"block {b} retired twice"
+            self._retired.add(b)
+            self.retired_ch[self.channel_of(b)] += 1
+        self.stats.retired += len(blocks)
+
+    def is_retired(self, block: int) -> bool:
+        return block in self._retired
+
+    def note_exhausted(self, channel: int, n: int = 1):
+        """Attribute one (or n) pool-exhaustion events to a channel:
+        the typed-raise paths call this directly; the device-side
+        sticky oob flag lane folds in via
+        ``KVPageManager.observe_exhaustion`` at macro boundaries (the
+        in-graph failure is observed up to K tokens after it
+        happened — the documented detection latency)."""
+        self.exhausted_ch[channel] += n

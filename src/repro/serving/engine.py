@@ -89,6 +89,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.faults import FaultPlane, SwapFault
 from repro.core.fmmu import batch as fb
 from repro.core.fmmu.types import NIL
 from repro.models import transformer
@@ -127,7 +128,10 @@ class ServeEngine:
                  macro_k: int = 0, nonblocking_swap: bool = True,
                  admit_tokens: Optional[int] = None,
                  swap_patience: int = 4, channels: int = 1,
-                 use_mesh: Optional[bool] = None):
+                 use_mesh: Optional[bool] = None,
+                 fault_plane: Optional[FaultPlane] = None,
+                 max_swap_retries: int = 3, swap_backoff_cap: int = 8,
+                 watchdog_rounds: Optional[int] = None):
         self.m = model
         self.cfg = model.cfg
         self.rt = model.rt
@@ -155,7 +159,8 @@ class ServeEngine:
         # whose model is already mesh-sharded.
         self.kvm = KVPageManager(n_slots, self.max_pages, n_dev,
                                  n_host_blocks, channels=self.channels,
-                                 use_mesh=bool(use_mesh))
+                                 use_mesh=bool(use_mesh),
+                                 faults=fault_plane)
         src_len = _src_len(self.cfg, max_ctx)
         # +1 scratch block: unmapped table entries (inactive slots) write
         # their garbage KV there instead of corrupting block 0
@@ -231,10 +236,30 @@ class ServeEngine:
         self._boundary = 0
         self._pending_since: Dict[int, int] = {}
         self._resident_since: Dict[int, int] = {}
+        # fault plane + recovery machinery (ISSUE 6, core/faults.py):
+        # swap failures retry with capped exponential backoff and a
+        # per-slot counter — a persistent failer is QUARANTINED (pages
+        # freed, request requeued at the admission front, reservation
+        # released the same boundary); a macro-boundary watchdog
+        # force-quarantines any lane with no token progress for
+        # watchdog_rounds boundaries (None: 8*patience with a plane,
+        # off without — a healthy engine cannot strand a lane)
+        self.faults = fault_plane
+        self.max_swap_retries = int(max_swap_retries)
+        self.swap_backoff_cap = int(swap_backoff_cap)
+        if watchdog_rounds is None:
+            watchdog_rounds = (8 * max(1, self.swap_patience)
+                               if fault_plane is not None else 0)
+        self.watchdog_rounds = int(watchdog_rounds)
+        self._swap_fails: Dict[int, int] = {}     # slot -> consecutive
+        self._retry_at: Dict[int, int] = {}       # slot -> boundary gate
+        self._progress: Dict[int, tuple] = {}     # slot -> (out, pend, bd)
         self.metrics = {"prefills": 0, "decode_steps": 0, "preemptions": 0,
                         "generated": 0, "macro_steps": 0,
                         "macro_fallbacks": 0, "swaps_out": 0,
-                        "swaps_in": 0, "chunked_prefills": 0}
+                        "swaps_in": 0, "chunked_prefills": 0,
+                        "swap_faults": 0, "quarantines": 0,
+                        "watchdog_quarantines": 0, "requeues": 0}
 
     # ------------------------------------------------------------- API
     def submit(self, tokens: List[int], max_new: int = 16, *,
@@ -252,6 +277,34 @@ class ServeEngine:
                 break
         return done
 
+    def reset(self, fault_plane: Optional[FaultPlane] = None):
+        """Fresh serving state on the SAME compiled jits: the decode /
+        prefill / macro / swap closures are bound methods whose traces
+        are per-instance, so a new ServeEngine recompiles everything —
+        this instead reinitializes map, pool, caches and bookkeeping
+        (optionally installing a new fault plane) and keeps every
+        compiled function. The chaos harness (tests/chaos/) replays
+        hundreds of fault schedules per engine through this."""
+        self.kvm.reset(faults=fault_plane)
+        self.faults = fault_plane
+        self.caches = transformer.init_decode_caches(
+            self.cfg, self.rt, self.n_slots, self.max_pages,
+            self.scratch_block + 1, self.rt.compute_dtype,
+            src_len=self.src_cap)
+        self.ctx_lens[:] = 0
+        self.src_lens[:] = 0
+        self.active = {}
+        self.queue = deque()
+        self._rid = 0
+        self._boundary = 0
+        self._pending_since = {}
+        self._resident_since = {}
+        self._swap_fails = {}
+        self._retry_at = {}
+        self._progress = {}
+        for k in self.metrics:
+            self.metrics[k] = 0
+
     # ------------------------------------------------------------- steps
     def step(self, done: Dict[int, List[int]]) -> bool:
         """One scheduling round: admissions (budgeted), boundary swap
@@ -260,6 +313,13 @@ class ServeEngine:
         self._admit()
         if not self.active:
             return bool(self.queue)
+        # one scheduling round = one boundary (the aging/backoff/
+        # watchdog clock); counted here so fallback rounds age too
+        self._boundary += 1
+        if self.watchdog_rounds:
+            self._watchdog()
+            if not self.active:
+                return bool(self.queue)
         if self._macro_on and self.nonblocking_swap:
             self._swap_schedule()
         if self._macro_eligible():
@@ -329,6 +389,12 @@ class ServeEngine:
             if self._swap_out_slot(victim.slot, check=True):
                 self.metrics["preemptions"] += 1
                 return True
+            if victim.rid not in self.active:
+                # the failed swap quarantined the victim (retries
+                # exhausted): its pages are free right now, which is
+                # all the caller needed (satellite-6 same-boundary
+                # release)
+                return True
         return False
 
     def _ensure_resident(self):
@@ -340,7 +406,8 @@ class ServeEngine:
             return    # no host tier: nothing can ever be swapped out
         for r in sorted(self.active.values(),
                         key=lambda r: len(self.kvm.seq_pages.get(r.slot, []))):
-            if not self.kvm.is_resident(r.slot):
+            if not self.kvm.is_resident(r.slot) \
+                    and not self._backed_off(r.slot):
                 # a False return = stays swapped & paused; retried next
                 # round (same OutOfBlocks semantics as before the dedup)
                 self._swap_in_slot(r.slot, check=True)
@@ -387,11 +454,17 @@ class ServeEngine:
         try:
             pools, moved = kvm.swap_out(slot, pools, block_axis=2,
                                         check=check)
+        except SwapFault:
+            self._note_swap_fault(slot)   # backoff, maybe quarantine
+            return False
         except OutOfBlocks:
             return False               # host tier full: nothing moved
         self.caches["pool_k"], self.caches["pool_v"] = pools
         if not moved:
             return False
+        self._swap_fails.pop(slot, None)
+        self._retry_at.pop(slot, None)
+        self._progress.pop(slot, None)
         self.metrics["swaps_out"] += 1
         self._pending_since[slot] = self._boundary
         return True
@@ -403,15 +476,120 @@ class ServeEngine:
         try:
             pools, moved = kvm.swap_in(slot, pools, block_axis=2,
                                        check=check)
+        except SwapFault:
+            self._note_swap_fault(slot)
+            return False
         except OutOfBlocks:
             return False
         self.caches["pool_k"], self.caches["pool_v"] = pools
         if not moved:
             return False
+        self._swap_fails.pop(slot, None)
+        self._retry_at.pop(slot, None)
+        self._progress.pop(slot, None)
         self.metrics["swaps_in"] += 1
         self._resident_since[slot] = self._boundary
         self._pending_since.pop(slot, None)
         return True
+
+    # --------------------------------------- fault recovery (ISSUE 6)
+    def _note_swap_fault(self, slot: int):
+        """An injected swap failure left state untouched (SwapFault
+        raises pre-mutation): back the slot off for min(2^fails,
+        swap_backoff_cap) boundaries — capped exponential — and
+        QUARANTINE it once max_swap_retries consecutive attempts have
+        failed (a wedged slot must not pin its reservation forever)."""
+        self.metrics["swap_faults"] += 1
+        n = self._swap_fails.get(slot, 0) + 1
+        self._swap_fails[slot] = n
+        if n >= self.max_swap_retries:
+            self._quarantine(slot, "swap retries exhausted")
+        else:
+            self._retry_at[slot] = self._boundary + min(
+                1 << n, self.swap_backoff_cap)
+
+    def _backed_off(self, slot: int) -> bool:
+        """True while `slot`'s swap backoff window is open: the
+        scheduler neither retries its swap nor picks it as a victim
+        (both directions share the per-slot failure counter)."""
+        return self._retry_at.get(slot, 0) > self._boundary
+
+    def _quarantine(self, slot: int, reason: str):
+        """Remove a failing slot from service: free its pages (both
+        tiers), requeue its request at the ADMISSION FRONT with output
+        reset (greedy decode is deterministic and per-slot independent,
+        so the restarted request's tokens are bit-identical to an
+        uninterrupted run — the chaos harness asserts this), and clear
+        every per-slot scheduler stamp. The slot's reserved worst-case
+        growth is released the moment this returns — the same boundary
+        (satellite 6), not at retirement."""
+        req = next((r for r in self.active.values() if r.slot == slot),
+                   None)
+        if req is None:
+            return
+        self.kvm.free_seq(slot)
+        del self.active[req.rid]
+        self._release_slot(slot)
+        req.slot = -1
+        req.out = []
+        req.pending_prompt = []
+        self.queue.appendleft(req)
+        self.metrics["quarantines"] += 1
+        self.metrics["requeues"] += 1
+        if "watchdog" in reason:
+            self.metrics["watchdog_quarantines"] += 1
+
+    def _release_slot(self, slot: int):
+        """Per-slot scheduler-state cleanup shared by retirement and
+        quarantine: a reused slot must not inherit its predecessor's
+        backoff window, watchdog stamp or residency ages."""
+        self.ctx_lens[slot] = 0
+        for d in (self._pending_since, self._resident_since,
+                  self._swap_fails, self._retry_at, self._progress):
+            d.pop(slot, None)
+
+    def _watchdog(self):
+        """Macro-boundary watchdog: force-quarantine any lane with no
+        progress for ``watchdog_rounds`` boundaries — the backstop that
+        catches a lane stuck behind a pathologically browned-out
+        channel or an unlucky fault schedule, so the rest of the batch
+        keeps its throughput. Progress is token progress (generated
+        output or consumed prompt chunk) OR a completed tier move (the
+        swap paths clear the stamp): a host-resident lane rotating
+        through the normal oversubscription cycle is WAITING, not
+        wedged, and must not be restarted — only a lane that neither
+        decodes nor moves for the whole window is."""
+        for r in list(self.active.values()):
+            s = r.slot
+            cur = (len(r.out), len(r.pending_prompt))
+            last = self._progress.get(s)
+            if last is None or (last[0], last[1]) != cur:
+                self._progress[s] = (cur[0], cur[1], self._boundary)
+            elif self._boundary - last[2] >= self.watchdog_rounds:
+                self._quarantine(s, "watchdog: no token progress")
+
+    def _stall_shrink(self, free: np.ndarray) -> np.ndarray:
+        """Apply the fault plane's per-channel stall multipliers to a
+        free-block vector: a browned-out channel advertises 1/stall of
+        its blocks. Identity without a plane."""
+        if self.faults is not None:
+            st = self.faults.stall_vec(self.channels)
+            if (st > 1.0).any():
+                free = (free / np.maximum(st, 1.0)).astype(np.int64)
+        return free
+
+    def _free_eff(self) -> np.ndarray:
+        """Per-channel free device blocks as advertised to the boundary
+        planners (_macro_eligible + _swap_schedule), shrunk by the
+        fault plane's stall multipliers: a browned-out channel offers
+        1/stall of its free blocks, so residency/growth shrink THERE
+        while healthy channels keep full budget — graceful degradation
+        through the existing per-channel eligibility vectors rather
+        than a new scheduler. Identical to kvm.free_device_vec()
+        without a plane. The single-step fallback path deliberately
+        ignores stall (it allocates against the real pool), so a
+        brownout can never livelock the engine — it only slows it."""
+        return self._stall_shrink(self.kvm.free_device_vec())
 
     def _swap_schedule(self):
         """Boundary swap planner (DESIGN.md "Non-blocking host-tier
@@ -435,7 +613,6 @@ class ServeEngine:
         kvm = self.kvm
         if kvm.pool.n_host == 0 or not self.active:
             return
-        self._boundary += 1
         slots = {r.slot for r in self.active.values()}
         residents = [s for s in slots if kvm.is_resident(s)]
         pending = sorted((s for s in slots if not kvm.is_resident(s)),
@@ -445,52 +622,91 @@ class ServeEngine:
         # all quantities are per-channel vectors ([total] at channels=1,
         # where every comparison reduces to the old scalar one): a
         # reserve that fits in aggregate can still dry out one channel
-        def cost(s):    # device blocks a swap-in consumes now + in-scan
-            return kvm.host_pages_vec(s) + self._growth_need_ch(s)
-
         def growth_total(slots):
             return sum((self._growth_need_ch(s) for s in slots),
                        np.zeros(self.channels, np.int64))
 
-        free = kvm.free_device_vec
-        # 1. reserve: the scan must never run any channel's pool dry
+        def live():     # quarantine (mid-pass) shrinks the active set
+            return {r.slot for r in self.active.values()}
+
+        def can_resume(s):
+            # a swap-in pays its one-time cost (the lane's host pages)
+            # in REAL free blocks; only the ongoing growth reserve is
+            # judged by the stall-shrunk budget. Dividing the whole
+            # budget would count each host page `stall` times over and
+            # let a strong brownout wall off re-admission entirely —
+            # starving big lanes into watchdog restarts. The brownout
+            # should shrink residency and growth, not re-admission.
+            hp = kvm.host_pages_vec(s)
+            fr = kvm.free_device_vec()
+            if (hp > fr).any():
+                return False
+            return bool((self._stall_shrink(fr - hp)
+                         >= total + self._growth_need_ch(s)).all())
+
+        # stall-degraded budget: a browned-out channel advertises fewer
+        # free blocks, so the reserve swaps residency away from it and
+        # admission/growth shrink there (graceful degradation)
+        free = self._free_eff
+        # 1. reserve: the scan must never run any channel's pool dry.
+        # Backed-off slots are not victims (their swap just failed);
+        # a failed swap-out that QUARANTINED its victim freed the pages
+        # outright, which serves the reserve just as well.
         total = growth_total(residents)
         while (total > free()).any() and len(residents) > 1:
-            victim = max(residents, key=lambda s: int(self.ctx_lens[s]))
-            if not self._swap_out_slot(victim):
+            cands = [s for s in residents if not self._backed_off(s)]
+            if not cands:
                 break
+            victim = max(cands, key=lambda s: int(self.ctx_lens[s]))
+            if not self._swap_out_slot(victim):
+                if victim not in live():
+                    residents.remove(victim)
+                    total = growth_total(residents)
+                    continue
+                if self._backed_off(victim):
+                    continue    # SwapFault: excluded next iteration
+                break           # host tier full: no pass can progress
             moved_now.add(victim)
             residents.remove(victim)
             pending.append(victim)
             total = growth_total(residents)
         # 2. resume FIFO while the reserve still holds
         for s in list(pending):
-            if s in moved_now:
+            if s in moved_now or self._backed_off(s):
                 continue               # no ping-pong within one boundary
-            if (cost(s) <= free() - total).all() \
-                    and self._swap_in_slot(s):
-                moved_now.add(s)
-                pending.remove(s)
-                residents.append(s)
-                total += self._growth_need_ch(s)
+            if can_resume(s):
+                if self._swap_in_slot(s):
+                    moved_now.add(s)
+                    pending.remove(s)
+                    residents.append(s)
+                    total += self._growth_need_ch(s)
+                elif s not in live():
+                    pending.remove(s)  # failed swap-in quarantined it
         # 3. aging rotation: the oldest pending slot forces its way in
-        if pending and pending[0] not in moved_now:
-            oldest = pending[0]
+        rest = [s for s in pending
+                if s not in moved_now and not self._backed_off(s)
+                and s in live()]
+        if rest:
+            oldest = rest[0]
             waited = self._boundary - self._pending_since.get(
                 oldest, self._boundary)
             if waited >= self.swap_patience:
-                while (cost(oldest) > free() - total).any() \
-                        and len(residents) > 1:
-                    cands = [s for s in residents if s not in moved_now]
+                while not can_resume(oldest) and len(residents) > 1:
+                    cands = [s for s in residents if s not in moved_now
+                             and not self._backed_off(s)]
                     if not cands:
                         break
                     victim = min(cands, key=lambda s:
                                  self._resident_since.get(s, 0))
                     if not self._swap_out_slot(victim):
+                        if victim not in live():
+                            residents.remove(victim)
+                            total = growth_total(residents)
+                            continue
                         break
                     residents.remove(victim)
                     total = growth_total(residents)
-                if (cost(oldest) <= free() - total).all():
+                if can_resume(oldest):
                     self._swap_in_slot(oldest)
 
     # ------------------------------------------------------------- prefill
@@ -602,28 +818,42 @@ class ServeEngine:
             pass
         # slow path: grow slot-by-slot, preempting victims to host
         failed = set()
+        transient = False
         for slot, n in wants.items():
-            if not self.kvm.is_resident(slot):
-                continue    # became a preemption victim this step
+            if slot not in self.kvm.seq_pages \
+                    or not self.kvm.is_resident(slot):
+                # became a preemption victim this step — or was
+                # QUARANTINED mid-loop (a failed preempt swap can
+                # quarantine any slot, including this one): its pages
+                # are already freed and the request requeued
+                continue
             try:
                 self.kvm.extend_seq(slot, n)
-            except OutOfBlocks:
+            except OutOfBlocks as e:
+                transient |= getattr(e, "transient", False)
                 if not self._preempt(exclude=slot):
                     failed.add(slot)
                     continue
                 try:
                     self.kvm.extend_seq(slot, n)
-                except OutOfBlocks:
+                except OutOfBlocks as e:
+                    transient |= getattr(e, "transient", False)
                     failed.add(slot)
-        if len(failed) == len(residents):
+        if len(failed) == len(residents) and not transient:
             # nothing extended, nothing swapped: the same state recurs
-            # next step, so pausing would livelock instead of degrade
+            # next step, so pausing would livelock instead of degrade.
+            # An INJECTED transient exhaustion is exempt — its schedule
+            # advances every consult, so retrying next step is progress,
+            # not the same state (PoolExhausted.transient, ISSUE 6)
             raise OutOfBlocks(
                 f"pool exhausted: all {len(residents)} resident "
                 "sequences need pages and none can be grown or "
                 "preempted (no host tier / no victim)")
+        # r.rid in active: a request quarantined during the loop holds a
+        # freed slot — decoding it would write KV through a NIL mapping
         return [r for r in residents
-                if r.slot not in failed and self.kvm.is_resident(r.slot)]
+                if r.slot not in failed and r.rid in self.active
+                and self.kvm.is_resident(r.slot)]
 
     def _decode_step(self, done: Dict[int, List[int]]):
         self._ensure_resident()
@@ -839,9 +1069,10 @@ class ServeEngine:
             need += self._growth_need_ch(r.slot)
         # per-channel fit: a dry channel is real pool pressure even
         # while other channels still hold blocks (channels=1 reduces to
-        # the old total comparison)
-        return n_res > 0 and bool(
-            (need <= self.kvm.free_device_vec()).all())
+        # the old total comparison). _free_eff folds in the fault
+        # plane's brownout multipliers — a stalled channel's shrunken
+        # budget pushes growth pressure to the swap scheduler instead
+        return n_res > 0 and bool((need <= self._free_eff()).all())
 
     def _src_valid(self):
         if not self.cfg.n_enc_layers:
@@ -931,7 +1162,7 @@ class ServeEngine:
             if len(r.out) >= r.max_new:
                 done[r.rid] = r.out[:r.max_new]
                 self.kvm.free_seq(s)
-                self.ctx_lens[s] = 0
+                self._release_slot(s)
                 del self.active[r.rid]
 
     def _macro_book_full(self, valid, toks, slot2req,
@@ -1016,15 +1247,44 @@ class ServeEngine:
             grew, _, npages = self._growth_walk(
                 lambda k: valid[k], npages, self.ctx_lens)
             grow_seq = [int(s) for s in np.nonzero(grew)[1]]
-        self.kvm.reconcile_macro(grow_seq)
+        got = self.kvm.reconcile_macro(grow_seq)
+        self._retire_macro_programs(grow_seq, got)
         if simple:
             self._macro_book_simple(residents, toks, pend, K, done)
         else:
             self._macro_book_full(valid, toks, slot2req, done)
         if oob:
-            # the proactive check makes this unreachable; if it trips,
-            # re-sync (clears the flag) and let single-step mode recover
-            self.kvm._alloc_dirty = True
+            # the proactive check makes this unreachable without a
+            # fault plane; fold the flag into the typed per-channel
+            # exhaustion counts and mark the allocator dirty (the
+            # re-sync clears the lane) — single-step mode recovers
+            self.kvm.observe_exhaustion(flags=[oob])
+
+    def _retire_macro_programs(self, grow_seq, got):
+        """Program-fault check for in-scan growth (ISSUE 6): the scan
+        already WROTE KV into the blocks it popped, so retiring a bad
+        one must also move its rows — ``retire_bad_blocks(pools=...)``
+        runs the CondUpdate relocation and the old->new row copy in one
+        donated jit (a bad block is just another relocation, same as
+        the swap pipeline). Plane consults follow device pop order
+        (step-major, slot-ascending = grow_seq order), matching the
+        order the pre-commit paths consult in."""
+        kvm = self.kvm
+        if not got or kvm.faults is None:
+            return
+        idx = {s: len(kvm.seq_pages[s]) - len(bs)
+               for s, bs in got.items()}
+        bad = []
+        for s in grow_seq:
+            j = idx[s]
+            idx[s] = j + 1
+            if kvm.faults.program_fails():
+                bad.append((s * self.max_pages + j, kvm.seq_pages[s][j]))
+        if not bad:
+            return
+        pools = [self.caches["pool_k"], self.caches["pool_v"]]
+        pools, _ = kvm.retire_bad_blocks(bad, pools=pools, block_axis=2)
+        self.caches["pool_k"], self.caches["pool_v"] = pools
 
     # -------------------------------------- channel-sharded macro-steps
     def _macro_sharded_fn(self, params, caches, table, cur_tok,
@@ -1127,8 +1387,17 @@ class ServeEngine:
         grow_sched, dl_walk, npg = self._growth_walk(
             lambda k: alive, npages, self.ctx_lens)
         grow_seq = [int(s) for s in np.nonzero(grow_sched)[1]]
-        self.kvm.precommit_growth(
-            grow_seq, dlpns=[int(d) for d in dl_walk[grow_sched]])
+        try:
+            self.kvm.precommit_growth(
+                grow_seq, dlpns=[int(d) for d in dl_walk[grow_sched]])
+        except OutOfBlocks:
+            # precommit raises BEFORE any pop or map write, so nothing
+            # needs unwinding: an injected transient exhaustion (or a
+            # pool raced dry between eligibility and here) falls back
+            # to one single step; the macro path retries next boundary
+            self.metrics["macro_fallbacks"] += 1
+            self._decode_step(done)
+            return
         src_valid = self._src_valid()
         gen = K - np.maximum(pend - 1, 0)
         simple = self.eos_id < 0 and bool(
@@ -1170,7 +1439,7 @@ class ServeEngine:
             if len(r.out) >= r.max_new or tok == self.eos_id:
                 done[r.rid] = r.out[:r.max_new]
                 self.kvm.free_seq(r.slot)
-                self.ctx_lens[r.slot] = 0
+                self._release_slot(r.slot)
                 del self.active[r.rid]
 
 

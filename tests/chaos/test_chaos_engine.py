@@ -1,0 +1,161 @@
+"""Chaos harness (ISSUE 6): randomized fault schedules against the
+full serving engine, across channel counts.
+
+Every run draws per-axis fault probabilities (swap / program / alloc)
+and an optional channel brownout from a seed, replays a FIXED
+oversubscribed workload under that schedule, and asserts the two
+invariants the recovery plane promises:
+
+  1. the engine DRAINS — every request completes, no exception
+     escapes, nothing left active or queued;
+  2. outputs are BIT-IDENTICAL to the fault-free run — retries are
+     pure, retirement relocates data losslessly, and a quarantined
+     request's deterministic greedy restart reproduces its tokens.
+
+Failures print the schedule seed: ``make_plan(seed, ...)`` with the
+parameters in the message reproduces the exact run (the plan is a pure
+function of the seed — see core/faults.py).
+
+Engines are module-cached per channel count and reused via
+``ServeEngine.reset``: the compiled decode/macro/swap closures trace
+per instance, so the sweep replays hundreds of schedules with zero
+recompiles. The quick test covers a few seeds per channel count in the
+default lanes; the @slow sweep is the >=200-schedule acceptance run
+(CI tier1-faults / local ``-m faults``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, smoke_config
+from repro.core.faults import FaultPlane, make_plan
+from repro.models import Runtime, build_model
+from repro.serving.engine import ServeEngine
+
+pytestmark = pytest.mark.faults
+
+RT = Runtime(compute_dtype=jnp.float32, param_dtype=jnp.float32,
+             remat="none", page_size=8, capacity_factor=100.0)
+
+CHANNELS = (1, 2, 4)
+# fixed workload: 6 requests over 4 slots (queueing + admission churn),
+# prompts sized to cross page boundaries mid-decode
+PROMPTS = [list(range(3 + 11 * i, 10 + 11 * i)) for i in range(6)]
+MAX_NEW = 10
+MAX_STEPS = 4000
+
+_CACHE: dict = {}
+
+
+def _engine(C: int) -> ServeEngine:
+    eng = _CACHE.get(C)
+    if eng is None:
+        m = _CACHE.get("model")
+        if m is None:
+            cfg = smoke_config(get_arch("llama3.2-1b"))
+            cfg = dataclasses.replace(
+                cfg, name="chaos-tiny", n_layers=cfg.period, d_model=32,
+                n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+                vocab_size=128)
+            model = build_model(cfg, RT)
+            m = (model, model.init(jax.random.key(0)))
+            _CACHE["model"] = m
+        model, params = m
+        # oversubscribed: 4 slots x 3 pages worst-case = 12 = exactly
+        # the device pool, so growth pressure, preemption and swaps all
+        # fire; watchdog explicit so it survives fault-free resets too
+        eng = ServeEngine(model, params, n_slots=4, max_ctx=64,
+                          n_device_blocks=12, n_host_blocks=24,
+                          macro_k=4, swap_patience=2, channels=C,
+                          watchdog_rounds=16)
+        _CACHE[C] = eng
+    return eng
+
+
+def _drain(eng: ServeEngine):
+    rids = [eng.submit(list(p), max_new=MAX_NEW) for p in PROMPTS]
+    done = eng.run(max_steps=MAX_STEPS)
+    return rids, done
+
+
+def _oracle(C: int):
+    """Fault-free outputs for the fixed workload (cached per C)."""
+    key = ("oracle", C)
+    if key not in _CACHE:
+        eng = _engine(C)
+        eng.reset(None)
+        rids, done = _drain(eng)
+        assert not eng.active and not eng.queue, "oracle did not drain"
+        _CACHE[key] = [done[r] for r in rids]
+    return _CACHE[key]
+
+
+def _schedule(seed: int, C: int):
+    """Seed -> plan parameters: probabilities and an optional brownout
+    drawn from the seed, so every seed is a distinct scenario and the
+    whole run reproduces from the one integer."""
+    rng = np.random.default_rng(seed)
+    stall = np.ones(C)
+    if rng.random() < 0.5:
+        stall[rng.integers(C)] = rng.uniform(2.0, 6.0)
+    return dict(channels=C,
+                swap_fail_p=float(rng.uniform(0, 0.25)),
+                program_fail_p=float(rng.uniform(0, 0.2)),
+                alloc_fail_p=float(rng.uniform(0, 0.2)),
+                stall=stall.tolist())
+
+
+def _run_one(C: int, seed: int, ref):
+    eng = _engine(C)
+    kw = _schedule(seed, C)
+    plane = FaultPlane(make_plan(seed, **kw))
+    eng.reset(plane)
+    try:
+        rids, done = _drain(eng)
+    except Exception:
+        print(f"\nCHAOS FAILURE seed={seed} channels={C}: "
+              f"escaped exception under {plane.describe()}")
+        raise
+    msg = (f"chaos seed={seed} channels={C} plan={plane.describe()} "
+           f"metrics={eng.metrics}")
+    undrained = [r for r in rids if r not in done]
+    if undrained or eng.active or eng.queue:
+        print(f"\nCHAOS FAILURE {msg}")
+    assert not undrained and not eng.active and not eng.queue, msg
+    got = [done[r] for r in rids]
+    if got != ref:
+        print(f"\nCHAOS FAILURE {msg}")
+    assert got == ref, msg
+    return eng.metrics
+
+
+@pytest.mark.parametrize("channels", CHANNELS)
+def test_chaos_quick(channels):
+    """A few schedules per channel count in the default lanes — the
+    canary for the @slow acceptance sweep below."""
+    ref = _oracle(channels)
+    for seed in range(100, 104):
+        _run_one(channels, seed, ref)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("channels", CHANNELS)
+def test_chaos_sweep(channels):
+    """Acceptance sweep: 70 schedules per channel count (210 total
+    with test_chaos_quick's 12 on top) — every one must drain with
+    outputs bit-identical to the fault-free oracle. At least some
+    schedules must actually have exercised each recovery path, or the
+    sweep is vacuous (asserted on the aggregate)."""
+    ref = _oracle(channels)
+    agg = {"swap_faults": 0, "quarantines": 0, "requeues": 0}
+    retired = 0
+    for seed in range(1000, 1070):
+        metrics = _run_one(channels, seed, ref)
+        for k in agg:
+            agg[k] += metrics[k]
+        retired += _engine(channels).kvm.hit_stats()["retired_blocks"]
+    assert agg["swap_faults"] > 0, "no schedule ever failed a swap"
+    assert retired > 0, "no schedule ever retired a block"

@@ -241,6 +241,23 @@ def _valid_doc():
             "per_channel_lanes": {f"n{n}": [10] * n
                                   for n in (2, 4, 8)},
         },
+        "fault_injection": {
+            "channels": 4, "stall": [4.0, 1.0, 1.0, 1.0],
+            "swap_fail_p": 0.01, "seed": 2026,
+            "retention_degraded_vs_healthy": 0.7,
+            "tokens_per_sec": {"faults_healthy": 900.0,
+                               "faults_degraded": 630.0},
+            "modes": {
+                "faults_healthy": {
+                    "swap_faults": 0, "quarantines": 0,
+                    "watchdog_quarantines": 0, "requeues": 0,
+                    "retired_blocks": 0, "program_faults": 0},
+                "faults_degraded": {
+                    "swap_faults": 5, "quarantines": 1,
+                    "watchdog_quarantines": 0, "requeues": 1,
+                    "retired_blocks": 0, "program_faults": 0},
+            },
+        },
     }
 
 
@@ -257,6 +274,7 @@ def test_bench_schema_accepts_valid_and_rejects_malformed(tmp_path):
     assert line["speedups"]["oversub_fused_vs_fallback"] == 1.5
     assert line["oversub_fallbacks"]["oversub_fused"] == 0
     assert line["oversub_tokens_per_sec"]["oversub_fused"] == 900.0
+    assert line["degraded_retention"] == 0.7
 
     # missing file and invalid JSON hard-fail
     assert chk.main([str(tmp_path / "nope.json")]) == 1
@@ -294,3 +312,19 @@ def test_bench_schema_accepts_valid_and_rejects_malformed(tmp_path):
            .update(n4=[0, 0, 0, 0]))    # zero routed lanes
     broken(lambda d: d["channel_scaling"]["dispersion"]["n2"]
            .update(windows=[1.0]))
+    # ISSUE-6 fault_injection gates
+    broken(lambda d: d.pop("fault_injection"))
+    broken(lambda d: d["fault_injection"]
+           .pop("retention_degraded_vs_healthy"))
+    broken(lambda d: d["fault_injection"].update(stall=[4.0, 1.0]))
+    broken(lambda d: d["fault_injection"].update(stall=[0.5] * 4))
+    broken(lambda d: d["fault_injection"]["tokens_per_sec"]
+           .pop("faults_degraded"))
+    broken(lambda d: d["fault_injection"]["modes"]["faults_degraded"]
+           .update(swap_faults="many"))
+    # a degraded run that never fired a fault (or a healthy control
+    # that did) invalidates the retention headline
+    broken(lambda d: d["fault_injection"]["modes"]["faults_degraded"]
+           .update(swap_faults=0))
+    broken(lambda d: d["fault_injection"]["modes"]["faults_healthy"]
+           .update(swap_faults=3))
