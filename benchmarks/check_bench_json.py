@@ -53,7 +53,7 @@ def check(doc: dict) -> None:
     for key in ("bench", "n_slots", "max_pages", "macro_k",
                 "steps_timed", "repeats", "steps_per_sec", "dispersion",
                 "speedups", "oversubscription", "channel_scaling",
-                "fault_injection"):
+                "fault_injection", "recovery"):
         _req(key in doc, f"missing top-level key {key!r}")
     _req(doc["bench"] == "serve_decode",
          f"bench is {doc['bench']!r}, expected 'serve_decode'")
@@ -187,6 +187,54 @@ def check(doc: dict) -> None:
          "fault_injection degraded run fired zero swap faults")
     _req(fi["modes"]["faults_healthy"]["swap_faults"] == 0,
          "fault_injection healthy control fired swap faults")
+    # ISSUE-7: the recovery group must record the MTTR sweep over
+    # snapshot intervals, and every sweep point must prove it measured
+    # a real recovery (records replayed + requests requeued; MTTR can
+    # never be smaller than its recover_s component)
+    rec = doc["recovery"]
+    for key in ("channels", "seed", "crash_at", "snapshot_sweep",
+                "mttr_s"):
+        _req(key in rec, f"recovery missing {key!r}")
+    _req(isinstance(rec["channels"], int) and rec["channels"] > 0,
+         "recovery.channels is not a positive int")
+    _req(isinstance(rec["crash_at"], int) and rec["crash_at"] >= 0,
+         "recovery.crash_at is not a non-negative int")
+    sweep = rec["snapshot_sweep"]
+    _req(isinstance(sweep, dict) and sweep,
+         "recovery.snapshot_sweep is not a non-empty object")
+    for name, r in sweep.items():
+        for key in ("snapshot_every", "mttr_s", "recover_s",
+                    "replayed_records", "snapshot_seq", "last_seq",
+                    "torn", "oob_scan", "requeued"):
+            _req(isinstance(r, dict) and key in r,
+                 f"recovery.snapshot_sweep[{name!r}] missing {key!r}")
+        _req(isinstance(r["snapshot_every"], int)
+             and r["snapshot_every"] > 0,
+             f"recovery.snapshot_sweep[{name!r}].snapshot_every "
+             "is not a positive int")
+        for key in ("mttr_s", "recover_s"):
+            _req(_num(r[key]) and r[key] > 0,
+                 f"recovery.snapshot_sweep[{name!r}].{key} "
+                 "is not a positive number")
+        _req(r["mttr_s"] >= r["recover_s"],
+             f"recovery.snapshot_sweep[{name!r}]: mttr_s < recover_s")
+        for key in ("replayed_records", "snapshot_seq", "last_seq",
+                    "requeued"):
+            _req(isinstance(r[key], int) and r[key] >= 0,
+                 f"recovery.snapshot_sweep[{name!r}].{key} "
+                 "is not a non-negative int")
+        _req(isinstance(r["torn"], bool)
+             and isinstance(r["oob_scan"], bool),
+             f"recovery.snapshot_sweep[{name!r}] torn/oob_scan "
+             "are not bools")
+        _req(r["replayed_records"] > 0,
+             f"recovery.snapshot_sweep[{name!r}] replayed no records "
+             "(recovery measured nothing)")
+        _req(r["requeued"] > 0,
+             f"recovery.snapshot_sweep[{name!r}] requeued no "
+             "in-flight requests (crash point hit an idle engine)")
+        _req(_num(rec["mttr_s"].get(name)),
+             f"recovery.mttr_s missing {name!r}")
 
 
 def history_line(doc: dict) -> dict:
@@ -205,6 +253,11 @@ def history_line(doc: dict) -> dict:
         },
         "degraded_retention":
             doc["fault_injection"]["retention_degraded_vs_healthy"],
+        "recovery_mttr_s": doc["recovery"]["mttr_s"],
+        "recovery_replayed": {
+            name: r["replayed_records"]
+            for name, r in doc["recovery"]["snapshot_sweep"].items()
+        },
     }
 
 

@@ -95,6 +95,17 @@ FAULT_CHANNELS = 4
 FAULT_STALL = (4.0, 1.0, 1.0, 1.0)
 FAULT_SWAP_P = 0.01
 FAULT_SEED = 2026
+# crash/recovery measurement (ISSUE 7): a journaled channel-sharded
+# oversubscribed engine killed at a deterministic commit point, then
+# recovered from the journal directory. MTTR = power cut -> first
+# RESUMED token (replay + map restore + re-admission + prefill), swept
+# over the snapshot interval: tighter snapshots replay fewer records
+# at recovery but pay more snapshot writes while healthy — the
+# committed sweep records both sides of that tradeoff.
+RECOVERY_CHANNELS = 2
+RECOVERY_SEED = 2027
+RECOVERY_CRASH_AT = 80
+RECOVERY_SNAPSHOT_SWEEP = (1, 4, 16)
 # in-run speedup targets (ISSUE 3: fused >= 1.5x incremental;
 # ISSUE 4: non-blocking swap >= 1.3x the fall-back-on-pressure PR-3
 # behavior under 2x oversubscription; ISSUE 6: the degraded engine
@@ -174,6 +185,17 @@ def _build_engine(mode: str):
                           n_host_blocks=OVERSUB_HOST, macro_k=MACRO_K,
                           swap_patience=4, channels=FAULT_CHANNELS,
                           fault_plane=plane)
+        eng.kvm.swap_pad = MAX_PAGES
+        return eng
+    if mode == "recovery":
+        # ISSUE-7: the journaled engine for the crash/recover sweep —
+        # oversubscribed + channel-sharded so the journal carries every
+        # record kind (swaps included); the caller attaches the journal
+        # and the crash plan per sweep point
+        eng = ServeEngine(m, params, n_slots=N_SLOTS, max_ctx=max_ctx,
+                          n_device_blocks=OVERSUB_DEV,
+                          n_host_blocks=OVERSUB_HOST, macro_k=MACRO_K,
+                          swap_patience=4, channels=RECOVERY_CHANNELS)
         eng.kvm.swap_pad = MAX_PAGES
         return eng
     eng = ServeEngine(m, params, n_slots=N_SLOTS, max_ctx=max_ctx,
@@ -499,6 +521,86 @@ def _run_faults(repeats: int):
     return tps, engines
 
 
+def _run_recovery():
+    """ISSUE-7 measurement: bounded MTTR after a sudden power-off.
+
+    One journaled engine, reused across the snapshot-interval sweep
+    (reset keeps the compiled jits, so recovery timings measure the
+    SPOR path, not XLA compiles — a warm-up crash/recover cycle runs
+    first for the same reason). Per sweep point: run the
+    oversubscribed workload under a deterministic plan that kills the
+    process at the same commit point, recover, and time
+
+      * ``recover_s``  — replay + map restore + journal re-arm,
+      * ``mttr_s``     — power cut to the first RESUMED token
+                         (recover_s + re-admission + prefill).
+
+    Replayed-record counts expose the snapshot tradeoff: a tighter
+    interval replays fewer records at the same crash point."""
+    import tempfile
+
+    from repro.core import faults as flt
+    from repro.core.faults import FaultPlane, make_plan
+
+    eng = _build_engine("recovery")
+    need = -(-(OVERSUB_PROMPT + OVERSUB_MAX_NEW) // 8)
+    eng.min_page_bucket = 1 << (need - 1).bit_length()
+
+    def crash_recover(snap_every):
+        with tempfile.TemporaryDirectory() as d:
+            plan = make_plan(RECOVERY_SEED, channels=RECOVERY_CHANNELS,
+                             crash_at=RECOVERY_CRASH_AT)
+            eng.reset(FaultPlane(plan))
+            eng.attach_journal(d, snapshot_every=snap_every)
+            t_crash = None
+            try:
+                for i in range(N_SLOTS):
+                    eng.submit(list(range(1 + i,
+                                          1 + i + OVERSUB_PROMPT)),
+                               max_new=OVERSUB_MAX_NEW)
+                eng.run()
+            except flt.Crash:
+                t_crash = time.perf_counter()
+            assert t_crash is not None, \
+                "recovery bench: scheduled power cut never fired"
+            durable = eng.recover(d, fault_plane=None)
+            info = dict(eng.last_recovery)
+            # first resumed token: admission + prefill + one decode
+            g0 = eng.metrics["generated"]
+            done: dict = {}
+            while eng.step(done) and eng.metrics["generated"] == g0:
+                pass
+            assert eng.metrics["generated"] > g0, \
+                "recovery bench: no token after recovery"
+            info["mttr_s"] = time.perf_counter() - t_crash
+            done.update(eng.run())
+            assert not eng.active and not eng.queue, \
+                "recovery bench: recovered run did not drain"
+            assert len(set(durable) | set(done)) == N_SLOTS, \
+                "recovery bench: lost requests across the crash"
+            assert eng.journal_lane_check(), \
+                "recovery bench: journal/device lane divergence"
+            eng.reset(None)       # close the journal before the dir goes
+            return info
+
+    crash_recover(RECOVERY_SNAPSHOT_SWEEP[0])     # warm-up, unmeasured
+    sweep = {}
+    for snap_every in RECOVERY_SNAPSHOT_SWEEP:
+        info = crash_recover(snap_every)
+        sweep[f"snap{snap_every}"] = {
+            "snapshot_every": snap_every,
+            "mttr_s": round(info["mttr_s"], 4),
+            "recover_s": round(info["recover_s"], 4),
+            "replayed_records": int(info["replayed"]),
+            "snapshot_seq": int(info["snap_seq"]),
+            "last_seq": int(info["last_seq"]),
+            "torn": bool(info["torn"]),
+            "oob_scan": bool(info["oob_scan"]),
+            "requeued": int(info["requeued"]),
+        }
+    return sweep
+
+
 def _dispersion(sps):
     qs = statistics.quantiles(sps, n=4) if len(sps) >= 2 else [sps[0]] * 3
     return {"median": round(statistics.median(sps), 2),
@@ -529,6 +631,12 @@ def main() -> None:
     # ISSUE-6 group: graceful degradation under faults (its own
     # interleaved completion rounds; delivered tokens/sec)
     fault_tps, fault_eng = _run_faults(repeats)
+    # ISSUE-7 group: crash -> recover MTTR across snapshot intervals
+    recovery_sweep = _run_recovery()
+    for name, r in recovery_sweep.items():
+        emit(f"serve_recovery_mttr_{name}", r["mttr_s"] * 1e6,
+             f"mttr_s={r['mttr_s']:.3f}_recover_s={r['recover_s']:.3f}"
+             f"_replayed={r['replayed_records']}")
     # ISSUE-5 group: the fused macro engine across channel counts (its
     # own interleaved group — the engines are only comparable to each
     # other). On a host with fewer devices than channels the sharded
@@ -734,6 +842,17 @@ def main() -> None:
                         eng.kvm.hit_stats()["program_faults"],
                 } for mode, eng in fault_eng.items()
             },
+        },
+        # ISSUE-7: sudden-power-off recovery — MTTR per snapshot
+        # interval (same deterministic crash point throughout, so the
+        # replayed-record counts are the interval tradeoff, not noise)
+        "recovery": {
+            "channels": RECOVERY_CHANNELS,
+            "seed": RECOVERY_SEED,
+            "crash_at": RECOVERY_CRASH_AT,
+            "snapshot_sweep": recovery_sweep,
+            "mttr_s": {name: r["mttr_s"]
+                       for name, r in recovery_sweep.items()},
         },
     }
     with open(path, "w") as f:

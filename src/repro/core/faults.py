@@ -42,6 +42,12 @@ Axes modeled (mirroring Copycat/SimpleSSD's per-operation error axes):
   engine divides a browned-out channel's advertised free-block budget
   by its multiplier, shrinking admission/growth there while the other
   channels keep decoding at full rate.
+* ``crash``      — sudden power-off (ISSUE 7): the i-th *journaled*
+  commit kills the process, optionally mid-record (``crash_tear``
+  bounds how many of the record's bytes reach disk — the torn-tail
+  case the OOB reverse-map scan recovers). Consumed by
+  ``core.journal.Journal.append``; recovery is
+  ``ServeEngine.recover``.
 """
 from __future__ import annotations
 
@@ -51,10 +57,29 @@ import numpy as np
 
 # schedule-axis tags folded into the hash (stable across versions)
 AX_SWAP, AX_PROGRAM, AX_ALLOC, AX_STALL = 0, 1, 2, 3
+AX_CRASH, AX_TEAR = 4, 5
 
 _GOLDEN = np.uint64(0x9E3779B97F4A7C15)
 _M1 = np.uint64(0xBF58476D1CE4E5B9)
 _M2 = np.uint64(0x94D049BB133111EB)
+
+
+class Crash(RuntimeError):
+    """An injected sudden power-off (ISSUE 7): raised by the journal
+    layer at a host commit point AFTER an (optionally partial) record
+    write — everything in process memory (map state, pools, caches,
+    request bookkeeping) is considered lost the instant this
+    propagates. The engine object must not be stepped again; recovery
+    goes through ``ServeEngine.recover(path)``, which rebuilds state
+    purely from the on-disk snapshot + journal (core/journal.py)."""
+
+    def __init__(self, seq: int, kind: str, torn: bool):
+        super().__init__(
+            f"injected power cut at journal seq={seq} ({kind}"
+            f"{', torn record' if torn else ''})")
+        self.seq = seq
+        self.kind = kind
+        self.torn = torn
 
 
 class SwapFault(RuntimeError):
@@ -104,27 +129,45 @@ class FaultPlan(NamedTuple):
     program_fail: np.ndarray   # [H] bool — i-th block program fails
     alloc_fail: np.ndarray     # [H] bool — i-th pool alloc is transient-dry
     stall: np.ndarray          # [C] float >= 1 — per-channel brownout
+    # sudden power-off axis (ISSUE 7): the i-th *journaled commit*
+    # kills the process; tear is how much of that commit's on-disk
+    # record bytes land before the cut (1.0 = a whole record, i.e. the
+    # crash falls between this commit and the next — mid-record
+    # fractions are the torn-tail schedules the SPOR scan recovers)
+    crash: np.ndarray = np.zeros(0, bool)        # [H] bool
+    crash_tear: np.ndarray = np.zeros(0, float)  # [H] float in [0, 1]
 
 
 def make_plan(seed: int, *, channels: int = 1,
               swap_fail_p: float = 0.0, program_fail_p: float = 0.0,
               alloc_fail_p: float = 0.0,
               stall: Optional[Sequence[float]] = None,
+              crash_p: float = 0.0, crash_at: Optional[int] = None,
               horizon: int = 2048) -> FaultPlan:
     """Build a deterministic plan: schedule bit i of axis a is
     ``hash(seed, a, i) < p``. Two calls with the same arguments yield
-    bit-identical plans on any platform."""
+    bit-identical plans on any platform. ``crash_at`` pins a
+    deterministic power cut at exactly the i-th journaled commit
+    (benchmarks and unit tests; composes with crash_p for the chaos
+    sweeps)."""
     assert horizon > 0
     st = (np.ones(channels, np.float64) if stall is None
           else np.asarray(stall, np.float64))
     assert st.shape == (channels,), (st.shape, channels)
     assert (st >= 1.0).all(), "stall multipliers are >= 1 (1 = healthy)"
+    crash = _unit(seed, AX_CRASH, horizon) < crash_p
+    if crash_at is not None:
+        assert 0 <= crash_at < horizon, (crash_at, horizon)
+        crash = crash.copy()
+        crash[crash_at] = True
     return FaultPlan(
         seed=int(seed),
         swap_fail=_unit(seed, AX_SWAP, horizon) < swap_fail_p,
         program_fail=_unit(seed, AX_PROGRAM, horizon) < program_fail_p,
         alloc_fail=_unit(seed, AX_ALLOC, horizon) < alloc_fail_p,
-        stall=st)
+        stall=st,
+        crash=crash,
+        crash_tear=_unit(seed, AX_TEAR, horizon))
 
 
 class FaultPlane:
@@ -135,8 +178,8 @@ class FaultPlane:
 
     def __init__(self, plan: FaultPlan):
         self.plan = plan
-        self.ops = {"swap": 0, "program": 0, "alloc": 0}
-        self.fired = {"swap": 0, "program": 0, "alloc": 0}
+        self.ops = {"swap": 0, "program": 0, "alloc": 0, "crash": 0}
+        self.fired = {"swap": 0, "program": 0, "alloc": 0, "crash": 0}
 
     def _next(self, axis: str, sched: np.ndarray) -> bool:
         i = self.ops[axis]
@@ -158,6 +201,20 @@ class FaultPlane:
         """Consume the next pool-allocation schedule entry."""
         return self._next("alloc", self.plan.alloc_fail)
 
+    def crash_next(self) -> Optional[float]:
+        """Consume the next journaled-commit schedule entry: None when
+        the process survives this commit, else the tear fraction in
+        [0, 1] — how much of the commit's on-disk record bytes the
+        journal writes before raising ``Crash`` (1.0 = the record
+        lands whole; < 1.0 = a torn tail for the SPOR scan). Consumed
+        by ``core.journal.Journal.append``, never inside a jit."""
+        i = self.ops["crash"]
+        hit = self._next("crash", self.plan.crash)
+        if not hit:
+            return None
+        tear = self.plan.crash_tear
+        return float(tear[i % len(tear)]) if len(tear) else 1.0
+
     def stall_vec(self, channels: int) -> np.ndarray:
         """Per-channel stall multipliers, broadcast to `channels` when
         the plan was built for one channel."""
@@ -177,4 +234,5 @@ class FaultPlane:
                 f"swap={int(p.swap_fail.sum())}/{len(p.swap_fail)}, "
                 f"program={int(p.program_fail.sum())}/{len(p.program_fail)}, "
                 f"alloc={int(p.alloc_fail.sum())}/{len(p.alloc_fail)}, "
+                f"crash={int(p.crash.sum())}/{max(len(p.crash), 1)}, "
                 f"stall={np.asarray(p.stall).tolist()})")

@@ -265,7 +265,20 @@ class ServingMapState(NamedTuple):
     rows (``mark_swap`` riding KVPageManager's swap op), so the decode
     macro-scan can mask swap-pending slots as paused lanes from its
     own state — swaps overlap decode instead of dropping the engine
-    out of the fused path."""
+    out of the fused path.
+
+    ``commit_seq`` is the per-commit sequence lane (ISSUE 7): a
+    monotone count of committed map-write LANES, bumped by
+    ``translate_serving`` with the same ``write`` mask that scatters
+    the table — so every committed (dlpn -> block) write has a unique
+    position in the channel's commit order, whichever batching
+    (single-step, macro scan, sharded pre-commit) carried it. The host
+    journal stamps its records with the same cumulative count; at a
+    snapshot boundary the two must agree (the crash-consistency
+    integrity check), and the on-disk OOB region's (dlpn, seq) owners
+    are ordered by it — the newest mapping of a dlpn is the max-seq
+    one, which is what the SPOR reverse-map scan reconstructs when the
+    journal tail is torn."""
     fmmu: BatchFMMUState
     table: jnp.ndarray
     free_stack: jnp.ndarray   # [n_device] int32 free device block ids
@@ -274,6 +287,7 @@ class ServingMapState(NamedTuple):
     host_n: jnp.ndarray       # [] int32
     oob: jnp.ndarray          # [] bool, sticky OutOfBlocks flag
     swap_pending: jnp.ndarray  # [n_lanes] bool host-tier residency lane
+    commit_seq: jnp.ndarray = jnp.asarray(0, I)  # [] int32 commit lanes
 
 
 def init_serving_state(g: FMMUGeometry, n_device_blocks: int = 0,
@@ -290,7 +304,8 @@ def init_serving_state(g: FMMUGeometry, n_device_blocks: int = 0,
                               HOST_BASE - 1, -1, dtype=I),
         host_n=jnp.asarray(n_host_blocks, I),
         oob=jnp.asarray(False),
-        swap_pending=jnp.zeros((n_lanes,), bool))
+        swap_pending=jnp.zeros((n_lanes,), bool),
+        commit_seq=jnp.asarray(0, I))
 
 
 def oob_vec(ms: ServingMapState) -> jnp.ndarray:
@@ -299,6 +314,14 @@ def oob_vec(ms: ServingMapState) -> jnp.ndarray:
     flag-read layout, so every boundary observer (engine, tests,
     KVPageManager.observe_exhaustion) indexes channels identically."""
     return jnp.atleast_1d(ms.oob)
+
+
+def commit_seq_vec(ms: ServingMapState) -> jnp.ndarray:
+    """The per-commit sequence lane as a [C] vector ([1] unsharded) —
+    one read layout for every boundary observer, like ``oob_vec``. The
+    journal integrity check compares its SUM against the cumulative
+    committed-lane count of the journal records (ISSUE 7)."""
+    return jnp.atleast_1d(ms.commit_seq)
 
 
 # ------------------------------------------------- device allocator ops
@@ -408,7 +431,14 @@ def translate_serving(g: FMMUGeometry, ms: ServingMapState, opcodes,
                                          dppns, old_dppns, impl=impl)
     safe = jnp.where(write, dlpns, ms.table.shape[0])
     table = ms.table.at[safe].set(dppns.astype(I), mode="drop")
-    return ms._replace(fmmu=st, table=table), out, ok
+    # per-commit sequence lane (ISSUE 7): count committed write LANES,
+    # not calls — K single steps, one macro scan, or one sharded
+    # pre-commit of the same growth advance the lane identically, so
+    # the host journal's cumulative record count can be checked against
+    # it at any snapshot boundary regardless of batching
+    return ms._replace(fmmu=st, table=table,
+                       commit_seq=ms.commit_seq + write.sum().astype(I)
+                       ), out, ok
 
 
 # ----------------------------------------------- channel-sharded wrapper

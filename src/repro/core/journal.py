@@ -1,0 +1,604 @@
+"""Crash-consistent map journaling + sudden-power-off recovery (SPOR).
+
+The paper's FMMU keeps the hot map in hardware, but every real FTL
+pairs that cache with a persistence story: periodic snapshots of the
+map, a write-ahead journal of map commits between snapshots, and — as
+the last resort after an unclean power cut — a reverse-map scan of the
+per-page OOB (out-of-band) metadata that every NAND program writes
+alongside its data. This module gives the serving reproduction the
+same three layers (DESIGN.md "Journal at host commit points, snapshot
+at macro boundaries, OOB scan as torn-tail fallback"):
+
+* **Journal** — an append-only log of sequence-numbered records, one
+  per *host commit point*: exactly the points the ISSUE-6 fault plane
+  already intercepts (``KVPageManager.new_seq`` / ``extend_seqs`` /
+  ``precommit_growth`` / ``reconcile_macro`` / ``free_seq`` / ``_swap``
+  / ``retire_bad_blocks``) plus the engine's request-lifecycle events
+  (submit / admit / finish / quarantine). Journaling is pure host-side
+  file I/O behind an ``if journal is not None`` guard — it never enters
+  a traced graph, so the journaling-disabled path is jaxpr-identical by
+  construction (same argument as the fault plane; string-compared in
+  tests/test_journal.py).
+
+* **Snapshot** — the full host-authoritative serving state (page
+  lists, both pool tiers' free lists in exact order, retired blocks,
+  request/admission state) written at configurable macro-boundary
+  intervals via the tmp -> ``os.rename`` atomic-commit idiom
+  (training/checkpoint.py): a snapshot is either entirely present or
+  entirely absent, so the torn-write story lives in the journal alone.
+
+* **OOB region** — before a commit's journal record is appended, the
+  blocks it programs write their reverse-map metadata — the
+  ``(dlpn, seq)`` owner pairs, plus any bad-block marks — to a
+  separate append-only region, mirroring NAND's program-time OOB
+  write (data+OOB land before the map metadata does). When the
+  journal tail is torn (the power cut fell mid-append), replay stops
+  at the last whole record and the recovery falls back to the classic
+  SPOR path: a per-channel scan of the OOB region for owners newer
+  than the replayed seq reconstructs the newest mapping of each dlpn
+  by max-seq and re-frees the displaced blocks. A commit whose OOB
+  frame itself tore is dropped cleanly — nothing of it reached the
+  "flash", so the pre-commit state is the consistent truth.
+
+Durability model: the simulated power cut (``core.faults`` ``crash``
+axis) kills the *process* at a commit point — ``Journal.append``
+consults the plane, persists the scheduled fraction of the commit's
+bytes, and raises ``faults.Crash``. ``flush()`` to the OS page cache
+is therefore "durable" here; a real deployment would add fsync /
+O_DSYNC, which changes constants, not structure. Torn tails are
+injected byte-exactly, so every truncation offset is reachable by the
+property tests.
+
+Recovery (``replay`` -> ``ServeEngine.recover``) rebuilds state as
+latest-snapshot + journal replay (+ OOB scan), then restarts every
+in-flight request with the ISSUE-6 quarantine discipline — output
+reset, requeued at its admission position — because the KV data
+itself lived in volatile memory: greedy decode is deterministic and
+per-slot independent, so the resumed drain is bit-identical to an
+uncrashed run (the chaos crash sweep asserts exactly this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import struct
+import zlib
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core import faults as flt
+from repro.core.fmmu.types import HOST_BASE
+
+# ------------------------------------------------------------- framing
+# frame = MAGIC u32 | seq u64 | kind u8 | len u32 | payload | crc32 u32
+# (crc over seq..payload). Truncation at ANY byte offset is detected:
+# a short header, a short payload, or a crc mismatch all mark the tail
+# torn and replay stops at the previous whole record.
+_MAGIC = 0x4C4A524E                      # "NRJL"
+_HDR = struct.Struct("<IQBI")            # magic, seq, kind, length
+_CRC = struct.Struct("<I")
+
+# journal record kinds (stable on-disk tags)
+OOB = 0          # oob.log frames only: programmed-block reverse map
+NEW_SEQ = 1      # map: fresh sequence admitted (slot, dl, blocks)
+EXTEND = 2       # map: decode growth, batched (dl, blocks)
+PRECOMMIT = 3    # map: sharded macro boundary pre-commit
+RECONCILE = 4    # map: C=1 macro scan's device pops, replayed
+FREE = 5         # map: sequence freed (slot, blocks)
+SWAP = 6         # map: tier move (slot, moving, fresh, pages after)
+RETIRE = 7       # map: bad-block retirement relocation
+SUBMIT = 8       # engine: request enqueued (rid, tokens, max_new)
+ADMIT = 9        # engine: request admitted to a slot (rid, slot)
+FINISH = 10      # engine: request completed (rid, out)
+QUAR = 11        # engine: request quarantined + front-requeued (rid)
+
+_KIND_NAMES = {OOB: "oob", NEW_SEQ: "new_seq", EXTEND: "extend",
+               PRECOMMIT: "precommit", RECONCILE: "reconcile",
+               FREE: "free", SWAP: "swap", RETIRE: "retire",
+               SUBMIT: "submit", ADMIT: "admit", FINISH: "finish",
+               QUAR: "quarantine"}
+
+_JOURNAL = "journal.log"
+_OOBLOG = "oob.log"
+_SNAP_FMT = "snap_%012d.json"
+
+
+class JournalError(RuntimeError):
+    """Unrecoverable journal corruption (never raised for a torn tail
+    — that is the normal SPOR case and recovery handles it)."""
+
+
+def _frame(seq: int, kind: int, payload: dict) -> bytes:
+    body = json.dumps(payload, separators=(",", ":")).encode()
+    hdr = _HDR.pack(_MAGIC, seq, kind, len(body))
+    return hdr + body + _CRC.pack(zlib.crc32(hdr[4:] + body))
+
+
+def read_frames(path: str) -> Tuple[List[Tuple[int, int, dict]], int, bool]:
+    """Parse an append-only frame log. Returns (frames, valid_bytes,
+    torn): frames decoded in file order up to the first incomplete or
+    corrupt one; ``valid_bytes`` is where the intact prefix ends;
+    ``torn`` is True when trailing bytes exist past it (a record whose
+    write was cut by the power failure)."""
+    frames: List[Tuple[int, int, dict]] = []
+    if not os.path.exists(path):
+        return frames, 0, False
+    with open(path, "rb") as f:
+        data = f.read()
+    off = 0
+    while True:
+        if off + _HDR.size > len(data):
+            break
+        magic, seq, kind, ln = _HDR.unpack_from(data, off)
+        end = off + _HDR.size + ln + _CRC.size
+        if magic != _MAGIC or end > len(data):
+            break
+        body = data[off + _HDR.size:end - _CRC.size]
+        (crc,) = _CRC.unpack_from(data, end - _CRC.size)
+        if crc != zlib.crc32(data[off + 4:off + _HDR.size] + body):
+            break
+        frames.append((seq, kind, json.loads(body)))
+        off = end
+    return frames, off, off < len(data)
+
+
+# ------------------------------------------------------------- journal
+class Journal:
+    """Write side: one instance per engine, attached alongside the
+    fault plane. ``append`` is the single host commit-point hook; the
+    crash axis is consumed HERE — mid-append tears included — so a
+    journaled run crashes at exactly the commit points the fault plane
+    models (including mid-swap: the swap's record append IS its commit
+    point)."""
+
+    def __init__(self, path: str, *,
+                 faults: Optional["flt.FaultPlane"] = None,
+                 resume: bool = False, keep_snapshots: int = 2):
+        os.makedirs(path, exist_ok=True)
+        self.dir = path
+        self.faults = faults
+        self.keep_snapshots = int(keep_snapshots)
+        self.dead = False
+        self.records = 0          # records appended by THIS instance
+        self.commit_lanes = 0     # cumulative committed map-write lanes
+        self.lanes_base = 0       # value at attach (integrity baseline)
+        jpath = os.path.join(path, _JOURNAL)
+        opath = os.path.join(path, _OOBLOG)
+        if resume:
+            # drop any torn tail (its commit was already folded in — or
+            # dropped — by the replay that preceded this resume), then
+            # continue the sequence numbering past everything on disk
+            frames, nbytes, _ = read_frames(jpath)
+            oframes, onbytes, _ = read_frames(opath)
+            for p, n in ((jpath, nbytes), (opath, onbytes)):
+                if os.path.exists(p):
+                    with open(p, "r+b") as f:
+                        f.truncate(n)
+            self.seq = max([s for s, _, _ in frames + oframes] or [0])
+        else:
+            for name in os.listdir(path):
+                if (name in (_JOURNAL, _OOBLOG)
+                        or name.startswith("snap_")):
+                    os.remove(os.path.join(path, name))
+            self.seq = 0
+        self._jf = open(jpath, "ab")
+        self._of = open(opath, "ab")
+
+    # ------------------------------------------------------------- io
+    def close(self):
+        for f in (self._jf, self._of):
+            try:
+                f.close()
+            except ValueError:
+                pass
+
+    def _write(self, f, data: bytes):
+        f.write(data)
+        f.flush()    # durable w.r.t. the modeled process-kill power cut
+
+    def append(self, kind: int, payload: dict,
+               programmed: Sequence[Tuple[int, int]] = (),
+               retired: Sequence[int] = ()) -> int:
+        """Persist one host commit: the OOB frame first (the blocks'
+        program-time reverse-map metadata — ``programmed`` is the
+        commit's (dlpn, block) pairs, ``retired`` its bad-block
+        marks), then the sequence-numbered journal record. Consults
+        the fault plane's crash axis: a scheduled power cut persists
+        ``tear`` of the commit's bytes and raises ``faults.Crash`` —
+        torn OOB = the commit never reached flash (dropped cleanly on
+        recovery); whole OOB + torn/absent record = the SPOR scan's
+        case (replayed from the reverse map)."""
+        assert not self.dead, "journal used after an injected power cut"
+        self.seq += 1
+        programmed = [[int(d), int(b)] for d, b in programmed]
+        retired = [int(b) for b in retired]
+        payload = dict(payload)
+        payload["lanes"] = payload.get("lanes", len(programmed))
+        rec = _frame(self.seq, kind, payload)
+        oob = b""
+        if programmed or retired:
+            oob = _frame(self.seq, OOB,
+                         {"pairs": programmed, "retired": retired})
+        tear = (self.faults.crash_next()
+                if self.faults is not None else None)
+        if tear is None:
+            if oob:
+                self._write(self._of, oob)
+            self._write(self._jf, rec)
+            self.records += 1
+            self.commit_lanes += int(payload["lanes"])
+            return self.seq
+        # injected sudden power-off: persist a byte-exact prefix of
+        # the commit's (oob + record) stream, then die
+        total = len(oob) + len(rec)
+        cut = max(0, min(total, int(round(tear * total))))
+        if oob and cut:
+            self._write(self._of, oob[:min(cut, len(oob))])
+        if cut > len(oob):
+            self._write(self._jf, rec[:cut - len(oob)])
+        self.dead = True
+        self.close()
+        raise flt.Crash(self.seq, _KIND_NAMES.get(kind, str(kind)),
+                        torn=cut < total)
+
+    # -------------------------------------------------------- snapshot
+    def snapshot(self, state: dict) -> str:
+        """Atomically commit a full-state snapshot covering records
+        1..seq (tmp -> rename: a snapshot is never torn — the journal
+        owns that failure mode). Prunes all but the newest
+        ``keep_snapshots``."""
+        assert not self.dead
+        doc = {"seq": self.seq, "lanes": self.commit_lanes}
+        doc.update(state)
+        path = os.path.join(self.dir, _SNAP_FMT % self.seq)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, separators=(",", ":"))
+        os.replace(tmp, path)
+        snaps = sorted(n for n in os.listdir(self.dir)
+                       if n.startswith("snap_") and not n.endswith(".tmp"))
+        for n in snaps[:-self.keep_snapshots]:
+            os.remove(os.path.join(self.dir, n))
+        return path
+
+
+# ------------------------------------------------------------ recovery
+@dataclasses.dataclass
+class Recovered:
+    """Replay output: the host-authoritative serving state as of the
+    crash, plus recovery diagnostics. Everything is plain host data —
+    ``KVPageManager.restore_mapping`` re-derives the device map state
+    from it (the map is a pure function of the page lists; the CMT
+    refills warm, which SPOR always pays)."""
+    cfg: dict
+    seq_pages: Dict[int, List[int]]
+    host_pages: Dict[int, int]
+    free_dev_ch: List[List[int]]
+    free_host_ch: List[List[int]]
+    rr: int
+    retired: Set[int]
+    retired_ch: List[int]
+    exhausted_ch: List[int]
+    stats: dict
+    queue: List[int]                 # rids, crash-time deque order
+    ever_admitted: Set[int]
+    active: Dict[int, int]           # rid -> slot, admission order
+    done: Dict[int, List[int]]
+    submits: Dict[int, Tuple[List[int], int]]
+    rid: int
+    boundary: int
+    # diagnostics
+    snap_seq: int = 0
+    last_seq: int = 0
+    replayed: int = 0
+    lanes: int = 0
+    torn: bool = False
+    oob_scan: bool = False
+
+    # ------------------------------------------------------ invariants
+    def check(self):
+        """Map-consistency invariants ("never a corrupt map"): every
+        block lives in exactly one of {a free list, a page list, the
+        retired set}; free lists respect channel striping; page lists
+        have no holes. Raises JournalError on violation."""
+        C = self.cfg["channels"]
+        n_dev, n_host = self.cfg["n_device"], self.cfg["n_host"]
+        seen: Dict[int, str] = {}
+
+        def claim(b, who):
+            if b in seen:
+                raise JournalError(
+                    f"block {b} owned twice: {seen[b]} and {who}")
+            seen[b] = who
+
+        for c in range(C):
+            for b in self.free_dev_ch[c]:
+                if b % C != c or not 0 <= b < n_dev:
+                    raise JournalError(f"dev block {b} in channel {c}")
+                claim(b, f"free_dev[{c}]")
+            for b in self.free_host_ch[c]:
+                i = b - HOST_BASE
+                if i % C != c or not 0 <= i < n_host:
+                    raise JournalError(f"host block {b} in channel {c}")
+                claim(b, f"free_host[{c}]")
+        for s, pages in self.seq_pages.items():
+            for b in pages:
+                claim(b, f"slot{s}")
+            hp = sum(b >= HOST_BASE for b in pages)
+            if hp != self.host_pages.get(s, 0):
+                raise JournalError(
+                    f"slot {s}: host_pages {self.host_pages.get(s, 0)}"
+                    f" != counted {hp}")
+        for b in self.retired:
+            claim(b, "retired")
+        every = ([b for b in range(n_dev)]
+                 + [HOST_BASE + i for i in range(n_host)])
+        missing = [b for b in every if b not in seen]
+        if missing:
+            raise JournalError(f"blocks unaccounted for: {missing}")
+
+    def mapping(self) -> Dict[int, int]:
+        """dlpn -> block of every mapped page (the dense-table view of
+        the recovered map; the property tests compare this against the
+        pre-/post-commit oracle maps)."""
+        mp = self.cfg["max_pages"]
+        return {s * mp + i: b
+                for s, pages in self.seq_pages.items()
+                for i, b in enumerate(pages)}
+
+
+def _fresh_shadow(cfg: dict) -> Recovered:
+    C = cfg["channels"]
+    return Recovered(
+        cfg=cfg,
+        seq_pages={}, host_pages={},
+        free_dev_ch=[[b for b in range(cfg["n_device"])
+                      if b % C == c][::-1] for c in range(C)],
+        free_host_ch=[[HOST_BASE + i for i in range(cfg["n_host"])
+                       if i % C == c][::-1] for c in range(C)],
+        rr=0, retired=set(), retired_ch=[0] * C, exhausted_ch=[0] * C,
+        stats={"allocs": 0, "frees": 0, "swaps_out": 0, "swaps_in": 0,
+               "peak_used": 0, "retired": 0},
+        queue=[], ever_admitted=set(), active={}, done={}, submits={},
+        rid=0, boundary=0)
+
+
+def _load_snapshot(sh: Recovered, doc: dict):
+    sh.seq_pages = {int(s): list(p)
+                    for s, p in doc["seq_pages"].items()}
+    sh.host_pages = {int(s): int(n)
+                     for s, n in doc["host_pages"].items()}
+    sh.free_dev_ch = [list(ch) for ch in doc["free_dev_ch"]]
+    sh.free_host_ch = [list(ch) for ch in doc["free_host_ch"]]
+    sh.rr = int(doc["rr"])
+    sh.retired = set(doc["retired"])
+    sh.retired_ch = list(doc["retired_ch"])
+    sh.exhausted_ch = list(doc["exhausted_ch"])
+    sh.stats = dict(doc["stats"])
+    # request bookkeeping is absent from manager-only snapshots
+    # (KVPageManager.snapshot_state without an engine)
+    sh.queue = list(doc.get("queue", []))
+    sh.ever_admitted = set(doc.get("ever_admitted", []))
+    sh.active = {int(r): int(s) for r, s in doc.get("active", [])}
+    sh.done = {int(r): list(o) for r, o in doc.get("done", {}).items()}
+    sh.submits = {int(r): (list(t), int(m))
+                  for r, (t, m) in doc.get("submits", {}).items()}
+    sh.rid = int(doc.get("rid", 0))
+    sh.boundary = int(doc.get("boundary", 0))
+    sh.lanes = int(doc.get("lanes", 0))
+
+
+def _channel_of(cfg: dict, block: int) -> int:
+    b = block - HOST_BASE if block >= HOST_BASE else block
+    return b % cfg["channels"]
+
+
+def _take(sh: Recovered, block: int, host: bool):
+    lists = sh.free_host_ch if host else sh.free_dev_ch
+    ch = lists[_channel_of(sh.cfg, block)]
+    try:
+        ch.remove(block)
+    except ValueError:
+        raise JournalError(
+            f"replay popped block {block} that is not free")
+
+
+def _peak(sh: Recovered):
+    """Mirror BlockPool._bump_alloc's peak tracking: sampled right
+    after an allocation's pops, before any frees in the same commit."""
+    used = sh.cfg["n_device"] - sum(len(c) for c in sh.free_dev_ch)
+    sh.stats["peak_used"] = max(sh.stats["peak_used"], used)
+
+
+def _give(sh: Recovered, block: int):
+    if block in sh.retired:
+        return
+    host = block >= HOST_BASE
+    lists = sh.free_host_ch if host else sh.free_dev_ch
+    lists[_channel_of(sh.cfg, block)].append(block)
+
+
+def _apply(sh: Recovered, kind: int, p: dict):
+    """Replay one whole journal record onto the shadow state. The
+    free-list mutations remove exactly the block ids the live pool
+    popped from its list tails, so the surviving list ORDER matches
+    the live pool's bit-for-bit — which is what makes the post-restore
+    allocator mirror (sync_allocator) exact."""
+    mp = sh.cfg["max_pages"]
+    if kind == NEW_SEQ:
+        for b in p["blocks"]:
+            _take(sh, b, host=False)
+        _peak(sh)
+        sh.seq_pages[p["slot"]] = list(p["blocks"])
+        sh.stats["allocs"] += len(p["blocks"])
+    elif kind in (EXTEND, PRECOMMIT, RECONCILE):
+        for d, b in zip(p["dl"], p["blocks"]):
+            _take(sh, b, host=False)
+            sh.seq_pages[d // mp].append(b)
+        _peak(sh)
+        sh.stats["allocs"] += len(p["blocks"])
+        if "rr" in p:
+            sh.rr = p["rr"]
+    elif kind == FREE:
+        sh.seq_pages.pop(p["slot"], None)
+        sh.host_pages.pop(p["slot"], None)
+        for b in p["blocks"]:
+            _give(sh, b)
+        sh.stats["frees"] += sum(b not in sh.retired
+                                 for b in p["blocks"])
+    elif kind == SWAP:
+        for b in p["fresh"]:
+            _take(sh, b, host=p["out"])
+        _peak(sh)
+        for b in p["moving"]:
+            _give(sh, b)
+        sh.seq_pages[p["slot"]] = list(p["pages"])
+        sh.host_pages[p["slot"]] = p["hp"]
+        key = "swaps_out" if p["out"] else "swaps_in"
+        sh.stats[key] += len(p["moving"])
+        sh.stats["frees"] += sum(b not in sh.retired
+                                 for b in p["moving"])
+        sh.stats["allocs"] += len(p["fresh"])
+    elif kind == RETIRE:
+        for b in p["popped"]:
+            _take(sh, b, host=False)
+            _peak(sh)    # live pops one candidate per alloc_for call
+        sh.stats["allocs"] += len(p["popped"])
+        for b in p["retired"]:
+            sh.retired.add(b)
+            sh.retired_ch[_channel_of(sh.cfg, b)] += 1
+        sh.stats["retired"] += len(p["retired"])
+        for s, pages in p["pages"].items():
+            sh.seq_pages[int(s)] = list(pages)
+    elif kind == SUBMIT:
+        sh.submits[p["rid"]] = (list(p["tokens"]), p["max_new"])
+        sh.queue.append(p["rid"])
+        sh.rid = max(sh.rid, p["rid"] + 1)
+    elif kind == ADMIT:
+        if p["rid"] in sh.queue:
+            sh.queue.remove(p["rid"])
+        sh.active.pop(p["rid"], None)   # re-admission moves to the end
+        sh.active[p["rid"]] = p["slot"]
+        sh.ever_admitted.add(p["rid"])
+        sh.boundary = max(sh.boundary, p.get("boundary", 0))
+    elif kind == FINISH:
+        sh.done[p["rid"]] = list(p["out"])
+        sh.active.pop(p["rid"], None)
+        sh.submits.pop(p["rid"], None)
+    elif kind == QUAR:
+        sh.active.pop(p["rid"], None)
+        sh.queue.insert(0, p["rid"])
+        sh.ever_admitted.add(p["rid"])
+    else:
+        raise JournalError(f"unknown journal record kind {kind}")
+    sh.lanes += int(p.get("lanes", 0))
+
+
+def _oob_scan(sh: Recovered, pairs: List[List[int]],
+              retired: List[int]):
+    """The SPOR torn-tail fallback: the dangling commit's journal
+    record never made it, but its blocks' program-time OOB metadata
+    did. Reconstruct the newest mapping per dlpn from the (dlpn, seq)
+    owners — scanned PER CHANNEL (each channel owns block % C == c,
+    mirroring per-channel flash arrays), newest seq wins (here: the
+    one dangling frame, already newer than everything replayed). A
+    displaced older owner returns to the free pool; OOB bad-block
+    marks re-apply retirement (the bad-block table also lives in OOB
+    on real NAND)."""
+    mp = sh.cfg["max_pages"]
+    for b in retired:
+        if b not in sh.retired:
+            sh.retired.add(b)
+            sh.retired_ch[_channel_of(sh.cfg, b)] += 1
+            sh.stats["retired"] += 1
+    for c in range(sh.cfg["channels"]):
+        for d, b in pairs:
+            if _channel_of(sh.cfg, b) != c:
+                continue
+            slot, page = divmod(d, mp)
+            pages = sh.seq_pages.setdefault(slot, [])
+            if page > len(pages):
+                raise JournalError(
+                    f"OOB owner (dlpn={d}) maps a hole at page {page}")
+            _take(sh, b, host=b >= HOST_BASE)
+            if page == len(pages):
+                pages.append(b)
+            else:
+                old = pages[page]
+                pages[page] = b
+                if old != b:
+                    _give(sh, old)
+            sh.host_pages[slot] = sum(x >= HOST_BASE for x in pages)
+    sh.stats["allocs"] += len(pairs)
+
+
+def latest_snapshot(path: str) -> Optional[dict]:
+    snaps = sorted((n for n in os.listdir(path)
+                    if n.startswith("snap_") and n.endswith(".json")),
+                   reverse=True)
+    for name in snaps:
+        try:
+            with open(os.path.join(path, name)) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            continue    # unreadable snapshot: fall back to the previous
+    return None
+
+
+def replay(path: str) -> Recovered:
+    """Rebuild the crash-time serving state from disk: latest
+    snapshot, then every whole journal record past it, then — when
+    the journal tail is torn or a commit's record never landed — the
+    OOB reverse-map scan for the single dangling commit (OOB frames
+    are written before their record, so at most one commit can be
+    newer than the journal). Ends with the map-consistency check:
+    recovery either replays a tail commit fully or drops it cleanly,
+    never a corrupt map."""
+    snap = latest_snapshot(path)
+    if snap is None:
+        raise JournalError(f"no snapshot in {path}")
+    sh = _fresh_shadow(snap["cfg"])
+    _load_snapshot(sh, snap)
+    sh.snap_seq = snap["seq"]
+
+    frames, _, torn = read_frames(os.path.join(path, _JOURNAL))
+    last = sh.snap_seq
+    for seq, kind, p in frames:
+        if seq <= sh.snap_seq:
+            continue
+        if seq != last + 1:
+            raise JournalError(
+                f"journal gap: record {seq} after {last}")
+        _apply(sh, kind, p)
+        sh.replayed += 1
+        last = seq
+    sh.torn = torn
+    sh.last_seq = last
+
+    oframes, _, otorn = read_frames(os.path.join(path, _OOBLOG))
+    dangling = [(s, p) for s, k, p in oframes if s > last and k == OOB]
+    if len(dangling) > 1:
+        raise JournalError(
+            f"multiple dangling OOB commits: {[s for s, _ in dangling]}")
+    if dangling:
+        seq, p = dangling[0]
+        _oob_scan(sh, p["pairs"], p["retired"])
+        sh.oob_scan = True
+        sh.last_seq = seq
+        sh.replayed += 1
+    sh.torn = torn or otorn or sh.oob_scan
+
+    # a FREE / FINISH pair cut between records can strand a mapped
+    # slot with no owning request (FINISH landed, FREE did not): give
+    # the orphan's pages back — the request is done, its KV is gone.
+    # Only meaningful when request bookkeeping exists at all (an
+    # engine journal); a bare map-layer journal owns no slots.
+    if sh.active or sh.submits or sh.queue or sh.done or sh.ever_admitted:
+        owned = set(sh.active.values())
+        for slot in [s for s in sh.seq_pages if s not in owned]:
+            for b in sh.seq_pages.pop(slot):
+                _give(sh, b)
+                sh.stats["frees"] += int(b not in sh.retired)
+            sh.host_pages.pop(slot, None)
+    sh.check()
+    return sh

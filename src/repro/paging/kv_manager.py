@@ -71,6 +71,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import faults as flt
+from repro.core import journal as jl
 from repro.core.fmmu import batch as fb
 from repro.core.fmmu.types import (COND_UPDATE, FMMUGeometry, NIL,
                                    SWAP_IN, SWAP_OUT, UPDATE)
@@ -85,6 +86,11 @@ from repro.paging.pool import (HOST_BASE, BlockPool, OutOfBlocks,
 XLATE_CALLS = [0]
 FULL_TABLE_CALLS = [0]
 ALLOC_SYNCS = [0]
+
+def _ji(xs) -> List[int]:
+    """Journal payloads are JSON: plain ints, not numpy scalars."""
+    return [int(x) for x in xs]
+
 
 # bad-block re-drive bound: a retirement chain retires at most this
 # many consecutive schedule-failed replacement candidates before the
@@ -141,6 +147,12 @@ class KVPageManager:
         # costs nothing and, because the plane never enters a traced
         # graph, attaching one cannot change any jaxpr either.
         self.faults = faults
+        # crash-consistency journal (ISSUE 7, core/journal.py): when
+        # attached (ServeEngine.attach_journal), every host commit
+        # point above appends a sequence-numbered record AFTER its op
+        # succeeds — the same ``is not None`` host-only discipline as
+        # the fault plane, so journaling-disabled stays jaxpr-identical
+        self.journal: Optional["jl.Journal"] = None
         # ISSUE-5 channel sharding: with channels > 1 the map state is C
         # per-channel ServingMapState shards stacked on a leading axis
         # (each shard: 1/C-sized CMT + backing + table slice + the free
@@ -246,6 +258,7 @@ class KVPageManager:
         self._alloc_dirty = False
         self.channel_lanes[:] = 0
         self.faults = faults
+        self.journal = None    # the engine re-attaches after recovery
 
     def _dlpns(self, slot: int, pages: range) -> np.ndarray:
         return np.asarray([slot * self.max_pages + p for p in pages],
@@ -324,6 +337,11 @@ class KVPageManager:
         self._alloc_dirty = True
         self._xlate(UPDATE, dl, blocks)
         self.seq_pages[slot] = list(blocks)
+        if self.journal is not None:
+            self.journal.append(
+                jl.NEW_SEQ, {"slot": int(slot), "dl": _ji(dl),
+                             "blocks": _ji(blocks)},
+                programmed=zip(dl, blocks))
         # program-fault check AFTER the map commit, BEFORE any data is
         # written (prefill follows admission): a bad block here needs
         # only the CondUpdate re-drive, no row copy
@@ -355,6 +373,10 @@ class KVPageManager:
             i += n
             self.seq_pages[slot].extend(got[slot])
         self._xlate(UPDATE, dl, blocks)
+        if self.journal is not None:
+            self.journal.append(
+                jl.EXTEND, {"dl": _ji(dl), "blocks": _ji(blocks)},
+                programmed=zip(dl, blocks))
         # growth blocks are programmed by the decode step that follows;
         # a schedule-failed program re-drives map-only (no data yet)
         if self._maybe_retire_programs(dl, blocks):
@@ -368,6 +390,12 @@ class KVPageManager:
         self._xlate(UPDATE, dl, np.full(len(blocks), NIL, np.int32))
         self.pool.free(blocks)
         self._alloc_dirty = True
+        if self.journal is not None:
+            # no OOB frame: a free programs nothing — a torn tail just
+            # drops it cleanly (pages stay mapped until re-freed)
+            self.journal.append(jl.FREE,
+                                {"slot": int(slot), "blocks": _ji(blocks),
+                                 "lanes": len(blocks)})
 
     def is_resident(self, slot: int) -> bool:
         """True when no page of `slot` lives in the host tier. One
@@ -484,9 +512,20 @@ class KVPageManager:
         if not grow_seq:
             return got
         blocks = self.pool.alloc(len(grow_seq))
+        dl: List[int] = []
         for slot, b in zip(grow_seq, blocks):
             self.seq_pages[slot].append(b)
+            dl.append(slot * self.max_pages
+                      + len(self.seq_pages[slot]) - 1)
             got.setdefault(slot, []).append(b)
+        if self.journal is not None:
+            # the scan already committed these lanes in-graph; this
+            # record is their durability point (the macro boundary is
+            # the commit point the crash axis can land on)
+            self.journal.append(
+                jl.RECONCILE, {"grow_seq": _ji(grow_seq), "dl": _ji(dl),
+                               "blocks": _ji(blocks)},
+                programmed=zip(dl, blocks))
         return got
 
     def _grow_dlpns(self, grow_seq: List[int]) -> List[int]:
@@ -530,6 +569,11 @@ class KVPageManager:
             got.setdefault(slot, []).append(b)
             counts[slot] = counts.get(slot, 0) + 1
         self._xlate(UPDATE, dl, blocks)
+        if self.journal is not None:
+            self.journal.append(
+                jl.PRECOMMIT, {"grow_seq": _ji(grow_seq), "dl": _ji(dl),
+                               "blocks": _ji(blocks)},
+                programmed=zip(dl, blocks))
         # pre-committed growth blocks are programmed by the scan that
         # follows this boundary, so (like extend_seqs) a bad block here
         # re-drives map-only — the scan then writes the replacement
@@ -572,6 +616,8 @@ class KVPageManager:
         data stays intact either way. Returns (pools, n_retired)."""
         f = self.faults
         done: List[Tuple[int, int, int]] = []    # (dlpn, old, new)
+        popped: List[int] = []      # every replacement candidate popped
+        retired: List[int] = []     # every block permanently retired
         for dlpn, old in bad:
             assert not BlockPool.is_host(old), \
                 "program faults model device-tier block programs"
@@ -583,28 +629,51 @@ class KVPageManager:
                     cand = self.pool.alloc_for([c])[0]
                 except OutOfBlocks:
                     break
+                popped.append(cand)
                 chain.append(cand)
                 if f is None or i == _MAX_REDRIVE - 1 \
                         or not f.program_fails():
                     new = cand
                     break
             if new is None:
-                continue    # dry channel: old block serves on, un-retired
-            self.pool.retire([b for b in chain if b != new])
+                # dry channel: old block serves on, un-retired — but any
+                # candidates we DID pop failed their programs and must
+                # still be retired, or they leak out of all accounting
+                # (not free, not mapped, not retired)
+                dead = chain[1:]
+                if dead:
+                    self.pool.retire(dead)
+                    retired.extend(dead)
+                continue
+            dead = [b for b in chain if b != new]
+            self.pool.retire(dead)
+            retired.extend(dead)
             done.append((dlpn, old, new))
-        if not done:
-            return pools, 0
-        self._alloc_dirty = True
-        dl = [d for d, _, _ in done]
-        olds = [o for _, o, _ in done]
-        news = [n for _, _, n in done]
-        if pools is None:
-            self._xlate(COND_UPDATE, dl, news, olds)
-        else:
-            pools = self._retire_move(dl, news, olds, pools, block_axis)
-        for d, o, n in done:
-            pages = self.seq_pages[d // self.max_pages]
-            pages[pages.index(o)] = n
+        if popped:
+            self._alloc_dirty = True    # pops/retires moved the pool
+        if done:
+            dl = [d for d, _, _ in done]
+            olds = [o for _, o, _ in done]
+            news = [n for _, _, n in done]
+            if pools is None:
+                self._xlate(COND_UPDATE, dl, news, olds)
+            else:
+                pools = self._retire_move(dl, news, olds, pools,
+                                          block_axis)
+            for d, o, n in done:
+                pages = self.seq_pages[d // self.max_pages]
+                pages[pages.index(o)] = n
+        if self.journal is not None and (done or popped):
+            touched = sorted({d // self.max_pages for d, _, _ in done})
+            self.journal.append(
+                jl.RETIRE,
+                {"done": [[int(d), int(o), int(n)] for d, o, n in done],
+                 "popped": _ji(popped), "retired": _ji(retired),
+                 "pages": {int(s): _ji(self.seq_pages[s])
+                           for s in touched},
+                 "lanes": len(done)},
+                programmed=[(d, n) for d, _, n in done],
+                retired=retired)
         return pools, len(done)
 
     def _retire_fn(self, cap: int, block_axis: int, n_pools: int):
@@ -774,6 +843,18 @@ class KVPageManager:
             self.pool.stats.swaps_out += n
         else:
             self.pool.stats.swaps_in += n
+        if self.journal is not None:
+            # the swap's commit point: a crash on this append is the
+            # ISSUE-7 "mid-swap" case — the OOB frame (dl -> fresh)
+            # either survives whole (reverse-map scan re-applies the
+            # move, freeing the displaced blocks) or tears (the move
+            # never reached flash; pre-swap state is the truth)
+            self.journal.append(
+                jl.SWAP,
+                {"slot": int(slot), "out": bool(out), "moving": _ji(moving),
+                 "fresh": _ji(fresh), "pages": _ji(self.seq_pages[slot]),
+                 "hp": int(self._host_pages[slot])},
+                programmed=zip(dl, fresh))
         return pools, n
 
     def swap_out(self, slot: int, pools: List[jnp.ndarray],
@@ -811,6 +892,67 @@ class KVPageManager:
             if BlockPool.is_host(b):
                 out[self.pool.channel_of(b)] += 1
         return out
+
+    # -------------------------------------- crash consistency (ISSUE 7)
+    def journal_cfg(self) -> dict:
+        """Geometry stamped into every snapshot: recovery refuses to
+        restore into a differently-shaped manager."""
+        return {"channels": self.channels, "n_device": self._n_dev,
+                "n_host": self._n_host, "max_pages": self.max_pages,
+                "n_slots": self.n_slots}
+
+    def snapshot_state(self) -> dict:
+        """The manager's share of a journal snapshot: page lists, the
+        swap-maintained host-page counts, and the full pool allocator
+        state (free-list ORDER included — the device-mirror contract
+        makes order part of the state). All host data: the device map
+        is a pure function of this (``restore_mapping`` re-derives it),
+        so snapshots never serialize device arrays or KV pools."""
+        d = {"cfg": self.journal_cfg(),
+             "seq_pages": {int(s): _ji(p)
+                           for s, p in self.seq_pages.items()},
+             "host_pages": {int(s): int(n)
+                            for s, n in self._host_pages.items()}}
+        d.update(self.pool.state_dict())
+        return d
+
+    def restore_mapping(self, rec: "jl.Recovered") -> int:
+        """Rebuild this manager from recovered host truth (call on a
+        freshly ``reset`` manager): restore the pool + page lists, then
+        re-derive the whole device map with ONE fused batched UPDATE
+        (lanes padded to the next power of two — the usual re-trace
+        bound) and one allocator re-push. The CMT refills warm, which
+        SPOR always pays; dense_table / free stacks / residency lanes
+        come back bit-identical to the pre-crash state because they are
+        pure functions of what the journal persisted. Returns the
+        number of mapped pages re-committed."""
+        cfg = self.journal_cfg()
+        assert rec.cfg == cfg, f"snapshot geometry {rec.cfg} != {cfg}"
+        self.pool.load_state({
+            "free_dev_ch": rec.free_dev_ch,
+            "free_host_ch": rec.free_host_ch,
+            "rr": rec.rr, "retired": sorted(rec.retired),
+            "retired_ch": rec.retired_ch,
+            "exhausted_ch": rec.exhausted_ch, "stats": rec.stats})
+        self.seq_pages = {int(s): _ji(p)
+                          for s, p in rec.seq_pages.items()}
+        self._host_pages = {int(s): int(n)
+                            for s, n in rec.host_pages.items()}
+        dl: List[int] = []
+        blocks: List[int] = []
+        for s in sorted(self.seq_pages):
+            for i, b in enumerate(self.seq_pages[s]):
+                dl.append(s * self.max_pages + i)
+                blocks.append(b)
+        n = len(dl)
+        if n:
+            cap = 1 << (n - 1).bit_length()
+            dl += [-1] * (cap - n)
+            blocks += [0] * (cap - n)
+            self._xlate(UPDATE, dl, blocks)
+        self._alloc_dirty = True
+        self.sync_allocator()    # stacks + residency lanes in one push
+        return n
 
     def hit_stats(self) -> dict:
         s = np.asarray(self.state.fmmu.stats)

@@ -196,6 +196,37 @@ class BlockPool:
     def is_retired(self, block: int) -> bool:
         return block in self._retired
 
+    # ------------------------------------------- checkpointing (ISSUE 7)
+    def state_dict(self) -> dict:
+        """Full allocator state as plain JSON-serializable host data —
+        free lists in exact order (the device-mirror contract makes
+        order part of the state, not an implementation detail), the
+        round-robin cursor, retirement, and counters. Consumed by the
+        journal snapshot (core/journal.py) and test_checkpoint.py."""
+        return {"free_dev_ch": [list(ch) for ch in self._free_dev_ch],
+                "free_host_ch": [list(ch) for ch in self._free_host_ch],
+                "rr": self._rr,
+                "retired": sorted(self._retired),
+                "retired_ch": list(self.retired_ch),
+                "exhausted_ch": list(self.exhausted_ch),
+                "stats": dataclasses.asdict(self.stats)}
+
+    def load_state(self, d: dict):
+        """Restore ``state_dict`` output bit-exactly. Mutates the
+        existing per-channel lists IN PLACE: at n_channels=1 the legacy
+        ``_free_dev``/``_free_host`` views alias channel 0's list, and
+        restoring must preserve that aliasing."""
+        assert len(d["free_dev_ch"]) == self.n_channels
+        for c in range(self.n_channels):
+            self._free_dev_ch[c][:] = [int(b) for b in d["free_dev_ch"][c]]
+            self._free_host_ch[c][:] = [int(b)
+                                        for b in d["free_host_ch"][c]]
+        self._rr = int(d["rr"])
+        self._retired = set(int(b) for b in d["retired"])
+        self.retired_ch = [int(n) for n in d["retired_ch"]]
+        self.exhausted_ch = [int(n) for n in d["exhausted_ch"]]
+        self.stats = PoolStats(**d["stats"])
+
     def note_exhausted(self, channel: int, n: int = 1):
         """Attribute one (or n) pool-exhaustion events to a channel:
         the typed-raise paths call this directly; the device-side

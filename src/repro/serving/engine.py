@@ -81,6 +81,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
@@ -89,6 +90,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import journal as jl
 from repro.core.faults import FaultPlane, SwapFault
 from repro.core.fmmu import batch as fb
 from repro.core.fmmu.types import NIL
@@ -131,7 +133,9 @@ class ServeEngine:
                  use_mesh: Optional[bool] = None,
                  fault_plane: Optional[FaultPlane] = None,
                  max_swap_retries: int = 3, swap_backoff_cap: int = 8,
-                 watchdog_rounds: Optional[int] = None):
+                 watchdog_rounds: Optional[int] = None,
+                 journal_path: Optional[str] = None,
+                 snapshot_every: int = 8):
         self.m = model
         self.cfg = model.cfg
         self.rt = model.rt
@@ -259,7 +263,23 @@ class ServeEngine:
                         "macro_fallbacks": 0, "swaps_out": 0,
                         "swaps_in": 0, "chunked_prefills": 0,
                         "swap_faults": 0, "quarantines": 0,
-                        "watchdog_quarantines": 0, "requeues": 0}
+                        "watchdog_quarantines": 0, "requeues": 0,
+                        "recoveries": 0}
+        # crash-consistency journal (ISSUE 7, core/journal.py): when
+        # attached, every host commit point appends a sequence-numbered
+        # record and every `snapshot_every`-th macro boundary writes a
+        # full atomic state snapshot. Detached (default) the engine is
+        # byte-for-byte the PR-6 engine — the hooks are `is not None`
+        # guards on host code, so the traced graphs cannot differ
+        # (jaxpr-identity asserted in tests/test_journal.py).
+        self.journal: Optional["jl.Journal"] = None
+        self.snapshot_every = int(snapshot_every)
+        self._finished: Dict[int, List[int]] = {}
+        self._ever_admitted: set = set()
+        self._lane_base = 0
+        self.last_recovery: Optional[dict] = None
+        if journal_path:
+            self.attach_journal(journal_path)
 
     # ------------------------------------------------------------- API
     def submit(self, tokens: List[int], max_new: int = 16, *,
@@ -268,6 +288,13 @@ class ServeEngine:
         self._rid += 1
         self.queue.append(Request(rid, list(tokens), max_new,
                                   src_emb=src_emb, prefix_emb=prefix_emb))
+        if self.journal is not None:
+            assert src_emb is None and prefix_emb is None, \
+                "journaled serving persists token prompts only"
+            self.journal.append(jl.SUBMIT,
+                                {"rid": rid,
+                                 "tokens": [int(t) for t in tokens],
+                                 "max_new": int(max_new), "lanes": 0})
         return rid
 
     def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
@@ -302,8 +329,148 @@ class ServeEngine:
         self._swap_fails = {}
         self._retry_at = {}
         self._progress = {}
+        if self.journal is not None:
+            self.journal.close()
+        self.journal = None        # kvm.reset detached its hook already
+        self._finished = {}
+        self._ever_admitted = set()
         for k in self.metrics:
             self.metrics[k] = 0
+
+    # -------------------------------------- crash consistency (ISSUE 7)
+    def attach_journal(self, path: str,
+                       snapshot_every: Optional[int] = None,
+                       resume: bool = False) -> "jl.Journal":
+        """Arm crash-consistent journaling at `path`: every host commit
+        point appends a record, every snapshot_every-th boundary writes
+        an atomic snapshot, and the fault plane's crash axis (if any)
+        is consumed per append. Writes the base snapshot immediately —
+        recovery always has a floor to replay from."""
+        if snapshot_every is not None:
+            self.snapshot_every = int(snapshot_every)
+        self.journal = jl.Journal(path, faults=self.faults,
+                                  resume=resume)
+        self.kvm.journal = self.journal
+        # lane-integrity baseline: device commit lanes vs journaled
+        # lanes advance in lockstep from here (journal_lane_check)
+        self._lane_base = self._device_lanes()
+        self.journal.lanes_base = self.journal.commit_lanes
+        self._write_snapshot()
+        return self.journal
+
+    def _journal_finish(self, r: Request):
+        """FINISH precedes the slot's FREE in the journal: a crash
+        between the two leaves an orphan mapping that replay's cleanup
+        pass re-frees (the request is durably done either way)."""
+        if self.journal is None:
+            return
+        out = [int(t) for t in r.out[:r.max_new]]
+        self._finished[r.rid] = out
+        self.journal.append(jl.FINISH,
+                            {"rid": r.rid, "out": out, "lanes": 0})
+
+    def _device_lanes(self) -> int:
+        """Total committed map-write lanes on device (the ISSUE-7
+        commit_seq lane, summed over channel shards). A readback —
+        diagnostics and tests only, never the hot path."""
+        return int(np.asarray(jax.device_get(
+            fb.commit_seq_vec(self.kvm.state))).sum())
+
+    def journal_lane_check(self) -> bool:
+        """Integrity cross-check at a quiesced boundary: the device's
+        commit_seq lane and the journal's cumulative record lanes must
+        have advanced identically since attach. (Between a macro scan
+        and its reconcile record the two legitimately diverge — call
+        this after ``step`` returns, not mid-dispatch.)"""
+        if self.journal is None:
+            return True
+        return (self._device_lanes() - self._lane_base
+                == self.journal.commit_lanes - self.journal.lanes_base)
+
+    def _write_snapshot(self) -> str:
+        """One atomic full-state snapshot: the manager's host truth
+        (page lists + pool allocator incl. free-list order) plus the
+        engine's request/admission state. Host bookkeeping only — no
+        device arrays, no KV data (volatile by design: in-flight
+        requests restart via the quarantine discipline)."""
+        st = self.kvm.snapshot_state()
+        st["queue"] = [r.rid for r in self.queue]
+        st["ever_admitted"] = sorted(self._ever_admitted)
+        st["active"] = [[r.rid, r.slot] for r in self.active.values()]
+        st["done"] = {int(r): o for r, o in self._finished.items()}
+        st["submits"] = {
+            r.rid: [[int(t) for t in r.tokens], int(r.max_new)]
+            for r in list(self.queue) + list(self.active.values())}
+        st["rid"] = self._rid
+        st["boundary"] = self._boundary
+        return self.journal.snapshot(st)
+
+    def recover(self, path: str,
+                fault_plane: Optional[FaultPlane] = None,
+                snapshot_every: Optional[int] = None
+                ) -> Dict[int, List[int]]:
+        """Sudden-power-off recovery: rebuild this engine from the
+        journal directory at `path` (latest snapshot + record replay +
+        OOB reverse-map scan for a torn tail — core/journal.py), then
+        restart every in-flight request with the quarantine discipline
+        — pages freed, output reset, requeued at its admission
+        position — and re-arm the journal with a fresh base snapshot.
+
+        Requeue ordering (satellite 2): the recovered admission deque
+        is [crash-time front-requeued quarantined requests] +
+        [in-flight requests, admission order] + [never-admitted
+        arrivals, FIFO]. Quarantined requests were deliberately pushed
+        AHEAD of the admission point before the crash, so recovery
+        must not reorder them behind the recovered in-flight ones; the
+        crash-time queue can only be (requeued..., pristine...) —
+        appendleft builds the front, append the back — so the split
+        point is the first never-admitted rid.
+
+        Returns the durably finished outputs (rid -> tokens); resumed
+        decode is bit-identical to an uncrashed run (greedy
+        determinism). ``last_recovery`` carries MTTR inputs: replayed
+        record count, torn/oob_scan flags, and wall recovery time."""
+        t0 = time.perf_counter()
+        rec = jl.replay(path)
+        n_recov = self.metrics.get("recoveries", 0)
+        self.reset(fault_plane)
+        self.kvm.restore_mapping(rec)
+        # in-flight restart (KV was volatile): free surviving pages —
+        # journal detached, so these frees are folded into the fresh
+        # base snapshot rather than logged — and rebuild Requests
+        requeued: List[Request] = []
+        for rid, slot in rec.active.items():
+            if slot in self.kvm.seq_pages:
+                self.kvm.free_seq(slot)
+            toks, mx = rec.submits[rid]
+            requeued.append(Request(rid, list(toks), int(mx)))
+        qreqs = []
+        for rid in rec.queue:
+            toks, mx = rec.submits[rid]
+            qreqs.append(Request(rid, list(toks), int(mx)))
+        k = 0
+        while k < len(qreqs) and qreqs[k].rid in rec.ever_admitted:
+            k += 1
+        self.queue = deque(qreqs[:k] + requeued + qreqs[k:])
+        self._rid = int(rec.rid)
+        self._boundary = int(rec.boundary)
+        self._finished = {int(r): list(o) for r, o in rec.done.items()}
+        self._ever_admitted = (set(rec.ever_admitted)
+                               | set(rec.active.keys()))
+        self.metrics["requeues"] += len(requeued)
+        self.metrics["recoveries"] = n_recov + 1
+        # re-arm: truncate the torn tail, continue the sequence, seal
+        # with a fresh snapshot — a second crash replays from here
+        self.attach_journal(path, snapshot_every=snapshot_every,
+                            resume=True)
+        self.last_recovery = {
+            "snap_seq": int(rec.snap_seq),
+            "last_seq": int(rec.last_seq),
+            "replayed": int(rec.replayed),
+            "torn": bool(rec.torn), "oob_scan": bool(rec.oob_scan),
+            "requeued": len(requeued),
+            "recover_s": time.perf_counter() - t0}
+        return {int(r): list(o) for r, o in rec.done.items()}
 
     # ------------------------------------------------------------- steps
     def step(self, done: Dict[int, List[int]]) -> bool:
@@ -328,6 +495,12 @@ class ServeEngine:
             if self._macro_on:
                 self.metrics["macro_fallbacks"] += 1
             self._decode_step(done)
+        # macro-boundary snapshot cadence (ISSUE 7): every
+        # snapshot_every-th scheduling round seals the journal with a
+        # full atomic state snapshot, bounding replay length (MTTR)
+        if self.journal is not None and self.snapshot_every \
+                and self._boundary % self.snapshot_every == 0:
+            self._write_snapshot()
         return bool(self.active or self.queue)
 
     def _free_slots(self) -> List[int]:
@@ -371,7 +544,12 @@ class ServeEngine:
             free.pop(0)
             req.slot = slot
             self.active[req.rid] = req
+            self._ever_admitted.add(req.rid)
             self._resident_since[slot] = self._boundary
+            if self.journal is not None:
+                self.journal.append(
+                    jl.ADMIT, {"rid": req.rid, "slot": int(slot),
+                               "lanes": 0})
             self._do_prefill(req, chunk)
             if budget is not None:
                 budget -= chunk
@@ -534,6 +712,8 @@ class ServeEngine:
         req.out = []
         req.pending_prompt = []
         self.queue.appendleft(req)
+        if self.journal is not None:
+            self.journal.append(jl.QUAR, {"rid": req.rid, "lanes": 0})
         self.metrics["quarantines"] += 1
         self.metrics["requeues"] += 1
         if "watchdog" in reason:
@@ -1161,6 +1341,7 @@ class ServeEngine:
             self.ctx_lens[s] += K
             if len(r.out) >= r.max_new:
                 done[r.rid] = r.out[:r.max_new]
+                self._journal_finish(r)
                 self.kvm.free_seq(s)
                 self._release_slot(s)
                 del self.active[r.rid]
@@ -1438,6 +1619,7 @@ class ServeEngine:
             self.metrics["generated"] += 1
             if len(r.out) >= r.max_new or tok == self.eos_id:
                 done[r.rid] = r.out[:r.max_new]
+                self._journal_finish(r)
                 self.kvm.free_seq(r.slot)
                 self._release_slot(r.slot)
                 del self.active[r.rid]

@@ -1,0 +1,197 @@
+"""Chaos crash sweep (ISSUE 7): randomized sudden-power-off schedules
+— composed with the ISSUE-6 fault axes — against the journaled serving
+engine, across channel counts.
+
+Every seed draws a crash probability, a tear distribution, a snapshot
+interval, and mild swap/program/alloc fault rates. The run submits the
+fixed oversubscribed workload, and every time the scheduled power cut
+fires (``faults.Crash`` escaping the engine), the harness recovers
+from the journal directory and keeps going — exactly a client that
+re-submits what was never durably accepted. The invariants:
+
+  1. the run DRAINS across any number of crashes (bounded, since
+     FINISH records make completed work durable and snapshots bound
+     replay);
+  2. the union of durable + resumed outputs is BIT-IDENTICAL to the
+     fault-free oracle — greedy determinism + the quarantine-restart
+     discipline make a recovered in-flight request reproduce its
+     tokens.
+
+Failures print the schedule seed; ``make_plan(seed, ...)`` with the
+printed parameters reproduces the run. Vacuity is asserted on the
+aggregate: schedules must actually crash, tear records mid-byte, and
+recover torn map commits through the OOB reverse-map scan.
+"""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, smoke_config
+from repro.core import faults as flt
+from repro.core.faults import FaultPlane, make_plan
+from repro.models import Runtime, build_model
+from repro.serving.engine import ServeEngine
+
+pytestmark = pytest.mark.recovery
+
+RT = Runtime(compute_dtype=jnp.float32, param_dtype=jnp.float32,
+             remat="none", page_size=8, capacity_factor=100.0)
+
+CHANNELS = (1, 2, 4)
+PROMPTS = [list(range(3 + 11 * i, 10 + 11 * i)) for i in range(6)]
+MAX_NEW = 10
+MAX_STEPS = 4000
+MAX_CRASHES = 30
+
+_CACHE: dict = {}
+
+
+def _engine(C: int) -> ServeEngine:
+    eng = _CACHE.get(C)
+    if eng is None:
+        m = _CACHE.get("model")
+        if m is None:
+            cfg = smoke_config(get_arch("llama3.2-1b"))
+            cfg = dataclasses.replace(
+                cfg, name="chaos-crash-tiny", n_layers=cfg.period,
+                d_model=32, n_heads=2, n_kv_heads=1, head_dim=16,
+                d_ff=64, vocab_size=128)
+            model = build_model(cfg, RT)
+            m = (model, model.init(jax.random.key(0)))
+            _CACHE["model"] = m
+        model, params = m
+        eng = ServeEngine(model, params, n_slots=4, max_ctx=64,
+                          n_device_blocks=12, n_host_blocks=24,
+                          macro_k=4, swap_patience=2, channels=C,
+                          watchdog_rounds=16)
+        _CACHE[C] = eng
+    return eng
+
+
+def _oracle(C: int):
+    key = ("oracle", C)
+    if key not in _CACHE:
+        eng = _engine(C)
+        eng.reset(None)
+        rids = [eng.submit(list(p), max_new=MAX_NEW) for p in PROMPTS]
+        done = eng.run(max_steps=MAX_STEPS)
+        assert not eng.active and not eng.queue, "oracle did not drain"
+        _CACHE[key] = [done[r] for r in rids]
+    return _CACHE[key]
+
+
+def _schedule(seed: int, C: int):
+    rng = np.random.default_rng(seed)
+    stall = np.ones(C)
+    if rng.random() < 0.3:
+        stall[rng.integers(C)] = rng.uniform(2.0, 4.0)
+    return (dict(channels=C,
+                 crash_p=float(rng.uniform(0.01, 0.05)),
+                 swap_fail_p=float(rng.uniform(0, 0.15)),
+                 program_fail_p=float(rng.uniform(0, 0.1)),
+                 alloc_fail_p=float(rng.uniform(0, 0.1)),
+                 stall=stall.tolist()),
+            int(rng.choice([1, 4, 16])))
+
+
+def _run_one(C: int, seed: int, ref):
+    """One schedule: journaled run, recover on every scheduled power
+    cut, re-submit what was never durable, drain. Returns per-run
+    coverage counters."""
+    eng = _engine(C)
+    kw, snap_every = _schedule(seed, C)
+    plane = FaultPlane(make_plan(seed, **kw))
+    msg = f"chaos-crash seed={seed} channels={C} plan={plane.describe()}"
+    cov = {"crashes": 0, "torn": 0, "oob_scans": 0, "replayed": 0}
+    with tempfile.TemporaryDirectory() as d:
+        eng.reset(plane)
+        eng.attach_journal(d, snapshot_every=snap_every)
+        to_submit = list(range(len(PROMPTS)))
+        rid_to_idx: dict = {}
+        final: dict = {}
+        while True:
+            try:
+                for i in to_submit:
+                    rid_to_idx[eng.submit(list(PROMPTS[i]),
+                                          max_new=MAX_NEW)] = i
+                to_submit = []
+                done = eng.run(max_steps=MAX_STEPS)
+                break
+            except flt.Crash:
+                cov["crashes"] += 1
+                if cov["crashes"] > MAX_CRASHES:
+                    print(f"\nCHAOS-CRASH FAILURE {msg}: "
+                          f">{MAX_CRASHES} crashes without draining")
+                    raise
+                # the SAME plane resumes: its op counters carry across
+                # the recovery, so later scheduled cuts still fire
+                durable = eng.recover(d, fault_plane=plane)
+                info = eng.last_recovery
+                cov["torn"] += int(info["torn"])
+                cov["oob_scans"] += int(info["oob_scan"])
+                cov["replayed"] += int(info["replayed"])
+                present = set(durable) | {r.rid for r in eng.queue}
+                rid_to_idx = {r: i for r, i in rid_to_idx.items()
+                              if r in present}
+                for r, out in durable.items():
+                    if r in rid_to_idx:
+                        final[rid_to_idx[r]] = out
+                covered = set(rid_to_idx.values())
+                to_submit = [i for i in range(len(PROMPTS))
+                             if i not in covered]
+        for r, out in done.items():
+            if r in rid_to_idx:
+                final[rid_to_idx[r]] = out
+        final.update({rid_to_idx[r]: out
+                      for r, out in eng._finished.items()
+                      if r in rid_to_idx})
+        undrained = [i for i in range(len(PROMPTS)) if i not in final]
+        if undrained or eng.active or eng.queue:
+            print(f"\nCHAOS-CRASH FAILURE {msg} undrained={undrained}")
+        assert not undrained and not eng.active and not eng.queue, msg
+        got = [final[i] for i in range(len(PROMPTS))]
+        if got != ref:
+            print(f"\nCHAOS-CRASH FAILURE {msg} "
+                  f"metrics={eng.metrics} cov={cov}")
+        assert got == ref, msg
+        assert eng.journal_lane_check(), msg
+        eng.reset(None)        # close the journal before the dir goes
+    return cov
+
+
+@pytest.mark.parametrize("channels", CHANNELS)
+def test_chaos_crash_quick(channels):
+    """A few crash schedules per channel count in the default lanes —
+    the canary for the @slow acceptance sweep below."""
+    ref = _oracle(channels)
+    agg = {"crashes": 0, "torn": 0, "oob_scans": 0, "replayed": 0}
+    for seed in range(300, 304):
+        cov = _run_one(channels, seed, ref)
+        for k in agg:
+            agg[k] += cov[k]
+    assert agg["crashes"] > 0, "no schedule ever crashed (vacuous)"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("channels", CHANNELS)
+def test_chaos_crash_sweep(channels):
+    """Acceptance sweep: 25 schedules per channel count, every one
+    draining bit-identical to the fault-free oracle across its crashes.
+    The aggregate must have exercised the whole recovery surface:
+    crashes fired, records tore mid-byte, and at least one torn MAP
+    commit was rebuilt by the OOB reverse-map scan."""
+    ref = _oracle(channels)
+    agg = {"crashes": 0, "torn": 0, "oob_scans": 0, "replayed": 0}
+    for seed in range(2000, 2025):
+        cov = _run_one(channels, seed, ref)
+        for k in agg:
+            agg[k] += cov[k]
+    assert agg["crashes"] >= 10, f"sweep barely crashed: {agg}"
+    assert agg["torn"] > 0, "no schedule ever tore a record mid-byte"
+    assert agg["oob_scans"] > 0, \
+        "no schedule ever exercised the OOB reverse-map scan"
+    assert agg["replayed"] > 0, "no schedule ever replayed records"

@@ -1,5 +1,7 @@
 """Checkpointing: roundtrip, async, atomic commit, corruption detection,
-retention, resume-continues-identically, elastic restore."""
+retention, resume-continues-identically, elastic restore; plus the
+serving-side state round-trip (ISSUE 7): ServingMapState + BlockPool
+through journal snapshot/replay, bit-identical."""
 import json
 import os
 import shutil
@@ -112,3 +114,80 @@ def test_elastic_restore_trivial_mesh():
         with open(os.path.join(d, "step_000000005", "manifest.json")) as f:
             man = json.load(f)
         assert man["leaves"][0]["spec"] == [None, "model"]
+
+
+# ---------------------------------------------------------------------
+# serving-state round-trip (ISSUE 7, satellite): the crash-consistency
+# plane's snapshot + replay must restore the serving map and the block
+# allocator BIT-exactly — dense block table, per-channel free-list
+# ORDER (the device-mirror contract makes order part of the state),
+# retirement set and per-channel counters, and allocator stats.
+# ---------------------------------------------------------------------
+
+def _kvm_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.block_tables()),
+                                  np.asarray(b.block_tables()))
+    assert {s: list(p) for s, p in a.seq_pages.items()} == \
+           {s: list(p) for s, p in b.seq_pages.items()}
+    assert a._host_pages == b._host_pages
+    assert a.pool.state_dict() == b.pool.state_dict()
+
+
+@pytest.mark.recovery
+@pytest.mark.parametrize("channels", (1, 2, 4))
+def test_serving_map_pool_roundtrip(channels):
+    """Drive allocation / growth / free / swap / retirement traffic on
+    a journaled KVPageManager, then rebuild a fresh manager two ways —
+    records-only replay from the base snapshot, and latest-snapshot +
+    tail replay — and require bit-identical state both times."""
+    from repro.core import journal as jl
+    from repro.paging.kv_manager import KVPageManager
+
+    def fresh():
+        return KVPageManager(n_slots=4, max_pages=6, n_device_blocks=16,
+                             n_host_blocks=8, channels=channels)
+
+    with tempfile.TemporaryDirectory() as d:
+        kvm = fresh()
+        j = jl.Journal(d)
+        kvm.journal = j
+        j.snapshot(kvm.snapshot_state())          # base snapshot (seq 0)
+        kvm.new_seq(0, 3)
+        kvm.new_seq(1, 2)
+        kvm.extend_seqs({0: 2, 1: 1})
+        kvm.new_seq(2, 4)
+        kvm.free_seq(1)                            # perturbs list order
+        # map-only retirement of a mapped block: replacement from the
+        # same channel, bad block permanently out of service
+        kvm.retire_bad_blocks([(0 * kvm.max_pages + 1,
+                                kvm.seq_pages[0][1])])
+        # swap one sequence out and back: host-tier ids + swap stats
+        width = kvm.pool.n_device + kvm.pool.n_host + 1
+        pools = [jnp.arange(width * 4.0).reshape(width, 4)]
+        pools, n = kvm.swap_out(2, pools)
+        assert n == 4
+
+        # (a) records-only replay from the base snapshot
+        rec = jl.replay(d)
+        assert rec.snap_seq == 0 and rec.replayed == j.records
+        k2 = fresh()
+        k2.restore_mapping(rec)
+        _kvm_equal(kvm, k2)
+
+        # (b) exhaustion counters are snapshot-granular (no record on
+        # exception paths): bump one, snapshot, more traffic, replay
+        # from the LATEST snapshot + tail
+        kvm.pool.note_exhausted(0)
+        j.snapshot(kvm.snapshot_state())
+        pools, n = kvm.swap_in(2, pools)
+        assert n == 4
+        kvm.extend_seqs({0: 1})
+        rec = jl.replay(d)
+        assert rec.snap_seq > 0 and rec.replayed < j.records
+        k3 = fresh()
+        k3.restore_mapping(rec)
+        _kvm_equal(kvm, k3)
+        assert k3.pool.exhausted_ch[0] == 1
+        assert k3.pool.stats.retired == 1
+        assert k3.pool.is_retired(k3.pool.state_dict()["retired"][0])
+        j.close()

@@ -269,7 +269,8 @@ def test_zero_probability_plan_is_counter_identical(tiny):
     out_zero, met_zero = run()
     assert out_none == out_zero
     assert met_none == met_zero
-    assert eng.faults.counts() == {"swap": 0, "program": 0, "alloc": 0}
+    assert eng.faults.counts() == {"swap": 0, "program": 0, "alloc": 0,
+                                   "crash": 0}
     st = eng.kvm.hit_stats()
     assert st["swap_faults"] == st["program_faults"] == \
         st["alloc_faults"] == 0
@@ -294,6 +295,7 @@ def _stub_engine(max_retries=3, cap=8, watchdog=4):
     e.watchdog_rounds = watchdog
     e.kvm = types.SimpleNamespace(freed=[])
     e.kvm.free_seq = e.kvm.freed.append
+    e.journal = None          # quarantine journals when attached (PR 7)
     for name in ("_note_swap_fault", "_backed_off", "_quarantine",
                  "_release_slot", "_watchdog"):
         setattr(e, name, types.MethodType(getattr(ServeEngine, name), e))

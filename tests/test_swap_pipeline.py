@@ -258,6 +258,19 @@ def _valid_doc():
                     "retired_blocks": 0, "program_faults": 0},
             },
         },
+        "recovery": {
+            "channels": 2, "seed": 2027, "crash_at": 80,
+            "snapshot_sweep": {
+                f"snap{n}": {
+                    "snapshot_every": n, "mttr_s": 0.5 + 0.01 * n,
+                    "recover_s": 0.1, "replayed_records": 5 * n,
+                    "snapshot_seq": 80 - 5 * n, "last_seq": 81,
+                    "torn": n == 4, "oob_scan": n == 4,
+                    "requeued": 3,
+                } for n in (1, 4, 16)
+            },
+            "mttr_s": {f"snap{n}": 0.5 + 0.01 * n for n in (1, 4, 16)},
+        },
     }
 
 
@@ -275,6 +288,8 @@ def test_bench_schema_accepts_valid_and_rejects_malformed(tmp_path):
     assert line["oversub_fallbacks"]["oversub_fused"] == 0
     assert line["oversub_tokens_per_sec"]["oversub_fused"] == 900.0
     assert line["degraded_retention"] == 0.7
+    assert line["recovery_mttr_s"]["snap4"] == 0.54
+    assert line["recovery_replayed"]["snap16"] == 80
 
     # missing file and invalid JSON hard-fail
     assert chk.main([str(tmp_path / "nope.json")]) == 1
@@ -328,3 +343,23 @@ def test_bench_schema_accepts_valid_and_rejects_malformed(tmp_path):
            .update(swap_faults=0))
     broken(lambda d: d["fault_injection"]["modes"]["faults_healthy"]
            .update(swap_faults=3))
+    # ISSUE-7 recovery gates
+    broken(lambda d: d.pop("recovery"))
+    broken(lambda d: d["recovery"].pop("snapshot_sweep"))
+    broken(lambda d: d["recovery"].update(snapshot_sweep={}))
+    broken(lambda d: d["recovery"]["snapshot_sweep"]["snap4"]
+           .pop("mttr_s"))
+    broken(lambda d: d["recovery"]["snapshot_sweep"]["snap4"]
+           .update(mttr_s="fast"))
+    # MTTR can never be smaller than its replay component
+    broken(lambda d: d["recovery"]["snapshot_sweep"]["snap4"]
+           .update(mttr_s=0.01))
+    # a sweep point that replayed nothing / requeued nothing measured
+    # an idle engine, not a recovery
+    broken(lambda d: d["recovery"]["snapshot_sweep"]["snap4"]
+           .update(replayed_records=0))
+    broken(lambda d: d["recovery"]["snapshot_sweep"]["snap4"]
+           .update(requeued=0))
+    broken(lambda d: d["recovery"]["snapshot_sweep"]["snap4"]
+           .update(torn="maybe"))
+    broken(lambda d: d["recovery"]["mttr_s"].pop("snap4"))
