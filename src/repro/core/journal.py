@@ -498,37 +498,46 @@ def _oob_scan(sh: Recovered, pairs: List[List[int]],
               retired: List[int]):
     """The SPOR torn-tail fallback: the dangling commit's journal
     record never made it, but its blocks' program-time OOB metadata
-    did. Reconstruct the newest mapping per dlpn from the (dlpn, seq)
-    owners — scanned PER CHANNEL (each channel owns block % C == c,
-    mirroring per-channel flash arrays), newest seq wins (here: the
-    one dangling frame, already newer than everything replayed). A
-    displaced older owner returns to the free pool; OOB bad-block
-    marks re-apply retirement (the bad-block table also lives in OOB
-    on real NAND)."""
+    did. Each channel's flash array (blocks with block % C == c)
+    yields its own (dlpn, seq) owners newer than the replayed seq
+    (here: the one dangling frame, already newer than everything
+    replayed); the per-channel owner sets are then merged and applied
+    in dlpn order — a slot's pages stripe ACROSS channels, so
+    channel-major application would see page holes for any commit
+    programming more pages than channels. A displaced older owner
+    returns to the free pool; OOB bad-block marks re-apply retirement
+    (the bad-block table also lives in OOB on real NAND). A retired
+    mark must also pull the block out of its shadow free list when
+    present: the live run popped schedule-failed replacement
+    candidates from the pool before retiring them, and the replayed
+    shadow never saw those pops (tolerant miss — a bad block
+    displaced from a page list was never free)."""
     mp = sh.cfg["max_pages"]
     for b in retired:
-        if b not in sh.retired:
-            sh.retired.add(b)
-            sh.retired_ch[_channel_of(sh.cfg, b)] += 1
-            sh.stats["retired"] += 1
-    for c in range(sh.cfg["channels"]):
-        for d, b in pairs:
-            if _channel_of(sh.cfg, b) != c:
-                continue
-            slot, page = divmod(d, mp)
-            pages = sh.seq_pages.setdefault(slot, [])
-            if page > len(pages):
-                raise JournalError(
-                    f"OOB owner (dlpn={d}) maps a hole at page {page}")
-            _take(sh, b, host=b >= HOST_BASE)
-            if page == len(pages):
-                pages.append(b)
-            else:
-                old = pages[page]
-                pages[page] = b
-                if old != b:
-                    _give(sh, old)
-            sh.host_pages[slot] = sum(x >= HOST_BASE for x in pages)
+        if b in sh.retired:
+            continue
+        lists = sh.free_host_ch if b >= HOST_BASE else sh.free_dev_ch
+        ch = lists[_channel_of(sh.cfg, b)]
+        if b in ch:
+            ch.remove(b)
+        sh.retired.add(b)
+        sh.retired_ch[_channel_of(sh.cfg, b)] += 1
+        sh.stats["retired"] += 1
+    for d, b in sorted((int(d), int(b)) for d, b in pairs):
+        slot, page = divmod(d, mp)
+        pages = sh.seq_pages.setdefault(slot, [])
+        if page > len(pages):
+            raise JournalError(
+                f"OOB owner (dlpn={d}) maps a hole at page {page}")
+        _take(sh, b, host=b >= HOST_BASE)
+        if page == len(pages):
+            pages.append(b)
+        else:
+            old = pages[page]
+            pages[page] = b
+            if old != b:
+                _give(sh, old)
+        sh.host_pages[slot] = sum(x >= HOST_BASE for x in pages)
     sh.stats["allocs"] += len(pairs)
 
 

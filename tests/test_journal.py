@@ -14,6 +14,7 @@ import shutil
 import tempfile
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -109,33 +110,74 @@ def _cut_dir(src: str, dst: str, o_base: int, r_base: int, cut: int,
         f.truncate(r_base + max(0, cut - o_tail))
 
 
-def _torn_tail_case(seed: int, exhaustive: bool, frac: float = 0.0):
+def _torn_tail_case(seed: int, exhaustive: bool, frac: float = 0.0,
+                    final: str = "new2"):
     """Drive journaled traffic, then truncate the LAST commit's bytes —
     at every offset (exhaustive) or at one seeded offset — and require:
     replay never corrupts the map (check() passes) and the recovered
     mapping is bit-exactly either the pre-commit or the post-commit
     oracle, with the flip happening exactly when the commit's OOB frame
     is complete (the SPOR contract: whole OOB = replayable, torn OOB =
-    dropped cleanly)."""
+    dropped cleanly).
+
+    ``final`` picks the dangling commit: a 2-page new_seq ("new2", the
+    default — fits any channel draw), a 3-page new_seq or 3-page slot
+    extension ("new3" / "extend3" — always at channels=2, where the
+    slot's pages stripe across channels, so the OOB scan must apply
+    owners in page order, not channel order), a RETIRE with a
+    program-fault chain ("retire" — the dangling frame carries
+    bad-block marks for a schedule-failed replacement candidate the
+    replayed shadow still holds free), or a mid-swap tear ("swap")."""
     rng = random.Random(seed)
     with tempfile.TemporaryDirectory() as d:
         src = os.path.join(d, "j")
-        kvm = KVPageManager(n_slots=4, max_pages=8, n_device_blocks=24,
-                            n_host_blocks=0,
-                            channels=rng.choice((1, 2)))
+        kvm = KVPageManager(
+            n_slots=4, max_pages=8, n_device_blocks=24,
+            n_host_blocks=8 if final == "swap" else 0,
+            channels=rng.choice((1, 2)) if final == "new2" else 2)
         j = jl.Journal(src)
         kvm.journal = j
         j.snapshot(kvm.snapshot_state())
         _traffic(kvm, rng)
         if len(kvm.seq_pages) == kvm.n_slots:
             kvm.free_seq(min(kvm.seq_pages))
+        victim = None
+        if final != "new2":
+            # the non-default finals need pool headroom (and a live
+            # 3-page victim slot for extend/retire/swap); every top-up
+            # op below is itself a journaled commit, so it lands
+            # before the pre-commit oracle is taken
+            while (min(kvm.pool.free_device_ch(c)
+                       for c in range(kvm.channels)) < 6
+                   and kvm.seq_pages):
+                kvm.free_seq(min(kvm.seq_pages))
+            if final != "new3":
+                victim = next(s for s in range(4)
+                              if s not in kvm.seq_pages)
+                kvm.new_seq(victim, 3)
         m_before = jl.replay(src).mapping()
         o_base = os.path.getsize(os.path.join(src, "oob.log"))
         r_base = os.path.getsize(os.path.join(src, "journal.log"))
-        # final commit: a NEW_SEQ — programs blocks, so it has an OOB
-        # frame and exercises the reverse-map scan
-        slot = next(s for s in range(4) if s not in kvm.seq_pages)
-        kvm.new_seq(slot, 2)
+        # final commit: programs blocks, so it has an OOB frame and
+        # exercises the reverse-map scan
+        if final in ("new2", "new3"):
+            slot = next(s for s in range(4) if s not in kvm.seq_pages)
+            kvm.new_seq(slot, 2 if final == "new2" else 3)
+        elif final == "extend3":
+            kvm.extend_seq(victim, 3)
+        elif final == "retire":
+            # first replacement candidate fails its program too: the
+            # chain retires {original, candidate} and keeps the second
+            # candidate — the candidate is a block the replayed shadow
+            # still thinks is free
+            old = kvm.seq_pages[victim][0]
+            kvm.faults = FaultPlane(make_plan(seed)._replace(
+                program_fail=np.array([True] + [False] * 7)))
+            kvm.retire_bad_blocks([(victim * kvm.max_pages, old)])
+        else:
+            assert final == "swap"
+            width = kvm.pool.n_device + kvm.pool.n_host + 1
+            kvm.swap_out(victim, [jnp.zeros((width, 2))])
         j.close()
         m_after = jl.replay(src).mapping()
         assert m_after != m_before
@@ -166,17 +208,36 @@ def test_truncate_every_byte_offset_of_last_record():
         _torn_tail_case(seed, exhaustive=True)
 
 
-@example(seed=3, frac=0.0)
-@example(seed=5, frac=0.5)
-@example(seed=11, frac=0.93)
-@example(seed=42, frac=1.0)
-@settings(max_examples=30, deadline=None)
-@given(seed=st.integers(0, 10_000), frac=st.floats(0.0, 1.0))
-def test_torn_tail_property(seed, frac):
-    """Property form: arbitrary traffic script x arbitrary cut point.
-    The pinned examples are the regression seeds; with hypothesis
-    installed the strategy explores beyond them."""
-    _torn_tail_case(int(seed), exhaustive=False, frac=float(frac))
+@pytest.mark.parametrize("final", ("new3", "extend3", "retire", "swap"))
+def test_truncate_every_byte_offset_other_commit_kinds(final):
+    """Review hardening: exhaustive byte-offset sweeps for the dangling
+    commit kinds the default case cannot reach — multi-page allocs
+    whose pages stripe across channels=2 (the OOB scan must apply
+    owners in page order), a RETIRE program-fault chain (bad-block
+    marks for a block the shadow still holds free), and a mid-swap
+    tear."""
+    _torn_tail_case(31, exhaustive=True, final=final)
+
+
+@example(seed=3, frac=0.0, final="new2")
+@example(seed=5, frac=0.5, final="new2")
+@example(seed=11, frac=0.93, final="new2")
+@example(seed=42, frac=1.0, final="new2")
+@example(seed=17, frac=0.4, final="new3")
+@example(seed=19, frac=0.55, final="extend3")
+@example(seed=29, frac=0.5, final="retire")
+@example(seed=37, frac=0.8, final="swap")
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), frac=st.floats(0.0, 1.0),
+       final=st.sampled_from(("new2", "new3", "extend3", "retire",
+                              "swap")))
+def test_torn_tail_property(seed, frac, final):
+    """Property form: arbitrary traffic script x arbitrary cut point x
+    dangling commit kind. The pinned examples are the regression
+    seeds; with hypothesis installed the strategy explores beyond
+    them."""
+    _torn_tail_case(int(seed), exhaustive=False, frac=float(frac),
+                    final=str(final))
 
 
 def test_torn_tail_seeded_sweep():
@@ -185,6 +246,16 @@ def test_torn_tail_seeded_sweep():
     for seed in range(12):
         for frac in (0.0, 0.33, 0.71, 1.0):
             _torn_tail_case(100 + seed, exhaustive=False, frac=frac)
+
+
+def test_torn_tail_seeded_sweep_commit_kinds():
+    """Seeded breadth over the non-default dangling commits (same
+    no-hypothesis rationale as above)."""
+    for final in ("new3", "extend3", "retire", "swap"):
+        for seed in (0, 1, 2):
+            for frac in (0.0, 0.45, 0.77, 1.0):
+                _torn_tail_case(140 + seed, exhaustive=False,
+                                frac=frac, final=final)
 
 
 # --------------------------------------------------- injected crashes
