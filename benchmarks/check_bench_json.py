@@ -53,7 +53,7 @@ def check(doc: dict) -> None:
     for key in ("bench", "n_slots", "max_pages", "macro_k",
                 "steps_timed", "repeats", "steps_per_sec", "dispersion",
                 "speedups", "oversubscription", "channel_scaling",
-                "fault_injection", "recovery"):
+                "fault_injection", "gc", "recovery"):
         _req(key in doc, f"missing top-level key {key!r}")
     _req(doc["bench"] == "serve_decode",
          f"bench is {doc['bench']!r}, expected 'serve_decode'")
@@ -187,6 +187,47 @@ def check(doc: dict) -> None:
          "fault_injection degraded run fired zero swap faults")
     _req(fi["modes"]["faults_healthy"]["swap_faults"] == 0,
          "fault_injection healthy control fired swap faults")
+    # ISSUE-9: the gc group must record the write-amplification axis
+    # (WA is flash/host, so it can never be < 1), the retention
+    # headline, and the reclaim counters — and the counters must prove
+    # the gc_on run actually walked (non-zero moves) while the gc_off
+    # control stayed inert (zero moves), or the retention number is
+    # measuring nothing
+    gc = doc["gc"]
+    for key in ("watermark", "pages_per_boundary", "block_pages",
+                "retention_gc_on_vs_off", "tokens_per_sec", "modes"):
+        _req(key in gc, f"gc missing {key!r}")
+    for key in ("watermark", "pages_per_boundary", "block_pages"):
+        _req(isinstance(gc[key], int) and gc[key] > 0,
+             f"gc.{key} is not a positive int")
+    _req(_num(gc["retention_gc_on_vs_off"])
+         and gc["retention_gc_on_vs_off"] > 0,
+         "gc.retention_gc_on_vs_off is not a positive number")
+    for mode in ("gc_off", "gc_on"):
+        _req(_num(gc["tokens_per_sec"].get(mode))
+             and gc["tokens_per_sec"][mode] > 0,
+             f"gc.tokens_per_sec[{mode!r}] is not a positive number")
+        counters = gc["modes"].get(mode)
+        _req(isinstance(counters, dict), f"gc.modes missing {mode!r}")
+        for key in ("gc_walks", "gc_moves", "gc_victims",
+                    "host_writes", "flash_programs",
+                    "prefetch_hits", "prefetch_misses"):
+            _req(isinstance(counters.get(key), int)
+                 and counters[key] >= 0,
+                 f"gc.modes[{mode!r}].{key} is not a "
+                 "non-negative int")
+        _req(_num(counters.get("write_amp"))
+             and counters["write_amp"] >= 1.0,
+             f"gc.modes[{mode!r}].write_amp is not a number >= 1.0")
+        vpc = counters.get("victims_per_channel")
+        _req(isinstance(vpc, list) and vpc
+             and all(isinstance(x, int) and x >= 0 for x in vpc),
+             f"gc.modes[{mode!r}].victims_per_channel is not a "
+             "non-negative int list")
+    _req(gc["modes"]["gc_on"]["gc_moves"] > 0,
+         "gc_on run relocated zero pages (walk measured nothing)")
+    _req(gc["modes"]["gc_off"]["gc_moves"] == 0,
+         "gc_off control relocated pages (GC not actually disabled)")
     # ISSUE-7: the recovery group must record the MTTR sweep over
     # snapshot intervals, and every sweep point must prove it measured
     # a real recovery (records replayed + requests requeued; MTTR can
@@ -253,6 +294,10 @@ def history_line(doc: dict) -> dict:
         },
         "degraded_retention":
             doc["fault_injection"]["retention_degraded_vs_healthy"],
+        "gc_retention": doc["gc"]["retention_gc_on_vs_off"],
+        "write_amp": {mode: counters["write_amp"]
+                      for mode, counters in doc["gc"]["modes"].items()},
+        "gc_moves": doc["gc"]["modes"]["gc_on"]["gc_moves"],
         "recovery_mttr_s": doc["recovery"]["mttr_s"],
         "recovery_replayed": {
             name: r["replayed_records"]

@@ -106,14 +106,26 @@ RECOVERY_CHANNELS = 2
 RECOVERY_SEED = 2027
 RECOVERY_CRASH_AT = 80
 RECOVERY_SNAPSHOT_SWEEP = (1, 4, 16)
+# GC victim-eviction walk (ISSUE 9): the oversubscribed fused engine
+# with the boundary GC walk + CTP prefetch on vs off, measured as the
+# same completion rounds as the oversub pair. The gc section records
+# the write-amplification axis (host writes vs flash programs) and
+# the reclaim counters; acceptance is gc_on retaining >= 0.9x gc_off
+# delivered tokens/sec while actually reclaiming victims.
+GC_WATERMARK = 6
+GC_BUDGET = 8
+GC_BLOCK_PAGES = 4
 # in-run speedup targets (ISSUE 3: fused >= 1.5x incremental;
 # ISSUE 4: non-blocking swap >= 1.3x the fall-back-on-pressure PR-3
 # behavior under 2x oversubscription; ISSUE 6: the degraded engine
-# retains >= 60% of the healthy fused engine's delivered tokens/sec)
+# retains >= 60% of the healthy fused engine's delivered tokens/sec;
+# ISSUE 9: the GC-enabled engine retains >= 90% of the GC-off
+# engine's delivered tokens/sec under the same oversubscription)
 TARGETS = {"fused_macro_vs_incremental": 1.5,
            "incremental_vs_rebuild": 1.5,
            "oversub_fused_vs_fallback": 1.3,
-           "degraded_retention": 0.6}
+           "degraded_retention": 0.6,
+           "gc_retention": 0.9}
 
 
 def _build_engine(mode: str):
@@ -123,6 +135,7 @@ def _build_engine(mode: str):
 
     from repro.configs import get_arch, smoke_config
     from repro.models import Runtime, build_model
+    from repro.serving.config import GCConfig, ServeConfig
     from repro.serving.engine import ServeEngine
 
     # the PR-2-faithful baselines pin the pre-ISSUE-3 decode graph:
@@ -148,11 +161,11 @@ def _build_engine(mode: str):
         # ISSUE-4 tentpole: masked swap-pending scan lanes + boundary
         # scheduler vs per-round single-step fallback, and the fused
         # donated swap jit vs PR-3's eager copy-per-swap data movement
-        eng = ServeEngine(m, params, n_slots=N_SLOTS, max_ctx=max_ctx,
-                          n_device_blocks=OVERSUB_DEV,
-                          n_host_blocks=OVERSUB_HOST, macro_k=MACRO_K,
-                          nonblocking_swap=(mode == "oversub_fused"),
-                          swap_patience=4)
+        eng = ServeEngine(m, params, config=ServeConfig(
+            n_slots=N_SLOTS, max_ctx=max_ctx,
+            n_device_blocks=OVERSUB_DEV, n_host_blocks=OVERSUB_HOST,
+            macro_k=MACRO_K, swap_patience=4,
+            nonblocking_swap=(mode == "oversub_fused")))
         if mode == "oversub_fused":
             # pin the swap-lane pad so the fused swap fn compiles ONCE
             # per direction (during warm-up) instead of re-tracing at
@@ -166,9 +179,9 @@ def _build_engine(mode: str):
         # ISSUE-5 sweep: the fused macro engine with the map sharded
         # across N channels (N=1 is the unsharded tentpole baseline,
         # rebuilt per mode so the windows interleave fairly)
-        return ServeEngine(m, params, n_slots=N_SLOTS, max_ctx=max_ctx,
-                           macro_k=MACRO_K,
-                           channels=int(mode.rsplit("_", 1)[1]))
+        return ServeEngine(m, params, config=ServeConfig(
+            n_slots=N_SLOTS, max_ctx=max_ctx, macro_k=MACRO_K,
+            channels=int(mode.rsplit("_", 1)[1])))
     if mode.startswith("faults_"):
         # ISSUE-6 pair: identical channel-sharded oversubscribed fused
         # engines; the degraded one carries the fault plane (brownout
@@ -180,11 +193,27 @@ def _build_engine(mode: str):
             plane = FaultPlane(make_plan(
                 FAULT_SEED, channels=FAULT_CHANNELS,
                 swap_fail_p=FAULT_SWAP_P, stall=list(FAULT_STALL)))
-        eng = ServeEngine(m, params, n_slots=N_SLOTS, max_ctx=max_ctx,
-                          n_device_blocks=OVERSUB_DEV,
-                          n_host_blocks=OVERSUB_HOST, macro_k=MACRO_K,
-                          swap_patience=4, channels=FAULT_CHANNELS,
-                          fault_plane=plane)
+        eng = ServeEngine(m, params, config=ServeConfig(
+            n_slots=N_SLOTS, max_ctx=max_ctx,
+            n_device_blocks=OVERSUB_DEV, n_host_blocks=OVERSUB_HOST,
+            macro_k=MACRO_K, swap_patience=4,
+            channels=FAULT_CHANNELS), fault_plane=plane)
+        eng.kvm.swap_pad = MAX_PAGES
+        return eng
+    if mode in ("gc_off", "gc_on"):
+        # ISSUE-9 pair: identical oversubscribed fused engines; the
+        # gc_on one adds the boundary victim walk + CTP prefetch. The
+        # delta measured is exactly the GC tax (relocations ride the
+        # same fused CondUpdate path decode uses), and the reclaim /
+        # write-amp counters prove the walk did real work
+        gc = GCConfig(watermark=GC_WATERMARK,
+                      pages_per_boundary=GC_BUDGET,
+                      block_pages=GC_BLOCK_PAGES,
+                      prefetch=True) if mode == "gc_on" else None
+        eng = ServeEngine(m, params, config=ServeConfig(
+            n_slots=N_SLOTS, max_ctx=max_ctx,
+            n_device_blocks=OVERSUB_DEV, n_host_blocks=OVERSUB_HOST,
+            macro_k=MACRO_K, swap_patience=4, gc=gc))
         eng.kvm.swap_pad = MAX_PAGES
         return eng
     if mode == "recovery":
@@ -192,14 +221,16 @@ def _build_engine(mode: str):
         # oversubscribed + channel-sharded so the journal carries every
         # record kind (swaps included); the caller attaches the journal
         # and the crash plan per sweep point
-        eng = ServeEngine(m, params, n_slots=N_SLOTS, max_ctx=max_ctx,
-                          n_device_blocks=OVERSUB_DEV,
-                          n_host_blocks=OVERSUB_HOST, macro_k=MACRO_K,
-                          swap_patience=4, channels=RECOVERY_CHANNELS)
+        eng = ServeEngine(m, params, config=ServeConfig(
+            n_slots=N_SLOTS, max_ctx=max_ctx,
+            n_device_blocks=OVERSUB_DEV, n_host_blocks=OVERSUB_HOST,
+            macro_k=MACRO_K, swap_patience=4,
+            channels=RECOVERY_CHANNELS))
         eng.kvm.swap_pad = MAX_PAGES
         return eng
-    eng = ServeEngine(m, params, n_slots=N_SLOTS, max_ctx=max_ctx,
-                      macro_k=MACRO_K if mode == "fused_macro" else 0)
+    eng = ServeEngine(m, params, config=ServeConfig(
+        n_slots=N_SLOTS, max_ctx=max_ctx,
+        macro_k=MACRO_K if mode == "fused_macro" else 0))
     if pr2:
         eng.min_page_bucket = MAX_PAGES    # PR 2 had no page bucketing
     if mode == "rebuild_legacy":
@@ -521,6 +552,58 @@ def _run_faults(repeats: int):
     return tps, engines
 
 
+def _run_gc(repeats: int):
+    """ISSUE-9 measurement: the write-amplification axis of the GC
+    victim-eviction walk. Two identical oversubscribed fused engines
+    run interleaved completion rounds (same protocol as
+    ``_run_oversub``); the gc_on one adds the budgeted boundary walk
+    (watermark-triggered victim selection from the fused-path live
+    counts, relocations through the same single-probe CondUpdate
+    commit decode uses) plus the CTP map-segment prefetch. Delivered
+    tokens/sec gives the retention headline; the hit_stats
+    write-amplification fields (host_writes vs flash_programs) and
+    the reclaim counters prove the walk did real work. Acceptance:
+    gc_on retains >= 90% of gc_off throughput
+    (TARGETS['gc_retention']) while gc_moves/victims stay non-zero,
+    and the gc_off control never relocates a page."""
+    modes = ("gc_off", "gc_on")
+    engines = {}
+
+    def one_round(eng):
+        for i in range(N_SLOTS):
+            eng.submit(list(range(1 + i, 1 + i + OVERSUB_PROMPT)),
+                       max_new=OVERSUB_MAX_NEW)
+        done: dict = {}
+        eng.step(done)          # admissions + prefills + first step
+        g0 = eng.metrics["generated"]
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        assert not eng.active and not eng.queue, "round did not drain"
+        return (eng.metrics["generated"] - g0) / dt
+
+    for mode in modes:
+        eng = _build_engine(mode)
+        need = -(-(OVERSUB_PROMPT + OVERSUB_MAX_NEW) // 8)
+        eng.min_page_bucket = 1 << (need - 1).bit_length()
+        one_round(eng)                       # warm-up, unmeasured
+        engines[mode] = eng
+    tps = {mode: [] for mode in modes}
+    for rep in range(repeats):
+        order = list(modes)[rep % len(modes):] \
+            + list(modes)[:rep % len(modes)]
+        for mode in order:
+            tps[mode].append(one_round(engines[mode]))
+    on, off = engines["gc_on"], engines["gc_off"]
+    assert on.metrics["gc_moves"] > 0, \
+        "gc_on never relocated a live page (walk found no work)"
+    assert on.metrics["gc_victims"] > 0, \
+        "gc_on never reclaimed a victim block"
+    assert off.metrics["gc_moves"] == 0, \
+        "gc_off control relocated pages (GC not actually disabled)"
+    return tps, engines
+
+
 def _run_recovery():
     """ISSUE-7 measurement: bounded MTTR after a sudden power-off.
 
@@ -631,6 +714,9 @@ def main() -> None:
     # ISSUE-6 group: graceful degradation under faults (its own
     # interleaved completion rounds; delivered tokens/sec)
     fault_tps, fault_eng = _run_faults(repeats)
+    # ISSUE-9 group: GC walk on/off under the same oversubscription
+    # (its own interleaved completion rounds; delivered tokens/sec)
+    gc_tps, gc_eng = _run_gc(repeats)
     # ISSUE-7 group: crash -> recover MTTR across snapshot intervals
     recovery_sweep = _run_recovery()
     for name, r in recovery_sweep.items():
@@ -742,6 +828,21 @@ def main() -> None:
              f"tokens_per_sec={d['median']:.2f}"
              f"_min={d['min']:.2f}_iqr={d['iqr']:.2f}")
     emit("serve_decode_degraded_retention", 0.0, f"x{retention:.2f}")
+    # ISSUE-9 headline pair: GC retention (median of per-round
+    # delivered-throughput ratios) and the write-amplification axis
+    gc_retention = round(statistics.median(
+        x / y for x, y in zip(gc_tps["gc_on"], gc_tps["gc_off"])), 2)
+    gc_tokens = {m: _dispersion(w) for m, w in gc_tps.items()}
+    gc_stats = {m: eng.kvm.hit_stats() for m, eng in gc_eng.items()}
+    for mode, d in gc_tokens.items():
+        emit(f"serve_decode_{mode}_tokens", 1e6 / max(d["median"], 1e-9),
+             f"tokens_per_sec={d['median']:.2f}"
+             f"_min={d['min']:.2f}_iqr={d['iqr']:.2f}")
+    emit("serve_decode_gc_retention", 0.0, f"x{gc_retention:.2f}")
+    emit("serve_gc_write_amp", 0.0,
+         f"x{gc_stats['gc_on']['write_amp']:.3f}"
+         f"_moves={gc_stats['gc_on']['gc_moves']}"
+         f"_victims={sum(gc_stats['gc_on']['victims_ch'])}")
     for name, x in speedups.items():
         emit(f"serve_decode_speedup_{name}", 0.0, f"x{x:.2f}")
 
@@ -751,8 +852,12 @@ def main() -> None:
     # between runs, so a hard gate would be pure noise
     warnings = []
     for name, target in TARGETS.items():
-        got = retention if name == "degraded_retention" \
-            else speedups[name]
+        if name == "degraded_retention":
+            got = retention
+        elif name == "gc_retention":
+            got = gc_retention
+        else:
+            got = speedups[name]
         if got < target:
             warnings.append(f"speedup {name} x{got:.2f} "
                             f"below x{target:.2f} target")
@@ -841,6 +946,33 @@ def main() -> None:
                     "program_faults":
                         eng.kvm.hit_stats()["program_faults"],
                 } for mode, eng in fault_eng.items()
+            },
+        },
+        # ISSUE-9: the GC victim-eviction walk's write-amplification
+        # axis — host writes vs flash programs (fused-path commits +
+        # swap-ins + GC relocations), reclaim counters, and the CTP
+        # prefetch hit accounting; retention is the acceptance headline
+        "gc": {
+            "watermark": GC_WATERMARK,
+            "pages_per_boundary": GC_BUDGET,
+            "block_pages": GC_BLOCK_PAGES,
+            "retention_gc_on_vs_off": gc_retention,
+            "tokens_per_sec": {m: d["median"]
+                               for m, d in gc_tokens.items()},
+            "tokens_dispersion": gc_tokens,
+            "modes": {
+                mode: {
+                    "gc_walks": eng.metrics["gc_walks"],
+                    "gc_moves": eng.metrics["gc_moves"],
+                    "gc_victims": eng.metrics["gc_victims"],
+                    "host_writes": gc_stats[mode]["host_writes"],
+                    "flash_programs": gc_stats[mode]["flash_programs"],
+                    "write_amp": round(gc_stats[mode]["write_amp"], 4),
+                    "victims_per_channel":
+                        list(gc_stats[mode]["victims_ch"]),
+                    "prefetch_hits": gc_stats[mode]["prefetch_hits"],
+                    "prefetch_misses": gc_stats[mode]["prefetch_misses"],
+                } for mode, eng in gc_eng.items()
             },
         },
         # ISSUE-7: sudden-power-off recovery — MTTR per snapshot

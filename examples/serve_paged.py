@@ -1,7 +1,9 @@
 """Serve a small model with batched requests through the FMMU paged-KV
-engine: continuous batching, page-table translation per step, and a
+engine: continuous batching, page-table translation per step, a
 deliberately undersized device pool to show CondUpdate-guarded
-swap-out/swap-in preemption (the paper's GC path).
+swap-out/swap-in preemption, and the GC victim-eviction walk + CTP
+segment prefetch (the paper's GCM/CTP) reclaiming fragmented blocks
+at macro boundaries.
 
   PYTHONPATH=src python examples/serve_paged.py
 """
@@ -11,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch, smoke_config
 from repro.models import Runtime, build_model
+from repro.serving.config import GCConfig, ServeConfig
 from repro.serving.engine import ServeEngine
 
 
@@ -23,9 +26,16 @@ def main():
     # undersized device pool + host overflow tier -> preemption happens;
     # macro_k=4 runs fused 4-token macro-steps whenever the pool can
     # provably cover them and falls back to single-step mode (which owns
-    # the preempt/swap machinery) when it can't — both paths exercised
-    eng = ServeEngine(model, params, n_slots=3, max_ctx=96,
-                      n_device_blocks=14, n_host_blocks=24, macro_k=4)
+    # the preempt/swap machinery) when it can't — both paths exercised.
+    # gc= arms the boundary victim walk: when a channel's free count
+    # drops under the watermark, the engine relocates live pages out of
+    # the most-dead erase block (CondUpdate, stale lanes skipped) and
+    # reclaims it; prefetch=True warms CMT segments for upcoming growth
+    eng = ServeEngine(model, params, config=ServeConfig(
+        n_slots=3, max_ctx=96, n_device_blocks=14, n_host_blocks=24,
+        macro_k=4,
+        gc=GCConfig(watermark=8, pages_per_boundary=4, block_pages=2,
+                    prefetch=True)))
     rng = np.random.default_rng(0)
     rids = [eng.submit(rng.integers(2, cfg.vocab_size,
                                     int(rng.integers(20, 60))).tolist(),

@@ -47,11 +47,12 @@ plays the role of flash-resident translation pages + GTD.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.counters import COUNTERS
 from repro.core.fmmu.types import (COND_UPDATE, FMMUGeometry, HOST_BASE,
                                    LOOKUP, NIL, UPDATE)
 from repro.kernels import ops
@@ -61,9 +62,11 @@ BIG = jnp.iinfo(jnp.int32).max
 
 # Trace-time instrumentation: bumped once per CMT probe / insert pass
 # *traced* into a graph (not per execution). tests/test_fmmu_batch.py
-# asserts the fused path traces exactly one of each per batch.
-PROBE_TRACES = [0]
-INSERT_TRACES = [0]
+# asserts the fused path traces exactly one of each per batch. The
+# names alias registry cells (same list objects), so both the legacy
+# `PROBE_TRACES[0]` idiom and `COUNTERS.snapshot()` observe them.
+PROBE_TRACES = COUNTERS.cell("fmmu.probe_traces")
+INSERT_TRACES = COUNTERS.cell("fmmu.insert_traces")
 
 
 class BatchFMMUState(NamedTuple):
@@ -278,7 +281,19 @@ class ServingMapState(NamedTuple):
     integrity check), and the on-disk OOB region's (dlpn, seq) owners
     are ordered by it — the newest mapping of a dlpn is the max-seq
     one, which is what the SPOR reverse-map scan reconstructs when the
-    journal tail is torn."""
+    journal tail is torn.
+
+    ``live`` is the OPTIONAL per-device-block live-page count lane (the
+    GC walk's input — the paper's GCM reads hardware-maintained
+    validity counts instead of scanning the map). ``None`` by default:
+    None is an empty pytree node, so a state without live tracking
+    traces to the exact pre-GC graph (jaxpr-identical, asserted in
+    tests/test_gc.py). When enabled it is a [n_device_blocks] int32
+    vector maintained by ``translate_serving`` inside the SAME fused
+    commit that scatters the table — two scatter-adds keyed on the
+    core's ``write`` mask, no extra probe and no extra sort. Host-tier
+    blocks are never counted (only the device tier is the flash
+    analogue the GC walks)."""
     fmmu: BatchFMMUState
     table: jnp.ndarray
     free_stack: jnp.ndarray   # [n_device] int32 free device block ids
@@ -288,11 +303,12 @@ class ServingMapState(NamedTuple):
     oob: jnp.ndarray          # [] bool, sticky OutOfBlocks flag
     swap_pending: jnp.ndarray  # [n_lanes] bool host-tier residency lane
     commit_seq: jnp.ndarray = jnp.asarray(0, I)  # [] int32 commit lanes
+    live: Optional[jnp.ndarray] = None  # [n_device] int32 live pages
 
 
 def init_serving_state(g: FMMUGeometry, n_device_blocks: int = 0,
-                       n_host_blocks: int = 0,
-                       n_lanes: int = 0) -> ServingMapState:
+                       n_host_blocks: int = 0, n_lanes: int = 0,
+                       track_live: bool = False) -> ServingMapState:
     # stack mirrors BlockPool.__init__: list(range(n))[::-1], so index i
     # holds block n-1-i and the first pop yields block 0
     return ServingMapState(
@@ -305,7 +321,8 @@ def init_serving_state(g: FMMUGeometry, n_device_blocks: int = 0,
         host_n=jnp.asarray(n_host_blocks, I),
         oob=jnp.asarray(False),
         swap_pending=jnp.zeros((n_lanes,), bool),
-        commit_seq=jnp.asarray(0, I))
+        commit_seq=jnp.asarray(0, I),
+        live=(jnp.zeros((n_device_blocks,), I) if track_live else None))
 
 
 def oob_vec(ms: ServingMapState) -> jnp.ndarray:
@@ -314,6 +331,17 @@ def oob_vec(ms: ServingMapState) -> jnp.ndarray:
     flag-read layout, so every boundary observer (engine, tests,
     KVPageManager.observe_exhaustion) indexes channels identically."""
     return jnp.atleast_1d(ms.oob)
+
+
+def live_vec(ms: ServingMapState) -> jnp.ndarray:
+    """Global per-device-block live-page counts as an [n_device] vector
+    — the ONE home of the cross-channel combine for the live lane. A
+    channel-stacked state carries [C, n_device] per-shard counts over
+    GLOBAL block ids (each shard only touches blocks it owns), so the
+    global view is the plain sum over the channel axis. Requires live
+    tracking (``ms.live is not None``)."""
+    assert ms.live is not None, "live tracking is off for this state"
+    return ms.live if ms.live.ndim == 1 else ms.live.sum(0)
 
 
 def commit_seq_vec(ms: ServingMapState) -> jnp.ndarray:
@@ -426,17 +454,31 @@ def translate_serving(g: FMMUGeometry, ms: ServingMapState, opcodes,
     and no sort). Exactly the lanes whose write committed to the map
     (the core's own `write` mask: UPDATE, and COND_UPDATE whose
     old_dppn guard passed) scatter their new dppn into ``ms.table``;
-    all other lanes leave it untouched."""
+    all other lanes leave it untouched.
+
+    When the optional ``live`` lane is enabled, the SAME `write` mask
+    maintains per-device-block live-page counts (the GC walk's input):
+    a committed lane decrements the block it unmapped (``out``, the
+    pre-batch mapping) and increments the block it mapped (``dppns``),
+    each gated to the device tier — host blocks and NIL never count.
+    Two scatter-adds, no probe, no sort; live=None traces nothing."""
     st, out, ok, write = _translate_core(g, ms.fmmu, opcodes, dlpns,
                                          dppns, old_dppns, impl=impl)
     safe = jnp.where(write, dlpns, ms.table.shape[0])
     table = ms.table.at[safe].set(dppns.astype(I), mode="drop")
+    live = ms.live
+    if live is not None:
+        nb = live.shape[0]
+        dec = write & (out >= 0) & (out < nb)
+        inc = write & (dppns >= 0) & (dppns < nb)
+        live = (live.at[jnp.where(dec, out, nb)].add(-1, mode="drop")
+                    .at[jnp.where(inc, dppns, nb)].add(1, mode="drop"))
     # per-commit sequence lane (ISSUE 7): count committed write LANES,
     # not calls — K single steps, one macro scan, or one sharded
     # pre-commit of the same growth advance the lane identically, so
     # the host journal's cumulative record count can be checked against
     # it at any snapshot boundary regardless of batching
-    return ms._replace(fmmu=st, table=table,
+    return ms._replace(fmmu=st, table=table, live=live,
                        commit_seq=ms.commit_seq + write.sum().astype(I)
                        ), out, ok
 
@@ -491,12 +533,20 @@ def channel_stack(n_blocks: int, n_channels: int, c: int, cap: int,
 
 def init_sharded_state(g: FMMUGeometry, n_channels: int,
                        n_device_blocks: int = 0, n_host_blocks: int = 0,
-                       n_lanes: int = 0) -> ServingMapState:
+                       n_lanes: int = 0,
+                       track_live: bool = False) -> ServingMapState:
     """Stack C per-channel ServingMapStates into one pytree with a
     leading channel axis. `g` is the PER-CHANNEL geometry (its dlpn
     space covers ceil(n_dlpns / C) local pages). Device/host blocks are
     striped by block id mod C; stack capacities are channel-uniform
-    (ceil(n / C)) so the leaves stack rectangularly."""
+    (ceil(n / C)) so the leaves stack rectangularly.
+
+    ``track_live`` gives every channel a FULL-size [n_device_blocks]
+    live lane indexed by GLOBAL block id (dppns stay global even where
+    dlpns are channel-local): shard c only ever touches blocks owned by
+    channel c, so the global count is the plain sum over the channel
+    axis — no reindexing, and the combine stays a sum like everything
+    else in the sharded pipeline."""
     import numpy as np
     C = n_channels
     dev_cap = -(-n_device_blocks // C) if n_device_blocks else 0
@@ -517,7 +567,9 @@ def init_sharded_state(g: FMMUGeometry, n_channels: int,
         free_stack=jnp.asarray(np.stack(dev_stacks), I),
         free_n=jnp.asarray(dev_ns, I),
         host_stack=jnp.asarray(np.stack(host_stacks), I),
-        host_n=jnp.asarray(host_ns, I))
+        host_n=jnp.asarray(host_ns, I),
+        live=(jnp.zeros((C, n_device_blocks), I) if track_live
+              else None))
 
 
 def _sharded_translate_body(g: FMMUGeometry, C: int, c, ms_c, opcodes,

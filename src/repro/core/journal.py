@@ -13,7 +13,8 @@ at macro boundaries, OOB scan as torn-tail fallback"):
   per *host commit point*: exactly the points the ISSUE-6 fault plane
   already intercepts (``KVPageManager.new_seq`` / ``extend_seqs`` /
   ``precommit_growth`` / ``reconcile_macro`` / ``free_seq`` / ``_swap``
-  / ``retire_bad_blocks``) plus the engine's request-lifecycle events
+  / ``retire_bad_blocks`` / ``gc_collect``) plus the engine's
+  request-lifecycle events
   (submit / admit / finish / quarantine). Journaling is pure host-side
   file I/O behind an ``if journal is not None`` guard — it never enters
   a traced graph, so the journaling-disabled path is jaxpr-identical by
@@ -91,12 +92,13 @@ SUBMIT = 8       # engine: request enqueued (rid, tokens, max_new)
 ADMIT = 9        # engine: request admitted to a slot (rid, slot)
 FINISH = 10      # engine: request completed (rid, out)
 QUAR = 11        # engine: request quarantined + front-requeued (rid)
+GC = 12          # map: GC victim-walk relocation (moves, returned)
 
 _KIND_NAMES = {OOB: "oob", NEW_SEQ: "new_seq", EXTEND: "extend",
                PRECOMMIT: "precommit", RECONCILE: "reconcile",
                FREE: "free", SWAP: "swap", RETIRE: "retire",
                SUBMIT: "submit", ADMIT: "admit", FINISH: "finish",
-               QUAR: "quarantine"}
+               QUAR: "quarantine", GC: "gc"}
 
 _JOURNAL = "journal.log"
 _OOBLOG = "oob.log"
@@ -470,6 +472,31 @@ def _apply(sh: Recovered, kind: int, p: dict):
         sh.stats["retired"] += len(p["retired"])
         for s, pages in p["pages"].items():
             sh.seq_pages[int(s)] = list(pages)
+    elif kind == GC:
+        # GC victim-walk relocation (ISSUE 9): the live run popped ALL
+        # destinations first (pool.alloc_gc per channel), dispatched
+        # the batched CondUpdate, then freed the applied lanes' old
+        # frames followed by the stale lanes' unused destinations
+        # ("returned"). Takes all precede gives here too, so the peak
+        # sample and the surviving free-list order match the live pool
+        # bit-for-bit (removal is by value; appends are in the live
+        # free() order: applied olds, then returned news).
+        for d, old, new in p["moves"]:
+            _take(sh, new, host=False)
+        for b in p.get("returned", []):
+            _take(sh, b, host=False)
+        _peak(sh)
+        sh.stats["allocs"] += len(p["moves"]) + len(p.get("returned", []))
+        for d, old, new in p["moves"]:
+            sh.seq_pages[d // mp][d % mp] = new
+        freed = 0
+        for d, old, new in p["moves"]:
+            _give(sh, old)
+            freed += int(old not in sh.retired)
+        for b in p.get("returned", []):
+            _give(sh, b)
+            freed += int(b not in sh.retired)
+        sh.stats["frees"] += freed
     elif kind == SUBMIT:
         sh.submits[p["rid"]] = (list(p["tokens"]), p["max_new"])
         sh.queue.append(p["rid"])

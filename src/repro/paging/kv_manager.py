@@ -63,6 +63,7 @@ allocator + K-step fused decode macro-steps").
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Dict, List, Optional, Tuple
 
@@ -72,9 +73,10 @@ import numpy as np
 
 from repro.core import faults as flt
 from repro.core import journal as jl
+from repro.core.counters import COUNTERS
 from repro.core.fmmu import batch as fb
-from repro.core.fmmu.types import (COND_UPDATE, FMMUGeometry, NIL,
-                                   SWAP_IN, SWAP_OUT, UPDATE)
+from repro.core.fmmu.types import (COND_UPDATE, FMMUGeometry, LOOKUP,
+                                   NIL, SWAP_IN, SWAP_OUT, UPDATE)
 from repro.paging.pool import (HOST_BASE, BlockPool, OutOfBlocks,
                                PoolExhausted)
 
@@ -82,14 +84,64 @@ from repro.paging.pool import (HOST_BASE, BlockPool, OutOfBlocks,
 # bumped once per *invocation*, so tests can assert that a steady-state
 # decode step performs zero full-map retranslations and at most one
 # fused map call — and that a steady-state MACRO step performs zero of
-# either plus zero allocator re-syncs.
-XLATE_CALLS = [0]
-FULL_TABLE_CALLS = [0]
-ALLOC_SYNCS = [0]
+# either plus zero allocator re-syncs. The names alias registry cells
+# (core/counters.py): same list objects, also visible to
+# COUNTERS.snapshot()/delta().
+XLATE_CALLS = COUNTERS.cell("kvm.xlate_calls")
+FULL_TABLE_CALLS = COUNTERS.cell("kvm.full_table_calls")
+ALLOC_SYNCS = COUNTERS.cell("kvm.alloc_syncs")
 
 def _ji(xs) -> List[int]:
     """Journal payloads are JSON: plain ints, not numpy scalars."""
     return [int(x) for x in xs]
+
+
+@dataclasses.dataclass
+class MapStats:
+    """Typed ``KVPageManager.hit_stats()`` result (ISSUE 9): every
+    historical dict key is a field, ``__getitem__`` keeps the legacy
+    ``stats["hits"]`` call sites working verbatim, and ``as_dict()``
+    feeds the bench schema. New GC/CTP axes: ``gc_moves`` (live pages
+    relocated by the victim walk), ``victims_ch`` (erase blocks fully
+    reclaimed, per channel), ``prefetch_hits``/``prefetch_misses`` (CTP
+    probes that found the map segment already cached vs. pulled it —
+    a prefetch MISS is the useful case), and the write-amplification
+    axis: ``host_writes`` (fresh page programs commanded by the host:
+    admission, decode growth, macro pre-commits), ``flash_programs``
+    (host writes + swap-ins + GC relocations — every device-tier
+    program), ``write_amp`` = flash_programs / host_writes (>= 1.0
+    whenever anything was written)."""
+    hits: int = 0
+    misses: int = 0
+    fills: int = 0
+    updates: int = 0
+    swaps_out: int = 0
+    swaps_in: int = 0
+    host_resident_slots: int = 0
+    retired_blocks: int = 0
+    retired_ch: List[int] = dataclasses.field(default_factory=list)
+    pool_exhausted: List[int] = dataclasses.field(default_factory=list)
+    swap_faults: int = 0
+    program_faults: int = 0
+    alloc_faults: int = 0
+    gc_moves: int = 0
+    victims_ch: List[int] = dataclasses.field(default_factory=list)
+    prefetch_hits: int = 0
+    prefetch_misses: int = 0
+    host_writes: int = 0
+    flash_programs: int = 0
+    write_amp: float = 1.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __getitem__(self, key: str):
+        if not any(f.name == key for f in dataclasses.fields(self)):
+            raise KeyError(key)
+        return getattr(self, key)
+
+    def __contains__(self, key: str) -> bool:
+        return any(f.name == key for f in dataclasses.fields(self))
 
 
 # bad-block re-drive bound: a retirement chain retires at most this
@@ -132,12 +184,19 @@ class KVPageManager:
     def __init__(self, n_slots: int, max_pages: int, n_device_blocks: int,
                  n_host_blocks: int = 0, channels: int = 1,
                  use_mesh: Optional[bool] = None,
-                 faults: Optional["flt.FaultPlane"] = None):
+                 faults: Optional["flt.FaultPlane"] = None,
+                 track_live: bool = False):
         self.n_slots = n_slots
         self.max_pages = max_pages
         self._n_dev = n_device_blocks
         self._n_host = n_host_blocks
         self.channels = C = int(channels)
+        # GC live-page tracking (ISSUE 9): when enabled the map state
+        # carries the optional ``live`` lane (maintained inside every
+        # fused commit — core/fmmu/batch.translate_serving). Off by
+        # default: the lane is a None pytree leaf and every traced
+        # graph stays jaxpr-identical to the pre-GC path.
+        self.track_live = bool(track_live)
         self.geom = _geometry(n_slots, max_pages, C)
         self.fns = fb.make_jitted(self.geom)
         # fault-injection plane (ISSUE 6, core/faults.py): consulted at
@@ -225,6 +284,14 @@ class KVPageManager:
         # recompiles — latency-sensitive runs and benchmarks pin it
         self._swap_jits: Dict[Tuple[int, int, int], object] = {}
         self.swap_pad: Optional[int] = None
+        # GC / CTP / write-amplification accounting (ISSUE 9): plain
+        # host counters surfaced through hit_stats() as MapStats.
+        self.gc_moves = 0
+        self.victims_ch = [0] * C
+        self.prefetch_hits = 0
+        self.prefetch_misses = 0
+        self._pf_seen: set = set()
+        self.host_writes = 0
 
     # ----------------------------------------------------------- helpers
     def _fresh_state(self):
@@ -234,14 +301,15 @@ class KVPageManager:
         if self.channels > 1:
             st = fb.init_sharded_state(
                 self.geom, self.channels, self._n_dev, self._n_host,
-                n_lanes=self.n_slots)
+                n_lanes=self.n_slots, track_live=self.track_live)
             if self.mesh is not None:
                 from jax.sharding import NamedSharding, PartitionSpec as P
                 st = jax.device_put(
                     st, NamedSharding(self.mesh, P("channel")))
             return st
         return fb.init_serving_state(self.geom, self._n_dev,
-                                     self._n_host, n_lanes=self.n_slots)
+                                     self._n_host, n_lanes=self.n_slots,
+                                     track_live=self.track_live)
 
     def reset(self, faults: Optional["flt.FaultPlane"] = None):
         """Reinitialize map state, pool and bookkeeping while KEEPING
@@ -259,6 +327,12 @@ class KVPageManager:
         self.channel_lanes[:] = 0
         self.faults = faults
         self.journal = None    # the engine re-attaches after recovery
+        self.gc_moves = 0
+        self.victims_ch = [0] * self.channels
+        self.prefetch_hits = 0
+        self.prefetch_misses = 0
+        self._pf_seen = set()
+        self.host_writes = 0
 
     def _dlpns(self, slot: int, pages: range) -> np.ndarray:
         return np.asarray([slot * self.max_pages + p for p in pages],
@@ -335,6 +409,7 @@ class KVPageManager:
         dl = self._dlpns(slot, range(n_pages))
         blocks = self._alloc_blocks(dl)
         self._alloc_dirty = True
+        self.host_writes += len(blocks)
         self._xlate(UPDATE, dl, blocks)
         self.seq_pages[slot] = list(blocks)
         if self.journal is not None:
@@ -366,6 +441,7 @@ class KVPageManager:
                       for p in range(have, have + n))
         blocks = self._alloc_blocks(dl)
         self._alloc_dirty = True
+        self.host_writes += len(blocks)
         got: Dict[int, List[int]] = {}
         i = 0
         for slot, n in wants.items():
@@ -512,6 +588,7 @@ class KVPageManager:
         if not grow_seq:
             return got
         blocks = self.pool.alloc(len(grow_seq))
+        self.host_writes += len(blocks)
         dl: List[int] = []
         for slot, b in zip(grow_seq, blocks):
             self.seq_pages[slot].append(b)
@@ -563,6 +640,7 @@ class KVPageManager:
         assert len(dl) == len(grow_seq)
         blocks = self._alloc_blocks(dl)
         self._alloc_dirty = True
+        self.host_writes += len(blocks)
         counts: Dict[int, int] = {}
         for slot, b in zip(grow_seq, blocks):
             self.seq_pages[slot].append(b)
@@ -658,8 +736,8 @@ class KVPageManager:
             if pools is None:
                 self._xlate(COND_UPDATE, dl, news, olds)
             else:
-                pools = self._retire_move(dl, news, olds, pools,
-                                          block_axis)
+                pools, _ = self._retire_move(dl, news, olds, pools,
+                                             block_axis)
             for d, o, n in done:
                 pages = self.seq_pages[d // self.max_pages]
                 pages[pages.index(o)] = n
@@ -704,9 +782,13 @@ class KVPageManager:
         return fn
 
     def _retire_move(self, dl, news, olds, pools, block_axis):
-        """Dispatch one fused retirement relocation (lanes padded to
+        """Dispatch one fused CondUpdate relocation (lanes padded to
         the next power of two, exactly like ``_swap``). Device-tier
-        rows are the block ids themselves."""
+        rows are the block ids themselves. Shared by bad-block
+        retirement and the GC victim walk (both are "just another
+        relocation"). Returns (pools, ok[:n]) — the guard-mask
+        readback, so GC can skip lanes whose mapping went stale
+        mid-walk (the page died; its relocation must not apply)."""
         n = len(dl)
         cap = 1 << (n - 1).bit_length()
         pad = cap - n
@@ -727,7 +809,7 @@ class KVPageManager:
         self.state, pools, ok = fn(
             self.state, list(pools), arr(dl, -1), arr(news, 0),
             arr(olds, 0), arr(olds, olds[0]), arr(news, news[0]))
-        return pools
+        return pools, np.asarray(ok)[:n]
 
     def observe_exhaustion(self, flags=None) -> np.ndarray:
         """Fold the sticky in-graph OutOfBlocks flag lane into the
@@ -749,6 +831,194 @@ class KVPageManager:
                 self.pool.note_exhausted(c % self.channels)
                 self._alloc_dirty = True
         return flags
+
+    # ------------------------------------------------- GC walk (ISSUE 9)
+    def live_counts(self) -> np.ndarray:
+        """Host view of the device-maintained per-block live-page
+        counts ([n_device] int; channel shards summed). ONE readback
+        per GC walk — the counts are maintained by the fused commits
+        themselves, so the walk never probes or scans the map."""
+        assert self.track_live and self.state.live is not None, \
+            "GC needs track_live=True (the optional live lane)"
+        return np.asarray(jax.device_get(fb.live_vec(self.state)))
+
+    def _pick_victim(self, c: int, lv: np.ndarray,
+                     block_pages: int) -> Optional[List[int]]:
+        """The channel's GC victim: among its full erase blocks
+        (pool.erase_blocks grouping), the FRAGMENTED one — some live
+        pages, some dead — with the fewest live pages (ties to the
+        lowest id). Blocks touching retirement never recycle; fully
+        dead blocks are already reclaimed frame-by-frame; fully live
+        blocks have nothing to gain. Returns the victim's frames or
+        None."""
+        best = None
+        for frames in self.pool.erase_blocks(c, block_pages):
+            if any(self.pool.is_retired(f) for f in frames):
+                continue
+            nlive = int(sum(int(lv[f]) for f in frames))
+            if nlive == 0 or nlive >= len(frames):
+                continue
+            if best is None or nlive < best[0]:
+                best = (nlive, frames)
+        return None if best is None else best[1]
+
+    def gc_collect(self, pools=None, block_axis: int = 0, *,
+                   block_pages: int, budget: int
+                   ) -> Tuple[Optional[List[jnp.ndarray]], int, int]:
+        """One budgeted GC victim-eviction walk (the paper's GCM):
+        per channel, pick the fragmented erase block with the fewest
+        live pages (from the fused-commit-maintained counts — no map
+        probe, no sort), relocate its live pages as ONE batched
+        CondUpdate through the single-probe fused path (+ KV row moves
+        when ``pools`` is given), and free the old frames — the whole
+        victim erase block then sits on the channel's free stack.
+
+        ``budget`` caps pages moved across the whole call (the
+        boundary budget: GC never blocks decode for more than a
+        bounded relocation batch); a victim that does not fit finishes
+        on later walks. Destinations come from the channel's own free
+        list, EXCLUDING the victim's frames (pool.alloc_gc) — net free
+        count is unchanged (the modeled erase granularity lives in the
+        grouping, not in the free list; DESIGN.md), but live data
+        defragments into whole-block holes.
+
+        Relocate-if-still-mapped: a lane whose CondUpdate guard fails
+        means the page died mid-walk — it is skipped and its unused
+        destination returns to the free list (``returned``). Applied
+        moves are journaled as a GC host commit (crash mid-walk
+        replays or drops them atomically). Returns
+        (pools, pages_moved, victims_reclaimed)."""
+        assert self.track_live, \
+            "GC needs track_live=True (the optional live lane)"
+        if budget <= 0:
+            return pools, 0, 0
+        lv = self.live_counts()
+        mp = self.max_pages
+        rev: Dict[int, int] = {}
+        for s, pages in self.seq_pages.items():
+            for i, b in enumerate(pages):
+                if not BlockPool.is_host(b):
+                    rev[b] = s * mp + i
+        plan = []   # (channel, n_live_in_victim, take frames, news)
+        left = int(budget)
+        for c in range(self.channels):
+            if left <= 0:
+                break
+            frames = self._pick_victim(c, lv, block_pages)
+            if frames is None:
+                continue
+            live_frames = [f for f in frames if int(lv[f]) > 0]
+            missing = [f for f in live_frames if f not in rev]
+            assert not missing, \
+                f"live counts name unmapped blocks {missing}"
+            take = live_frames[:left]
+            news = self.pool.alloc_gc(c, len(take), avoid=frames)
+            take = take[:len(news)]    # opportunistic: fewer is fine
+            if not take:
+                continue
+            left -= len(take)
+            plan.append((c, len(live_frames), take, news))
+        if not plan:
+            return pools, 0, 0
+        self._alloc_dirty = True
+        dl = [rev[f] for _, _, take, _ in plan for f in take]
+        olds = [f for _, _, take, _ in plan for f in take]
+        news = [b for _, _, _, ns in plan for b in ns]
+        if pools is None:
+            # map-only walk (test drivers): pad like every fused dispatch
+            n = len(dl)
+            cap = 1 << (n - 1).bit_length()
+            _, ok = self._xlate(COND_UPDATE, dl + [-1] * (cap - n),
+                                news + [0] * (cap - n),
+                                olds + [0] * (cap - n))
+            okh = np.asarray(ok)[:n]
+        else:
+            pools, okh = self._retire_move(dl, news, olds, pools,
+                                           block_axis)
+        moves: List[Tuple[int, int, int]] = []
+        returned: List[int] = []
+        reclaimed = 0
+        i = 0
+        for c, n_live, take, ns in plan:
+            whole = len(take) == n_live
+            for f, nb in zip(take, ns):
+                if bool(okh[i]):
+                    d = rev[f]
+                    self.seq_pages[d // mp][d % mp] = nb
+                    moves.append((d, f, nb))
+                else:
+                    returned.append(nb)    # page died mid-walk: skip
+                    whole = False
+                i += 1
+            if whole:
+                self.victims_ch[c] += 1
+                reclaimed += 1
+        # free applied olds then skipped news, in lane order — journal
+        # replay (core/journal._apply GC branch) mirrors this exactly
+        self.pool.free([o for _, o, _ in moves] + returned)
+        self.gc_moves += len(moves)
+        if self.journal is not None:
+            self.journal.append(
+                jl.GC,
+                {"moves": [[int(d), int(o), int(n)]
+                           for d, o, n in moves],
+                 "returned": _ji(returned), "lanes": len(moves)},
+                programmed=[(d, n) for d, _, n in moves])
+        return pools, len(moves), reclaimed
+
+    # ------------------------------------------ CTP prefetch (ISSUE 9)
+    def prefetch_segments(self, dlpns) -> int:
+        """The paper's CTP, from pre-commit knowledge: the macro
+        boundary already knows exactly which dlpns the next K-step
+        growth will touch, so pull the backing-table segments (CMT
+        cache blocks) they live in into the CMT AHEAD of the scan —
+        one fused LOOKUP over one representative dlpn per distinct
+        (channel, segment), padded like every dispatch. A LOOKUP of a
+        still-unmapped dlpn is exactly a segment fetch: the insert
+        pass caches the whole backing block, so the scan's UPDATE
+        commits hit instead of missing. Accounting: a prefetch MISS
+        did useful work (the segment was cold); a prefetch HIT was
+        redundant. Returns the number of segments probed.
+
+        The prefetcher tracks the scan FRONTIER: a segment is fetched
+        the first time growth crosses into it and never re-probed
+        (``_pf_seen``) — growth dlpns advance monotonically, so
+        without the filter every boundary would re-dispatch a LOOKUP
+        over the same already-cached segments, and that per-boundary
+        dispatch tax is what the >= 0.9x GC-retention acceptance
+        forbids. The set is a hint, not a guarantee: a CMT eviction
+        can re-cool a seen segment, which the scan then pays as an
+        ordinary miss."""
+        dl = np.unique(np.asarray(dlpns, np.int32))
+        dl = dl[dl >= 0]
+        if dl.size == 0:
+            return 0
+        ent = self.geom.cmt_entries
+        C = self.channels
+        reps: List[int] = []
+        for d in dl.tolist():
+            key = ((d % C, (d // C) // ent) if C > 1
+                   else (0, d // ent))
+            if key not in self._pf_seen:
+                self._pf_seen.add(key)
+                reps.append(int(d))
+        n = len(reps)
+        if n == 0:
+            return 0
+        cap = 1 << (n - 1).bit_length()
+        before = self._cmt_hit_miss()
+        self._xlate(LOOKUP, reps + [-1] * (cap - n),
+                    np.zeros(cap, np.int32))
+        after = self._cmt_hit_miss()
+        self.prefetch_hits += int(after[0] - before[0])
+        self.prefetch_misses += int(after[1] - before[1])
+        return n
+
+    def _cmt_hit_miss(self) -> Tuple[int, int]:
+        s = np.asarray(jax.device_get(self.state.fmmu.stats))
+        if self.channels > 1:
+            s = s.sum(axis=0)
+        return int(s[0]), int(s[1])
 
     # ----------------------------------------------------------- swapping
     def _swap_fn(self, cap: int, block_axis: int, n_pools: int):
@@ -954,25 +1224,40 @@ class KVPageManager:
         self.sync_allocator()    # stacks + residency lanes in one push
         return n
 
-    def hit_stats(self) -> dict:
+    def hit_stats(self) -> "MapStats":
         s = np.asarray(self.state.fmmu.stats)
         if self.channels > 1:
             s = s.sum(axis=0)
         fired = self.faults.counts() if self.faults is not None else {}
-        return {"hits": int(s[0]), "misses": int(s[1]),
-                "fills": int(s[2]), "updates": int(s[3]),
-                # swap/tier activity (ISSUE-4): the zero-fallback claim
-                # is asserted from counters, not inferred from timings
-                "swaps_out": self.pool.stats.swaps_out,
-                "swaps_in": self.pool.stats.swaps_in,
-                "host_resident_slots": sum(
-                    1 for c in self._host_pages.values() if c > 0),
-                # fault/recovery plane (ISSUE 6): retirement + typed
-                # per-channel exhaustion attribution + fired-fault
-                # counts (all zero without a plane)
-                "retired_blocks": self.pool.stats.retired,
-                "retired_ch": list(self.pool.retired_ch),
-                "pool_exhausted": list(self.pool.exhausted_ch),
-                "swap_faults": fired.get("swap", 0),
-                "program_faults": fired.get("program", 0),
-                "alloc_faults": fired.get("alloc", 0)}
+        # write-amplification axis (ISSUE 9): every flash program is a
+        # host-commanded write, a swap-in re-program, or a GC
+        # relocation. Retirement re-drives are deliberately excluded —
+        # they are fault recovery, not amplification policy.
+        flash = self.host_writes + self.pool.stats.swaps_in + self.gc_moves
+        return MapStats(
+            hits=int(s[0]), misses=int(s[1]),
+            fills=int(s[2]), updates=int(s[3]),
+            # swap/tier activity (ISSUE-4): the zero-fallback claim
+            # is asserted from counters, not inferred from timings
+            swaps_out=self.pool.stats.swaps_out,
+            swaps_in=self.pool.stats.swaps_in,
+            host_resident_slots=sum(
+                1 for c in self._host_pages.values() if c > 0),
+            # fault/recovery plane (ISSUE 6): retirement + typed
+            # per-channel exhaustion attribution + fired-fault
+            # counts (all zero without a plane)
+            retired_blocks=self.pool.stats.retired,
+            retired_ch=list(self.pool.retired_ch),
+            pool_exhausted=list(self.pool.exhausted_ch),
+            swap_faults=fired.get("swap", 0),
+            program_faults=fired.get("program", 0),
+            alloc_faults=fired.get("alloc", 0),
+            # GC/CTP plane (ISSUE 9)
+            gc_moves=self.gc_moves,
+            victims_ch=list(self.victims_ch),
+            prefetch_hits=self.prefetch_hits,
+            prefetch_misses=self.prefetch_misses,
+            host_writes=self.host_writes,
+            flash_programs=flash,
+            write_amp=(flash / self.host_writes
+                       if self.host_writes else 1.0))

@@ -169,6 +169,43 @@ class BlockPool:
         self._bump_alloc(len(out))
         return out
 
+    # ------------------------------------------------------ GC (ISSUE 9)
+    def erase_blocks(self, channel: int, block_pages: int) -> List[List[int]]:
+        """Enumerate the channel's full erase blocks as lists of global
+        device block ids (frames). The flash erase granularity is
+        modeled ON TOP of the page-granular pool: erase block e of
+        channel c groups the channel's tier-local frames [e*P, (e+1)*P)
+        — global ids {c + C*(e*P + j) : j < P} under the striping
+        (block b -> channel b mod C). A trailing partial group (when
+        the channel's frame count is not a multiple of P) is never a
+        GC candidate. One home for the grouping: the victim walk
+        (kv_manager) and the oracle tests must agree on it."""
+        C = self.n_channels
+        P = block_pages
+        assert P > 0
+        n_local = (self.n_device - channel + C - 1) // C
+        return [[channel + C * (e * P + j) for j in range(P)]
+                for e in range(n_local // P)]
+
+    def alloc_gc(self, channel: int, n: int, avoid=()) -> List[int]:
+        """Pop up to ``n`` relocation destinations from a channel's
+        device free list, skipping ``avoid`` (the victim erase block's
+        own free frames — relocating INTO the victim would leave it
+        unreclaimed). Scans from the list tail (top of stack, the same
+        end ``alloc`` pops) and removes the exact ids picked: removal
+        is by value, so journal replay's remove-by-id reproduces the
+        identical list content AND order. Returns fewer than ``n``
+        (possibly none) when the channel lacks eligible blocks — GC is
+        opportunistic and must never raise pool pressure."""
+        avoid = set(avoid)
+        ch = self._free_dev_ch[channel]
+        picked = [b for b in reversed(ch) if b not in avoid][:n]
+        for b in picked:
+            ch.remove(b)
+        if picked:
+            self._bump_alloc(len(picked))
+        return picked
+
     def free(self, blocks: List[int]):
         n = 0
         for b in blocks:

@@ -1,0 +1,125 @@
+"""Typed serving-engine configuration (ISSUE 9 API redesign).
+
+``ServeEngine`` accumulated fifteen keyword arguments across eight PRs
+— capacity, scheduling, sharding, fault policy, durability — and PR 9
+adds a GC plane on top. This module groups them into frozen dataclasses
+so a serving setup is a VALUE: comparable, printable, defaultable, and
+extendable without another positional-soup constructor.
+
+    ServeEngine(model, params, config=ServeConfig(
+        n_slots=8, max_ctx=256, macro_k=4,
+        gc=GCConfig(watermark=2, pages_per_boundary=8)))
+
+The legacy keyword style (``ServeEngine(model, params, n_slots=8, ...)``)
+still works through :meth:`ServeConfig.from_legacy` — the engine shim
+emits ONE ``DeprecationWarning`` per construction and the result is
+bit-equivalent to the config form (tests/test_gc.py asserts it).
+Frozen-ness is deliberate: engines snapshot their config at
+construction, so mutating a config after the fact must be impossible
+rather than silently ignored.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class GCConfig:
+    """The GC/CTP plane (this PR's tentpole). ``None`` on ServeConfig
+    disables it entirely — the map carries no live lane and every
+    traced graph is bit-identical to the pre-GC engine.
+
+    watermark: trigger a victim walk when any channel's free device
+        blocks drop below this.
+    pages_per_boundary: relocation budget per walk — GC never blocks
+        decode for more than this many batched CondUpdate lanes.
+    block_pages: pages per modeled erase block (the reclaim
+        granularity; BlockPool.erase_blocks groups frames by it).
+    prefetch: arm the CTP — prefetch the backing-table segments the
+        next scan's pre-committed growth will touch into the CMT.
+    """
+    watermark: int = 2
+    pages_per_boundary: int = 8
+    block_pages: int = 4
+    prefetch: bool = False
+
+    def __post_init__(self):
+        assert self.watermark >= 1, self.watermark
+        assert self.pages_per_boundary >= 1, self.pages_per_boundary
+        assert self.block_pages >= 1, self.block_pages
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPolicy:
+    """Swap-retry / watchdog policy (ISSUE 6). The fault PLANE (the
+    injected schedule) stays a runtime argument — it is stateful and
+    per-run — only the policy knobs live here.
+
+    watchdog_rounds: None = the legacy default (8 * swap_patience with
+        a plane attached, off without one)."""
+    max_swap_retries: int = 3
+    swap_backoff_cap: int = 8
+    watchdog_rounds: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class DurabilityConfig:
+    """Crash-consistency journaling (ISSUE 7): attach at ``journal_path``
+    (None = detached, the default) and snapshot every N-th boundary."""
+    journal_path: Optional[str] = None
+    snapshot_every: int = 8
+
+
+# legacy ServeEngine kwarg -> (sub-config attribute path) map; flat
+# kwargs not listed here live directly on ServeConfig
+_LEGACY_NESTED = {
+    "max_swap_retries": ("faults", "max_swap_retries"),
+    "swap_backoff_cap": ("faults", "swap_backoff_cap"),
+    "watchdog_rounds": ("faults", "watchdog_rounds"),
+    "journal_path": ("durability", "journal_path"),
+    "snapshot_every": ("durability", "snapshot_every"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Everything a ServeEngine needs besides the model, its params
+    and the (runtime, stateful) fault plane."""
+    n_slots: int
+    max_ctx: int
+    n_device_blocks: Optional[int] = None
+    n_host_blocks: int = 0
+    eos_id: int = -1
+    macro_k: int = 0
+    nonblocking_swap: bool = True
+    admit_tokens: Optional[int] = None
+    swap_patience: int = 4
+    channels: int = 1
+    use_mesh: Optional[bool] = None
+    faults: FaultPolicy = FaultPolicy()
+    durability: DurabilityConfig = DurabilityConfig()
+    gc: Optional[GCConfig] = None
+
+    @classmethod
+    def from_legacy(cls, **kw) -> "ServeConfig":
+        """Build a ServeConfig from the historical flat keyword set —
+        the engine's deprecation shim. Unknown names raise TypeError
+        exactly like the old constructor would have."""
+        nested: dict = {}
+        flat: dict = {}
+        for k, v in kw.items():
+            if k in _LEGACY_NESTED:
+                sub, attr = _LEGACY_NESTED[k]
+                nested.setdefault(sub, {})[attr] = v
+            elif k in {f.name for f in dataclasses.fields(cls)}:
+                flat[k] = v
+            else:
+                raise TypeError(
+                    f"ServeEngine got an unexpected keyword argument "
+                    f"{k!r}")
+        if "faults" in nested:
+            flat["faults"] = FaultPolicy(**nested["faults"])
+        if "durability" in nested:
+            flat["durability"] = DurabilityConfig(**nested["durability"])
+        return cls(**flat)

@@ -82,6 +82,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
@@ -91,6 +92,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import journal as jl
+from repro.core.counters import COUNTERS
 from repro.core.faults import FaultPlane, SwapFault
 from repro.core.fmmu import batch as fb
 from repro.core.fmmu.types import NIL
@@ -99,13 +101,17 @@ from repro.models.common import Runtime
 from repro.models.model import Model, _src_len
 from repro.paging.kv_manager import KVPageManager
 from repro.paging.pool import OutOfBlocks
+from repro.serving.config import (DurabilityConfig, FaultPolicy,
+                                  GCConfig, ServeConfig)
 
 # Host-cost counters (the XLATE_CALLS pattern): one MACRO_DISPATCHES
 # bump per macro-step jit call, one HOST_SYNCS bump per blocking
 # device->host readback. tests/test_serving.py asserts steady-state
-# macro decode costs exactly one of each per K steps.
-MACRO_DISPATCHES = [0]
-HOST_SYNCS = [0]
+# macro decode costs exactly one of each per K steps. The names alias
+# registry cells (core/counters.py): same list objects, also visible
+# to COUNTERS.snapshot()/delta().
+MACRO_DISPATCHES = COUNTERS.cell("engine.macro_dispatches")
+HOST_SYNCS = COUNTERS.cell("engine.host_syncs")
 
 
 @dataclasses.dataclass
@@ -124,18 +130,44 @@ class Request:
 
 
 class ServeEngine:
-    def __init__(self, model: Model, params, *, n_slots: int,
-                 max_ctx: int, n_device_blocks: Optional[int] = None,
-                 n_host_blocks: int = 0, eos_id: int = -1,
-                 macro_k: int = 0, nonblocking_swap: bool = True,
-                 admit_tokens: Optional[int] = None,
-                 swap_patience: int = 4, channels: int = 1,
-                 use_mesh: Optional[bool] = None,
+    def __init__(self, model: Model, params, *,
+                 config: Optional[ServeConfig] = None,
                  fault_plane: Optional[FaultPlane] = None,
-                 max_swap_retries: int = 3, swap_backoff_cap: int = 8,
-                 watchdog_rounds: Optional[int] = None,
-                 journal_path: Optional[str] = None,
-                 snapshot_every: int = 8):
+                 **legacy):
+        # typed-config constructor (ISSUE 9 API redesign): the primary
+        # form is ServeEngine(model, params, config=ServeConfig(...));
+        # the historical flat keyword set still works through ONE
+        # deprecation shim and builds the identical config value
+        # (bit-equivalence unit-tested in tests/test_gc.py). The fault
+        # PLANE stays a runtime argument on both forms — it is a
+        # stateful schedule, not configuration.
+        if config is not None and legacy:
+            raise TypeError(
+                "pass config=ServeConfig(...) OR legacy keyword "
+                f"arguments, not both (got {sorted(legacy)})")
+        if config is None:
+            warnings.warn(
+                "keyword-style ServeEngine construction is deprecated; "
+                "pass config=ServeConfig(...)",
+                DeprecationWarning, stacklevel=2)
+            config = ServeConfig.from_legacy(**legacy)
+        self.config = config
+        n_slots = config.n_slots
+        max_ctx = config.max_ctx
+        n_device_blocks = config.n_device_blocks
+        n_host_blocks = config.n_host_blocks
+        eos_id = config.eos_id
+        macro_k = config.macro_k
+        nonblocking_swap = config.nonblocking_swap
+        admit_tokens = config.admit_tokens
+        swap_patience = config.swap_patience
+        channels = config.channels
+        use_mesh = config.use_mesh
+        max_swap_retries = config.faults.max_swap_retries
+        swap_backoff_cap = config.faults.swap_backoff_cap
+        watchdog_rounds = config.faults.watchdog_rounds
+        journal_path = config.durability.journal_path
+        snapshot_every = config.durability.snapshot_every
         self.m = model
         self.cfg = model.cfg
         self.rt = model.rt
@@ -161,10 +193,18 @@ class ServeEngine:
         # level (tests/test_sharded_map.py), so nothing is lost in
         # results. An explicit use_mesh=True is forwarded for setups
         # whose model is already mesh-sharded.
+        # the GC plane (ISSUE 9 tentpole): config.gc arms the map's
+        # live lane (per-block live-page counts maintained INSIDE the
+        # fused translate commits) and the boundary victim walk below.
+        # gc=None keeps live=None — an absent pytree leaf, so every
+        # traced graph is bit-identical to the pre-GC engine
+        # (jaxpr-identity asserted in tests/test_gc.py).
+        self.gc = config.gc
         self.kvm = KVPageManager(n_slots, self.max_pages, n_dev,
                                  n_host_blocks, channels=self.channels,
                                  use_mesh=bool(use_mesh),
-                                 faults=fault_plane)
+                                 faults=fault_plane,
+                                 track_live=self.gc is not None)
         src_len = _src_len(self.cfg, max_ctx)
         # +1 scratch block: unmapped table entries (inactive slots) write
         # their garbage KV there instead of corrupting block 0
@@ -264,7 +304,8 @@ class ServeEngine:
                         "swaps_in": 0, "chunked_prefills": 0,
                         "swap_faults": 0, "quarantines": 0,
                         "watchdog_quarantines": 0, "requeues": 0,
-                        "recoveries": 0}
+                        "recoveries": 0, "gc_walks": 0, "gc_moves": 0,
+                        "gc_victims": 0}
         # crash-consistency journal (ISSUE 7, core/journal.py): when
         # attached, every host commit point appends a sequence-numbered
         # record and every `snapshot_every`-th macro boundary writes a
@@ -495,6 +536,11 @@ class ServeEngine:
             if self._macro_on:
                 self.metrics["macro_fallbacks"] += 1
             self._decode_step(done)
+        # GC watermark policy (ISSUE 9 tentpole): when any channel's
+        # free device blocks fall below the watermark, run ONE budgeted
+        # victim walk at this boundary — never inside the decode path
+        if self.gc is not None:
+            self._gc_boundary()
         # macro-boundary snapshot cadence (ISSUE 7): every
         # snapshot_every-th scheduling round seals the journal with a
         # full atomic state snapshot, bounding replay length (MTTR)
@@ -770,6 +816,29 @@ class ServeEngine:
         ignores stall (it allocates against the real pool), so a
         brownout can never livelock the engine — it only slows it."""
         return self._stall_shrink(self.kvm.free_device_vec())
+
+    # ----------------------------------------- GC boundary walk (ISSUE 9)
+    def _gc_boundary(self):
+        """Watermark-triggered victim eviction (the paper's GCM): when
+        some channel's free device blocks drop below ``gc.watermark``,
+        run one budgeted walk — pick each pressured channel's
+        fragmented erase block with the fewest live pages (from the
+        counts the fused commits already maintain), relocate its live
+        pages as ONE batched CondUpdate + KV row move, and free the
+        whole victim. Budgeted (``gc.pages_per_boundary``) so GC can
+        never stall decode; journaled as a host commit so a crash
+        mid-walk recovers bit-identically."""
+        gc = self.gc
+        if bool((self.kvm.free_device_vec() >= gc.watermark).all()):
+            return
+        pools = [self.caches["pool_k"], self.caches["pool_v"]]
+        pools, moved, victims = self.kvm.gc_collect(
+            pools, block_axis=2, block_pages=gc.block_pages,
+            budget=gc.pages_per_boundary)
+        self.caches["pool_k"], self.caches["pool_v"] = pools
+        self.metrics["gc_walks"] += 1
+        self.metrics["gc_moves"] += moved
+        self.metrics["gc_victims"] += victims
 
     def _swap_schedule(self):
         """Boundary swap planner (DESIGN.md "Non-blocking host-tier
@@ -1371,6 +1440,16 @@ class ServeEngine:
         K = self.macro_k
         (tokens, alive, budget, npages, pend, fmask, ftok, emit,
          slot2req) = self._macro_lanes(residents, K)
+        # CTP (ISSUE 9): the boundary knows the next K-step growth
+        # exactly (the same mirror-protocol walk the scheduler and the
+        # reconcile replay run), so pull the backing-table segments
+        # those dlpns live in into the CMT AHEAD of the scan's
+        # in-graph UPDATE commits
+        if self.gc is not None and self.gc.prefetch and residents:
+            pgs, pdl, _ = self._growth_walk(lambda k: alive, npages,
+                                            self.ctx_lens)
+            if pgs.any():
+                self.kvm.prefetch_segments(pdl[pgs])
         src_valid = self._src_valid()
         # the `simple` specialization applies when no lane can finish
         # mid-scan: without EOS the retirement machinery is dead weight
@@ -1568,6 +1647,12 @@ class ServeEngine:
         grow_sched, dl_walk, npg = self._growth_walk(
             lambda k: alive, npages, self.ctx_lens)
         grow_seq = [int(s) for s in np.nonzero(grow_sched)[1]]
+        # CTP (ISSUE 9): warm the CMT with the backing segments the
+        # pre-commit's own UPDATE batch is about to touch — the walk's
+        # dl schedule IS the exact dlpn set, no prediction needed
+        if self.gc is not None and self.gc.prefetch \
+                and grow_sched.any():
+            self.kvm.prefetch_segments(dl_walk[grow_sched])
         try:
             self.kvm.precommit_growth(
                 grow_seq, dlpns=[int(d) for d in dl_walk[grow_sched]])

@@ -23,6 +23,7 @@ aggregate: schedules must actually crash, tear records mid-byte, and
 recover torn map commits through the OOB reverse-map scan.
 """
 import dataclasses
+import os
 import tempfile
 
 import jax
@@ -174,6 +175,99 @@ def test_chaos_crash_quick(channels):
         for k in agg:
             agg[k] += cov[k]
     assert agg["crashes"] > 0, "no schedule ever crashed (vacuous)"
+
+
+@pytest.mark.gc
+def test_crash_during_gc_walk_recovers_bit_identical():
+    """ISSUE 9: GC relocations are journaled host commits, so a power
+    cut landing ON the GC record itself must recover bit-identically.
+    The schedule is pinned: an uncrashed journaled GC-enabled run
+    locates its first 'gc' record, then a second run crashes exactly
+    there (make_plan crash_at) and recovers."""
+    from repro.core import journal as jl
+    from repro.serving.config import GCConfig, ServeConfig
+    model, params = _CACHE["model"] if "model" in _CACHE else (None,)*2
+    if model is None:
+        _engine(1)                       # populate the model cache
+        model, params = _CACHE["model"]
+    cfg = ServeConfig(
+        n_slots=4, max_ctx=64, n_device_blocks=12, n_host_blocks=24,
+        macro_k=4, swap_patience=2,
+        faults=FaultPolicy_watchdog16(),
+        gc=GCConfig(watermark=3, pages_per_boundary=8, block_pages=2,
+                    prefetch=True))
+    eng = ServeEngine(model, params, config=cfg)
+    # longer prompts than the sweep's: 4-page sequences over a
+    # 12-block pool churn the free lists enough to fragment erase
+    # blocks, which is what gives the victim walk real work
+    prompts = [list(range(1 + i, 20 + i)) for i in range(6)]
+
+    def drive(plane):
+        rids = [eng.submit(list(p), max_new=MAX_NEW) for p in prompts]
+        done = eng.run(max_steps=MAX_STEPS)
+        return rids, done
+
+    # fault-free oracle (no journal) — must actually run GC (vacuity)
+    eng.reset(None)
+    rids, done = drive(None)
+    ref = [done[r] for r in rids]
+    assert eng.metrics["gc_moves"] > 0, "workload never triggered GC"
+
+    # journaled uncrashed run: find the first gc record's append index
+    with tempfile.TemporaryDirectory() as d:
+        eng.reset(None)
+        eng.attach_journal(d, snapshot_every=4)
+        drive(None)
+        frames, _, _ = jl.read_frames(os.path.join(d, jl._JOURNAL))
+        gc_at = next(i for i, (_, k, _p) in enumerate(frames)
+                     if jl._KIND_NAMES.get(k) == "gc")
+        eng.reset(None)
+
+    # pinned crash exactly at that commit, torn or whole per the tear
+    # schedule; recover and drain — outputs bit-identical
+    plane = FaultPlane(make_plan(0, crash_at=gc_at, horizon=4096))
+    with tempfile.TemporaryDirectory() as d:
+        eng.reset(plane)
+        eng.attach_journal(d, snapshot_every=4)
+        rid_to_idx: dict = {}
+        final: dict = {}
+        to_submit = list(range(len(prompts)))
+        crashed_on: list = []
+        for _ in range(MAX_CRASHES):
+            try:
+                for i in to_submit:
+                    rid_to_idx[eng.submit(list(prompts[i]),
+                                          max_new=MAX_NEW)] = i
+                to_submit = []
+                done = eng.run(max_steps=MAX_STEPS)
+                break
+            except flt.Crash as e:
+                crashed_on.append(e.kind)
+                durable = eng.recover(d, fault_plane=plane)
+                present = set(durable) | {r.rid for r in eng.queue}
+                rid_to_idx = {r: i for r, i in rid_to_idx.items()
+                              if r in present}
+                for r, out in durable.items():
+                    if r in rid_to_idx:
+                        final[rid_to_idx[r]] = out
+                covered = set(rid_to_idx.values())
+                to_submit = [i for i in range(len(prompts))
+                             if i not in covered]
+        assert "gc" in crashed_on, crashed_on   # the cut hit the walk
+        for r, out in done.items():
+            if r in rid_to_idx:
+                final[rid_to_idx[r]] = out
+        final.update({rid_to_idx[r]: out
+                      for r, out in eng._finished.items()
+                      if r in rid_to_idx})
+        assert [final[i] for i in range(len(prompts))] == ref
+        assert eng.journal_lane_check()
+        eng.reset(None)
+
+
+def FaultPolicy_watchdog16():
+    from repro.serving.config import FaultPolicy
+    return FaultPolicy(watchdog_rounds=16)
 
 
 @pytest.mark.slow

@@ -1,0 +1,455 @@
+"""GC victim-eviction walk + CTP prefetch (ISSUE 9): live-count
+bit-identity against a numpy oracle under random churn, walk-vs-oracle
+victim selection with data-integrity checks, stale-skip (CondUpdate)
+semantics, budget enforcement, journal replay bit-identity, the
+gc-disabled jaxpr-identity guarantee, the typed-config shim, the
+counters registry, and MapStats typed access."""
+import dataclasses
+import random
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import journal as jl
+from repro.core.counters import COUNTERS, Counters
+from repro.core.fmmu import batch as B
+from repro.core.fmmu.types import NIL, UPDATE, small_geometry
+from repro.paging import kv_manager as KM
+from repro.paging.kv_manager import KVPageManager, MapStats
+from repro.serving.config import (DurabilityConfig, FaultPolicy,
+                                  GCConfig, ServeConfig)
+
+pytestmark = pytest.mark.gc
+
+CHANNELS = (1, 2, 4)
+
+
+def _kvm(C, n_dev=32, n_host=8, max_pages=8, track_live=True):
+    return KVPageManager(n_slots=6, max_pages=max_pages,
+                         n_device_blocks=n_dev, n_host_blocks=n_host,
+                         channels=C, track_live=track_live)
+
+
+def _oracle_live(kvm) -> np.ndarray:
+    """Per-block live counts recomputed from the host's seq_pages —
+    the ground truth the device lane must match bit-for-bit."""
+    lv = np.zeros(kvm.pool.n_device, np.int64)
+    for _, pages in kvm.seq_pages.items():
+        for b in pages:
+            if not kvm.pool.is_host(b):
+                lv[b] += 1
+    return lv
+
+
+# ---------------------------------------------------------------------
+# live-count lane: oracle bit-identity under random churn
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("C", CHANNELS)
+def test_live_counts_match_oracle_under_churn(C):
+    """Random new_seq / extend / free / swap churn: the device-side
+    live lane (maintained INSIDE the fused commits — no extra probe)
+    must equal the numpy oracle after every operation."""
+    kvm = _kvm(C)
+    rng = random.Random(100 + C)
+    width = kvm.pool.n_device + kvm.pool.n_host + 1
+    pools = [jnp.arange(width * 4.0).reshape(width, 4)]
+    for step in range(60):
+        op = rng.random()
+        free_slots = [s for s in range(kvm.n_slots)
+                      if s not in kvm.seq_pages]
+        if op < 0.35 and free_slots:
+            try:
+                kvm.new_seq(rng.choice(free_slots), rng.randint(1, 4))
+            except KM.OutOfBlocks:
+                pass
+        elif op < 0.6 and kvm.seq_pages:
+            s = rng.choice(list(kvm.seq_pages))
+            if kvm.is_resident(s) \
+                    and len(kvm.seq_pages[s]) < kvm.max_pages:
+                try:
+                    kvm.extend_seq(s, 1)
+                except KM.OutOfBlocks:
+                    pass
+        elif op < 0.75 and kvm.seq_pages:
+            kvm.free_seq(rng.choice(list(kvm.seq_pages)))
+        elif kvm.seq_pages:
+            s = rng.choice(list(kvm.seq_pages))
+            try:
+                if kvm.is_resident(s):
+                    pools, _ = kvm.swap_out(s, pools)
+                else:
+                    pools, _ = kvm.swap_in(s, pools)
+            except KM.OutOfBlocks:
+                pass
+        np.testing.assert_array_equal(kvm.live_counts(),
+                                      _oracle_live(kvm), str(step))
+
+
+# ---------------------------------------------------------------------
+# the walk itself: victim selection, relocation integrity, budget
+# ---------------------------------------------------------------------
+def _fragment(kvm, rng, rounds=12):
+    """Alloc/free churn that leaves fragmented erase blocks."""
+    for _ in range(rounds):
+        free_slots = [s for s in range(kvm.n_slots)
+                      if s not in kvm.seq_pages]
+        if free_slots and rng.random() < 0.7:
+            try:
+                kvm.new_seq(rng.choice(free_slots), rng.randint(2, 6))
+            except KM.OutOfBlocks:
+                pass
+        elif kvm.seq_pages:
+            kvm.free_seq(rng.choice(list(kvm.seq_pages)))
+
+
+@pytest.mark.parametrize("C", CHANNELS)
+def test_gc_walk_vs_oracle(C):
+    """The walk must pick, per channel, the fragmented full erase block
+    with the fewest live pages (numpy oracle over pool.erase_blocks +
+    the live counts), relocate exactly its live pages, leave the net
+    free count unchanged (defrag model), and keep every surviving
+    mapping readable through the block table."""
+    P = 4
+    for seed in range(3):
+        kvm = _kvm(C)
+        rng = random.Random(7 * seed + C)
+        _fragment(kvm, rng)
+        lv = kvm.live_counts()
+        want = {}
+        for c in range(C):
+            best = None
+            for frames in kvm.pool.erase_blocks(c, P):
+                n = int(sum(lv[f] for f in frames))
+                if 0 < n < len(frames) \
+                        and not any(kvm.pool.is_retired(f)
+                                    for f in frames):
+                    if best is None or n < best[0]:
+                        best = (n, frames)
+            if best:
+                want[c] = best
+        # GC is opportunistic: a channel relocates min(live, eligible
+        # destinations) pages, where destinations exclude the victim's
+        # own frames — model that in the oracle too
+        expect = {}
+        for c, (n, frames) in want.items():
+            elig = len([b for b in kvm.pool._free_dev_ch[c]
+                        if b not in frames])
+            if min(n, elig):
+                expect[c] = (min(n, elig), n, frames)
+        free0 = kvm.pool.free_device
+        mapping0 = {s: list(p) for s, p in kvm.seq_pages.items()}
+        _, moved, reclaimed = kvm.gc_collect(block_pages=P, budget=64)
+        assert moved == sum(m for m, _, _ in expect.values())
+        assert kvm.pool.free_device == free0          # defrag: net zero
+        # every relocated page: mapping changed, table follows, live ok
+        tab = np.asarray(kvm.block_tables())
+        for s, pages in kvm.seq_pages.items():
+            assert list(tab[s, :len(pages)]) == pages
+            assert len(pages) == len(mapping0[s])
+        np.testing.assert_array_equal(kvm.live_counts(),
+                                      _oracle_live(kvm))
+        # each fully-relocated victim's frames are ALL free now; a
+        # channel whose destinations ran short reclaims nothing yet
+        lv2 = kvm.live_counts()
+        full = {c for c, (m, n, _) in expect.items() if m == n}
+        for c in full:
+            assert all(lv2[f] == 0 for f in expect[c][2]), c
+        assert reclaimed == len(full)
+        assert kvm.victims_ch == [int(c in full) for c in range(C)]
+
+
+def test_gc_budget_respected():
+    """pages_per_boundary is a hard cap across the whole walk — a
+    victim that does not fit relocates partially and finishes later."""
+    kvm = _kvm(1)
+    rng = random.Random(3)
+    _fragment(kvm, rng)
+    lv = kvm.live_counts()
+    frag = [f for f in kvm.pool.erase_blocks(0, 4)
+            if 0 < sum(lv[x] for x in f) < 4]
+    assert frag, "churn did not fragment — fixture needs a new seed"
+    _, moved, reclaimed = kvm.gc_collect(block_pages=4, budget=1)
+    assert moved <= 1
+    _, moved0, _ = kvm.gc_collect(block_pages=4, budget=0)
+    assert moved0 == 0
+
+
+def test_gc_stale_mapping_skipped():
+    """Relocate-if-still-mapped: when the device map no longer points
+    at the block the host planned to move (the page died / was remapped
+    mid-walk), the CondUpdate lane must NOT commit and the unused
+    destination must return to the free list."""
+    kvm = _kvm(1, n_dev=16, n_host=0)
+    kvm.new_seq(0, 2)      # blocks 0,1 live
+    kvm.new_seq(1, 2)      # blocks 2,3 -> freed below
+    kvm.new_seq(2, 4)      # blocks 4..7
+    kvm.free_seq(1)        # erase block [0..3]: 2 live, 2 dead
+    lv = kvm.live_counts()
+    victim = next(f for f in kvm.pool.erase_blocks(0, 4)
+                  if 0 < sum(lv[x] for x in f) < 4)
+    live_frame = next(f for f in victim if lv[f] > 0)
+    # make the device mapping stale BEHIND the walk's back: remap the
+    # dlpn to another block via a raw fused UPDATE, then pin the
+    # walk's live-count readback to the PRE-remap snapshot — exactly
+    # the mid-walk race the CondUpdate guard arbitrates (the live lane
+    # itself is maintained by the remap commit, so without the pin the
+    # frame would simply drop out of the plan)
+    s, i = next((s, i) for s, p in kvm.seq_pages.items()
+                for i, b in enumerate(p) if b == live_frame)
+    dl = s * kvm.max_pages + i
+    kvm._xlate(UPDATE, [dl], [15])
+    kvm.live_counts = lambda: lv          # stale snapshot, white-box
+    free0 = kvm.pool.free_device
+    moves0 = kvm.gc_moves
+    _, moved, reclaimed = kvm.gc_collect(block_pages=4, budget=8)
+    # the stale lane was skipped: seq_pages untouched there, its
+    # unused destination went straight back (free list net unchanged),
+    # the victim was NOT counted reclaimed, and only the still-valid
+    # lanes moved
+    assert kvm.seq_pages[s][i] == live_frame
+    assert kvm.pool.free_device == free0
+    assert reclaimed == 0
+    assert kvm.gc_moves - moves0 == moved < sum(
+        1 for f in victim if lv[f] > 0)
+
+
+# ---------------------------------------------------------------------
+# crash consistency: a GC record replays bit-identically
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("C", CHANNELS)
+def test_gc_journal_replay_bit_identity(C):
+    def fresh():
+        return _kvm(C)
+    with tempfile.TemporaryDirectory() as d:
+        kvm = fresh()
+        j = jl.Journal(d)
+        kvm.journal = j
+        j.snapshot(kvm.snapshot_state())
+        rng = random.Random(C)
+        moved = 0
+        for _ in range(8):       # churn until a walk finds real work
+            _fragment(kvm, rng)
+            _, m, _ = kvm.gc_collect(block_pages=4, budget=8)
+            moved += m
+            if moved:
+                break
+        assert moved > 0, "fixture produced no GC work"
+        if 0 not in kvm.seq_pages:
+            kvm.new_seq(0, 2)                    # traffic after GC
+        rec = jl.replay(d)
+        k2 = fresh()
+        k2.restore_mapping(rec)
+        assert {s: list(p) for s, p in kvm.seq_pages.items()} == \
+               {s: list(p) for s, p in k2.seq_pages.items()}
+        assert kvm.pool.state_dict() == k2.pool.state_dict()
+        np.testing.assert_array_equal(np.asarray(kvm.block_tables()),
+                                      np.asarray(k2.block_tables()))
+        np.testing.assert_array_equal(kvm.live_counts(),
+                                      k2.live_counts())
+        j.close()
+
+
+# ---------------------------------------------------------------------
+# gc-off jaxpr identity: the live lane is an ABSENT pytree leaf
+# ---------------------------------------------------------------------
+def _prims(closed):
+    from collections import Counter
+    return Counter(e.primitive.name for j in _iter(closed.jaxpr)
+                   for e in j.eqns)
+
+
+def _iter(jaxpr):
+    yield jaxpr
+    for eq in jaxpr.eqns:
+        for v in eq.params.values():
+            vs = v if isinstance(v, (tuple, list)) else (v,)
+            for x in vs:
+                sub = getattr(x, "jaxpr", x)
+                if hasattr(sub, "eqns"):
+                    yield from _iter(sub)
+
+
+def test_gc_off_jaxpr_identical_and_on_adds_no_probe():
+    """track_live=False leaves live=None — an empty pytree node — so
+    the traced fused translate is IDENTICAL to the pre-GC graph (the
+    off path cannot regress). track_live=True adds only elementwise +
+    scatter-add ops: no extra sort (no second insert pass), no extra
+    probe (PROBE_TRACES/INSERT_TRACES still bump exactly once)."""
+    import functools
+    g = small_geometry()
+    dl = jnp.arange(8, dtype=jnp.int32)
+    dp = jnp.ones(8, jnp.int32)
+    old = jnp.zeros(8, jnp.int32)
+    kinds = jnp.array([0, 1, 2, 0, 1, 2, 0, 1], jnp.int32)
+    fn = functools.partial(B.translate_serving, g)
+    ms_off = B.init_serving_state(g, n_device_blocks=8,
+                                  track_live=False)
+    ms_on = B.init_serving_state(g, n_device_blocks=8, track_live=True)
+    assert ms_off.live is None and ms_on.live is not None
+    p0, i0 = B.PROBE_TRACES[0], B.INSERT_TRACES[0]
+    jx_off = jax.make_jaxpr(fn)(ms_off, kinds, dl, dp, old)
+    jx_on = jax.make_jaxpr(fn)(ms_on, kinds, dl, dp, old)
+    assert B.PROBE_TRACES[0] - p0 == 2      # once per trace
+    assert B.INSERT_TRACES[0] - i0 == 2
+    off, on = _prims(jx_off), _prims(jx_on)
+    # the off graph is a sub-multiset of the on graph: arming the lane
+    # only ADDS ops, and none of them is a sort or a gather/probe
+    assert not (off - on), (off - on)
+    extra = on - off
+    assert "sort" not in extra, extra
+    assert "gather" not in extra, extra
+
+
+def test_engine_gc_off_carries_no_live_lane():
+    """gc=None at the engine API must not arm the lane (the config is
+    the ONE switch): the manager's state carries live=None."""
+    kvm = _kvm(1, track_live=False)
+    assert kvm.state.live is None
+    st = kvm.hit_stats()
+    assert st.gc_moves == 0 and st.write_amp >= 1.0
+
+
+# ---------------------------------------------------------------------
+# typed config + deprecation shim
+# ---------------------------------------------------------------------
+def test_serve_config_from_legacy_equivalence():
+    """The legacy flat keyword set must build the EXACT config value
+    the typed form describes — field for field, nested blocks
+    included."""
+    got = ServeConfig.from_legacy(
+        n_slots=4, max_ctx=64, n_device_blocks=12, n_host_blocks=24,
+        macro_k=4, swap_patience=2, channels=2, eos_id=7,
+        nonblocking_swap=False, admit_tokens=32, use_mesh=True,
+        max_swap_retries=5, swap_backoff_cap=16, watchdog_rounds=9,
+        journal_path="/tmp/x", snapshot_every=3)
+    want = ServeConfig(
+        n_slots=4, max_ctx=64, n_device_blocks=12, n_host_blocks=24,
+        macro_k=4, swap_patience=2, channels=2, eos_id=7,
+        nonblocking_swap=False, admit_tokens=32, use_mesh=True,
+        faults=FaultPolicy(max_swap_retries=5, swap_backoff_cap=16,
+                           watchdog_rounds=9),
+        durability=DurabilityConfig(journal_path="/tmp/x",
+                                    snapshot_every=3))
+    assert got == want
+    assert dataclasses.asdict(got) == dataclasses.asdict(want)
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        ServeConfig.from_legacy(n_slots=1, max_ctx=8, bogus=1)
+
+
+def test_serve_config_frozen_and_validated():
+    cfg = ServeConfig(n_slots=2, max_ctx=16)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.n_slots = 3
+    with pytest.raises(AssertionError):
+        GCConfig(watermark=0)
+    assert cfg.gc is None and cfg.faults == FaultPolicy()
+
+
+def test_engine_legacy_shim_warns_once_and_matches_config():
+    """ServeEngine(model, params, <flat kwargs>) emits exactly ONE
+    DeprecationWarning and builds the same config value as the typed
+    constructor; mixing both forms is a TypeError."""
+    import warnings
+    from repro.configs import get_arch, smoke_config
+    from repro.models import Runtime, build_model
+    from repro.serving.engine import ServeEngine
+    rt = Runtime(compute_dtype=jnp.float32, param_dtype=jnp.float32,
+                 remat="none", page_size=8, capacity_factor=100.0)
+    cfg = smoke_config(get_arch("llama3.2-1b"))
+    m = build_model(cfg, rt)
+    params = m.init(jax.random.key(0))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        e1 = ServeEngine(m, params, n_slots=2, max_ctx=32, macro_k=4)
+    assert sum(issubclass(x.category, DeprecationWarning)
+               for x in w) == 1
+    sc = ServeConfig(n_slots=2, max_ctx=32, macro_k=4)
+    e2 = ServeEngine(m, params, config=sc)
+    assert e1.config == sc == e2.config
+    with pytest.raises(TypeError, match="not both"):
+        ServeEngine(m, params, config=sc, n_slots=2)
+    # bit-equivalent serving behavior, not just equal configs
+    toks = list(range(1, 18))
+    r1 = e1.submit(toks, max_new=5)
+    r2 = e2.submit(toks, max_new=5)
+    assert e1.run()[r1] == e2.run()[r2]
+
+
+# ---------------------------------------------------------------------
+# counters registry + typed map stats
+# ---------------------------------------------------------------------
+def test_counters_registry_semantics():
+    reg = Counters()
+    a = reg.cell("x.a")
+    assert a is reg.cell("x.a")          # one cell per name
+    a[0] += 3
+    reg.cell("x.b")[0] = 2
+    snap = reg.snapshot()
+    assert snap == {"x.a": 3, "x.b": 2}
+    a[0] += 1
+    assert reg.delta(snap) == {"x.a": 1, "x.b": 0}
+    reg.reset("x.a")
+    assert a[0] == 0 and reg.cell("x.b")[0] == 2   # alias still live
+    reg.reset()
+    assert reg.snapshot() == {"x.a": 0, "x.b": 0}
+
+
+def test_legacy_counter_names_alias_registry_cells():
+    """The historical module-level counters must BE the registry cells
+    (same list object), so `NAME[0] += 1` call sites and
+    COUNTERS.snapshot() can never diverge."""
+    from repro.serving import engine as E
+    assert KM.XLATE_CALLS is COUNTERS.cell("kvm.xlate_calls")
+    assert KM.FULL_TABLE_CALLS is COUNTERS.cell("kvm.full_table_calls")
+    assert KM.ALLOC_SYNCS is COUNTERS.cell("kvm.alloc_syncs")
+    assert B.PROBE_TRACES is COUNTERS.cell("fmmu.probe_traces")
+    assert B.INSERT_TRACES is COUNTERS.cell("fmmu.insert_traces")
+    assert E.MACRO_DISPATCHES is COUNTERS.cell("engine.macro_dispatches")
+    assert E.HOST_SYNCS is COUNTERS.cell("engine.host_syncs")
+
+
+def test_map_stats_typed_access():
+    kvm = _kvm(2)
+    kvm.new_seq(0, 3)
+    st = kvm.hit_stats()
+    assert isinstance(st, MapStats)
+    assert st["updates"] == st.updates           # legacy indexing
+    assert "gc_moves" in st and "nope" not in st
+    with pytest.raises(KeyError):
+        st["nope"]
+    d = st.as_dict()
+    assert d["victims_ch"] == [0, 0]
+    assert d["write_amp"] >= 1.0
+    assert d["flash_programs"] == d["host_writes"] + d["swaps_in"] \
+        + d["gc_moves"]
+
+
+def test_prefetch_segments_frontier_semantics():
+    """CTP prefetch (ISSUE 9): the first crossing into a segment
+    dispatches ONE fused LOOKUP and counts the fill in the hit/miss
+    delta; re-prefetching the same frontier is a host-side no-op (no
+    dispatch at all) — the per-boundary dispatch tax is exactly what
+    the GC-retention acceptance forbids."""
+    kvm = _kvm(1)
+    ent = kvm.geom.cmt_entries
+    dl = np.arange(2 * ent)              # spans exactly two segments
+    x0 = KM.XLATE_CALLS[0]
+    n = kvm.prefetch_segments(dl)
+    assert n == 2                        # one representative per segment
+    assert KM.XLATE_CALLS[0] - x0 == 1   # one fused dispatch, batched
+    st = kvm.hit_stats()
+    assert st.prefetch_hits + st.prefetch_misses == 2
+    assert st.prefetch_misses == 2       # cold map: both fills useful
+    # same frontier again: filtered on host, zero dispatches
+    assert kvm.prefetch_segments(dl) == 0
+    assert KM.XLATE_CALLS[0] - x0 == 1
+    # the frontier advancing into a NEW segment dispatches again, for
+    # only the unseen segment
+    assert kvm.prefetch_segments(np.arange(3 * ent)) == 1
+    assert KM.XLATE_CALLS[0] - x0 == 2
+    # reset clears the frontier with the rest of the bookkeeping
+    kvm.reset()
+    assert kvm.prefetch_segments(dl) == 2

@@ -258,6 +258,23 @@ def _valid_doc():
                     "retired_blocks": 0, "program_faults": 0},
             },
         },
+        "gc": {
+            "watermark": 3, "pages_per_boundary": 8, "block_pages": 4,
+            "retention_gc_on_vs_off": 0.95,
+            "tokens_per_sec": {"gc_off": 900.0, "gc_on": 860.0},
+            "modes": {
+                "gc_off": {
+                    "gc_walks": 0, "gc_moves": 0, "gc_victims": 0,
+                    "host_writes": 4000, "flash_programs": 4100,
+                    "write_amp": 1.025, "victims_per_channel": [0],
+                    "prefetch_hits": 0, "prefetch_misses": 0},
+                "gc_on": {
+                    "gc_walks": 12, "gc_moves": 30, "gc_victims": 9,
+                    "host_writes": 4000, "flash_programs": 4130,
+                    "write_amp": 1.0325, "victims_per_channel": [9],
+                    "prefetch_hits": 50, "prefetch_misses": 10},
+            },
+        },
         "recovery": {
             "channels": 2, "seed": 2027, "crash_at": 80,
             "snapshot_sweep": {
@@ -290,6 +307,9 @@ def test_bench_schema_accepts_valid_and_rejects_malformed(tmp_path):
     assert line["degraded_retention"] == 0.7
     assert line["recovery_mttr_s"]["snap4"] == 0.54
     assert line["recovery_replayed"]["snap16"] == 80
+    assert line["gc_retention"] == 0.95
+    assert line["write_amp"]["gc_on"] == 1.0325
+    assert line["gc_moves"] == 30
 
     # missing file and invalid JSON hard-fail
     assert chk.main([str(tmp_path / "nope.json")]) == 1
@@ -343,6 +363,20 @@ def test_bench_schema_accepts_valid_and_rejects_malformed(tmp_path):
            .update(swap_faults=0))
     broken(lambda d: d["fault_injection"]["modes"]["faults_healthy"]
            .update(swap_faults=3))
+    # ISSUE-9 gc gates
+    broken(lambda d: d.pop("gc"))
+    broken(lambda d: d["gc"].pop("retention_gc_on_vs_off"))
+    broken(lambda d: d["gc"]["tokens_per_sec"].pop("gc_on"))
+    broken(lambda d: d["gc"]["modes"]["gc_on"].pop("write_amp"))
+    # WA is flash/host: a value below 1.0 means the counters are wrong
+    broken(lambda d: d["gc"]["modes"]["gc_on"].update(write_amp=0.9))
+    broken(lambda d: d["gc"]["modes"]["gc_on"].update(gc_moves="many"))
+    # a gc_on run that never moved a page (or a gc_off control that
+    # did) invalidates the retention + write-amp headline
+    broken(lambda d: d["gc"]["modes"]["gc_on"].update(gc_moves=0))
+    broken(lambda d: d["gc"]["modes"]["gc_off"].update(gc_moves=7))
+    broken(lambda d: d["gc"]["modes"]["gc_on"]
+           .update(victims_per_channel=[]))
     # ISSUE-7 recovery gates
     broken(lambda d: d.pop("recovery"))
     broken(lambda d: d["recovery"].pop("snapshot_sweep"))
