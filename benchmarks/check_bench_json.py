@@ -53,7 +53,7 @@ def check(doc: dict) -> None:
     for key in ("bench", "n_slots", "max_pages", "macro_k",
                 "steps_timed", "repeats", "steps_per_sec", "dispersion",
                 "speedups", "oversubscription", "channel_scaling",
-                "fault_injection", "gc", "recovery"):
+                "fault_injection", "gc", "shared_prefix", "recovery"):
         _req(key in doc, f"missing top-level key {key!r}")
     _req(doc["bench"] == "serve_decode",
          f"bench is {doc['bench']!r}, expected 'serve_decode'")
@@ -228,6 +228,47 @@ def check(doc: dict) -> None:
          "gc_on run relocated zero pages (walk measured nothing)")
     _req(gc["modes"]["gc_off"]["gc_moves"] == 0,
          "gc_off control relocated pages (GC not actually disabled)")
+    # ISSUE-10: the prefix-sharing group must record the prefill-FLOP
+    # and device-page ratios (both in (0, 1] — sharing can only shrink
+    # prompt work), the shared-page evidence, COW relocations (> 0 in
+    # the forced-divergence sub-case, or divergence measured nothing),
+    # and the bit-identity / sharing-off-inert proofs
+    sp = doc["shared_prefix"]
+    for key in ("batch", "common_tokens", "tail_tokens", "max_new",
+                "prefill_tokens", "prefill_flop_ratio", "device_pages",
+                "device_page_ratio", "shared_admits", "shared_pages",
+                "cow_moves", "outputs_bit_identical", "off_inert",
+                "forced_divergence"):
+        _req(key in sp, f"shared_prefix missing {key!r}")
+    for key in ("batch", "common_tokens", "tail_tokens", "max_new"):
+        _req(isinstance(sp[key], int) and sp[key] > 0,
+             f"shared_prefix.{key} is not a positive int")
+    for key in ("prefill_flop_ratio", "device_page_ratio"):
+        _req(_num(sp[key]) and 0 < sp[key] <= 1.0,
+             f"shared_prefix.{key} is not a number in (0, 1]")
+    for group, kind in (("prefill_tokens", "prefill_tokens"),
+                        ("device_pages", "device_pages")):
+        for mode in ("prefix_off", "prefix_on"):
+            _req(isinstance(sp[group].get(mode), int)
+                 and sp[group][mode] > 0,
+                 f"shared_prefix.{kind}[{mode!r}] is not a "
+                 "positive int")
+    for key in ("shared_admits", "shared_pages", "cow_moves"):
+        _req(isinstance(sp[key], int) and sp[key] > 0,
+             f"shared_prefix.{key} is not a positive int "
+             "(sharing measured nothing)")
+    _req(sp["outputs_bit_identical"] is True,
+         "shared_prefix outputs are not bit-identical to the control")
+    _req(sp["off_inert"] is True,
+         "shared_prefix off control was not inert")
+    fd = sp["forced_divergence"]
+    _req(isinstance(fd, dict)
+         and isinstance(fd.get("cow_moves"), int) and fd["cow_moves"] > 0,
+         "shared_prefix.forced_divergence.cow_moves is not a positive "
+         "int (no COW under forced divergence)")
+    _req(fd.get("outputs_bit_identical") is True,
+         "shared_prefix forced-divergence outputs are not "
+         "bit-identical to the control")
     # ISSUE-7: the recovery group must record the MTTR sweep over
     # snapshot intervals, and every sweep point must prove it measured
     # a real recovery (records replayed + requests requeued; MTTR can
@@ -298,6 +339,9 @@ def history_line(doc: dict) -> dict:
         "write_amp": {mode: counters["write_amp"]
                       for mode, counters in doc["gc"]["modes"].items()},
         "gc_moves": doc["gc"]["modes"]["gc_on"]["gc_moves"],
+        "prefix_flop_ratio": doc["shared_prefix"]["prefill_flop_ratio"],
+        "prefix_page_ratio": doc["shared_prefix"]["device_page_ratio"],
+        "prefix_cow_moves": doc["shared_prefix"]["cow_moves"],
         "recovery_mttr_s": doc["recovery"]["mttr_s"],
         "recovery_replayed": {
             name: r["replayed_records"]

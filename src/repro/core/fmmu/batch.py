@@ -293,7 +293,22 @@ class ServingMapState(NamedTuple):
     commit that scatters the table — two scatter-adds keyed on the
     core's ``write`` mask, no extra probe and no extra sort. Host-tier
     blocks are never counted (only the device tier is the flash
-    analogue the GC walks)."""
+    analogue the GC walks).
+
+    ``refcnt`` is the OPTIONAL per-device-block reference-count lane
+    (ISSUE 10 — prefix sharing): how many logical pages (dlpns)
+    currently map each device block. Same construction as ``live``:
+    None by default (an absent pytree leaf, so sharing-off traces the
+    exact pre-sharing graph — jaxpr-identical, asserted in
+    tests/test_prefix.py), and when enabled it is maintained by
+    ``translate_serving`` inside the SAME fused commit with the same
+    ``write`` mask — no extra probe, no extra sort. Without sharing
+    every count is 0 or 1 (the map is injective); prefix sharing maps
+    B slots' prompt pages at ONE block, driving its count to B, and
+    the pool must not reclaim a block until its count returns to 0.
+    ``live`` and ``refcnt`` stay separate lanes because they arm
+    independently (gc on/off x sharing on/off) even though both ride
+    the identical scatter-add skeleton."""
     fmmu: BatchFMMUState
     table: jnp.ndarray
     free_stack: jnp.ndarray   # [n_device] int32 free device block ids
@@ -304,11 +319,13 @@ class ServingMapState(NamedTuple):
     swap_pending: jnp.ndarray  # [n_lanes] bool host-tier residency lane
     commit_seq: jnp.ndarray = jnp.asarray(0, I)  # [] int32 commit lanes
     live: Optional[jnp.ndarray] = None  # [n_device] int32 live pages
+    refcnt: Optional[jnp.ndarray] = None  # [n_device] int32 mapping refs
 
 
 def init_serving_state(g: FMMUGeometry, n_device_blocks: int = 0,
                        n_host_blocks: int = 0, n_lanes: int = 0,
-                       track_live: bool = False) -> ServingMapState:
+                       track_live: bool = False,
+                       track_refs: bool = False) -> ServingMapState:
     # stack mirrors BlockPool.__init__: list(range(n))[::-1], so index i
     # holds block n-1-i and the first pop yields block 0
     return ServingMapState(
@@ -322,7 +339,9 @@ def init_serving_state(g: FMMUGeometry, n_device_blocks: int = 0,
         oob=jnp.asarray(False),
         swap_pending=jnp.zeros((n_lanes,), bool),
         commit_seq=jnp.asarray(0, I),
-        live=(jnp.zeros((n_device_blocks,), I) if track_live else None))
+        live=(jnp.zeros((n_device_blocks,), I) if track_live else None),
+        refcnt=(jnp.zeros((n_device_blocks,), I) if track_refs
+                else None))
 
 
 def oob_vec(ms: ServingMapState) -> jnp.ndarray:
@@ -342,6 +361,18 @@ def live_vec(ms: ServingMapState) -> jnp.ndarray:
     tracking (``ms.live is not None``)."""
     assert ms.live is not None, "live tracking is off for this state"
     return ms.live if ms.live.ndim == 1 else ms.live.sum(0)
+
+
+def refcount_vec(ms: ServingMapState) -> jnp.ndarray:
+    """Global per-device-block mapping reference counts as an
+    [n_device] vector — the refcnt lane's ``live_vec`` twin. A
+    channel-stacked state carries [C, n_device] per-shard counts over
+    GLOBAL block ids (a shared block and every dlpn mapping it stripe
+    to the same channel, so exactly one shard counts it); the global
+    view is the sum over the channel axis. Requires ref tracking
+    (``ms.refcnt is not None``)."""
+    assert ms.refcnt is not None, "ref tracking is off for this state"
+    return ms.refcnt if ms.refcnt.ndim == 1 else ms.refcnt.sum(0)
 
 
 def commit_seq_vec(ms: ServingMapState) -> jnp.ndarray:
@@ -473,12 +504,25 @@ def translate_serving(g: FMMUGeometry, ms: ServingMapState, opcodes,
         inc = write & (dppns >= 0) & (dppns < nb)
         live = (live.at[jnp.where(dec, out, nb)].add(-1, mode="drop")
                     .at[jnp.where(inc, dppns, nb)].add(1, mode="drop"))
+    # refcnt lane (ISSUE 10): same skeleton, same `write` mask — a
+    # committed lane drops a reference on the block it unmapped and
+    # takes one on the block it mapped. Sharing B slots' prompt pages
+    # at one block is then just B ordinary UPDATE commits of different
+    # dlpns to the same dppn: the lane counts to B with no special
+    # casing, and COW/free paths read it back through refcount_vec.
+    refcnt = ms.refcnt
+    if refcnt is not None:
+        nb = refcnt.shape[0]
+        dec = write & (out >= 0) & (out < nb)
+        inc = write & (dppns >= 0) & (dppns < nb)
+        refcnt = (refcnt.at[jnp.where(dec, out, nb)].add(-1, mode="drop")
+                        .at[jnp.where(inc, dppns, nb)].add(1, mode="drop"))
     # per-commit sequence lane (ISSUE 7): count committed write LANES,
     # not calls — K single steps, one macro scan, or one sharded
     # pre-commit of the same growth advance the lane identically, so
     # the host journal's cumulative record count can be checked against
     # it at any snapshot boundary regardless of batching
-    return ms._replace(fmmu=st, table=table, live=live,
+    return ms._replace(fmmu=st, table=table, live=live, refcnt=refcnt,
                        commit_seq=ms.commit_seq + write.sum().astype(I)
                        ), out, ok
 
@@ -534,7 +578,8 @@ def channel_stack(n_blocks: int, n_channels: int, c: int, cap: int,
 def init_sharded_state(g: FMMUGeometry, n_channels: int,
                        n_device_blocks: int = 0, n_host_blocks: int = 0,
                        n_lanes: int = 0,
-                       track_live: bool = False) -> ServingMapState:
+                       track_live: bool = False,
+                       track_refs: bool = False) -> ServingMapState:
     """Stack C per-channel ServingMapStates into one pytree with a
     leading channel axis. `g` is the PER-CHANNEL geometry (its dlpn
     space covers ceil(n_dlpns / C) local pages). Device/host blocks are
@@ -569,7 +614,9 @@ def init_sharded_state(g: FMMUGeometry, n_channels: int,
         host_stack=jnp.asarray(np.stack(host_stacks), I),
         host_n=jnp.asarray(host_ns, I),
         live=(jnp.zeros((C, n_device_blocks), I) if track_live
-              else None))
+              else None),
+        refcnt=(jnp.zeros((C, n_device_blocks), I) if track_refs
+                else None))
 
 
 def _sharded_translate_body(g: FMMUGeometry, C: int, c, ms_c, opcodes,

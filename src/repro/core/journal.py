@@ -93,12 +93,17 @@ ADMIT = 9        # engine: request admitted to a slot (rid, slot)
 FINISH = 10      # engine: request completed (rid, out)
 QUAR = 11        # engine: request quarantined + front-requeued (rid)
 GC = 12          # map: GC victim-walk relocation (moves, returned)
+SHARE = 13       # map: prefix sharing — admission at shared blocks
+                 #      (n_shared), tree pin, or tree unpin (op field)
+COW = 14         # map: copy-on-write relocation of diverging shared
+                 #      pages (moves, returned — GC's lane discipline)
 
 _KIND_NAMES = {OOB: "oob", NEW_SEQ: "new_seq", EXTEND: "extend",
                PRECOMMIT: "precommit", RECONCILE: "reconcile",
                FREE: "free", SWAP: "swap", RETIRE: "retire",
                SUBMIT: "submit", ADMIT: "admit", FINISH: "finish",
-               QUAR: "quarantine", GC: "gc"}
+               QUAR: "quarantine", GC: "gc", SHARE: "share",
+               COW: "cow"}
 
 _JOURNAL = "journal.log"
 _OOBLOG = "oob.log"
@@ -289,6 +294,11 @@ class Recovered:
     submits: Dict[int, Tuple[List[int], int]]
     rid: int
     boundary: int
+    # prefix sharing (ISSUE 10): mapping refcounts of share-managed
+    # blocks and the radix tree's pinned set. Durable truth for the
+    # free-gate; the tree CONTENT is volatile and never recovered.
+    ref: Dict[int, int] = dataclasses.field(default_factory=dict)
+    pinned: Set[int] = dataclasses.field(default_factory=set)
     # diagnostics
     snap_seq: int = 0
     last_seq: int = 0
@@ -302,7 +312,11 @@ class Recovered:
         """Map-consistency invariants ("never a corrupt map"): every
         block lives in exactly one of {a free list, a page list, the
         retired set}; free lists respect channel striping; page lists
-        have no holes. Raises JournalError on violation."""
+        have no holes. Prefix sharing (ISSUE 10) relaxes exactly one
+        clause: a share-managed block (in ``ref``) may appear in
+        SEVERAL page lists — then its refcount must equal its mapper
+        count, and a pinned block with zero mappers is owned by the
+        tree. Raises JournalError on violation."""
         C = self.cfg["channels"]
         n_dev, n_host = self.cfg["n_device"], self.cfg["n_host"]
         seen: Dict[int, str] = {}
@@ -323,14 +337,30 @@ class Recovered:
                 if i % C != c or not 0 <= i < n_host:
                     raise JournalError(f"host block {b} in channel {c}")
                 claim(b, f"free_host[{c}]")
+        mappers: Dict[int, int] = {}
         for s, pages in self.seq_pages.items():
             for b in pages:
-                claim(b, f"slot{s}")
+                if b in self.ref:
+                    mappers[b] = mappers.get(b, 0) + 1
+                    if mappers[b] == 1:
+                        claim(b, f"slot{s}")
+                else:
+                    claim(b, f"slot{s}")
             hp = sum(b >= HOST_BASE for b in pages)
             if hp != self.host_pages.get(s, 0):
                 raise JournalError(
                     f"slot {s}: host_pages {self.host_pages.get(s, 0)}"
                     f" != counted {hp}")
+        for b, n in self.ref.items():
+            if n != mappers.get(b, 0):
+                raise JournalError(
+                    f"shared block {b}: refcount {n} != "
+                    f"{mappers.get(b, 0)} mapping slots")
+            if b not in seen:
+                if b not in self.pinned:
+                    raise JournalError(
+                        f"share-managed block {b} has no owner")
+                claim(b, "pinned")      # tree holds the last reference
         for b in self.retired:
             claim(b, "retired")
         every = ([b for b in range(n_dev)]
@@ -387,6 +417,8 @@ def _load_snapshot(sh: Recovered, doc: dict):
                   for r, (t, m) in doc.get("submits", {}).items()}
     sh.rid = int(doc.get("rid", 0))
     sh.boundary = int(doc.get("boundary", 0))
+    sh.ref = {int(b): int(n) for b, n in doc.get("ref", {}).items()}
+    sh.pinned = set(int(b) for b in doc.get("pinned", []))
     sh.lanes = int(doc.get("lanes", 0))
 
 
@@ -420,6 +452,22 @@ def _give(sh: Recovered, block: int):
     lists[_channel_of(sh.cfg, block)].append(block)
 
 
+def _unref_give(sh: Recovered, block: int) -> int:
+    """Drop one mapping reference and give the block back only when no
+    references remain (KVPageManager._unref's shadow twin): untracked
+    blocks free as before; a share-managed block returns to the pool at
+    zero refs with no tree pin. Returns 1 when a non-retired block
+    actually reached a free list (the live run's ``frees`` increment)."""
+    n = sh.ref.get(block)
+    if n is not None:
+        sh.ref[block] = n - 1
+        if n - 1 > 0 or block in sh.pinned:
+            return 0
+        del sh.ref[block]
+    _give(sh, block)
+    return int(block not in sh.retired)
+
+
 def _apply(sh: Recovered, kind: int, p: dict):
     """Replay one whole journal record onto the shadow state. The
     free-list mutations remove exactly the block ids the live pool
@@ -444,9 +492,10 @@ def _apply(sh: Recovered, kind: int, p: dict):
     elif kind == FREE:
         sh.seq_pages.pop(p["slot"], None)
         sh.host_pages.pop(p["slot"], None)
-        for b in p["blocks"]:
-            _give(sh, b)
-        sh.stats["frees"] += sum(b not in sh.retired
+        # refcount-gated (ISSUE 10): per-block in lane order, exactly
+        # the live free_seq — share-managed blocks only reach the free
+        # list when their last mapper lets go (and no tree pin holds)
+        sh.stats["frees"] += sum(_unref_give(sh, b)
                                  for b in p["blocks"])
     elif kind == SWAP:
         for b in p["fresh"]:
@@ -493,6 +542,55 @@ def _apply(sh: Recovered, kind: int, p: dict):
         for d, old, new in p["moves"]:
             _give(sh, old)
             freed += int(old not in sh.retired)
+        for b in p.get("returned", []):
+            _give(sh, b)
+            freed += int(b not in sh.retired)
+        sh.stats["frees"] += freed
+    elif kind == SHARE:
+        op = p.get("op")
+        if op is None:
+            # shared admission: only the fresh tail left the free
+            # lists; the leading n_shared blocks are references to
+            # blocks another slot (or the tree) already owns
+            k = p["n_shared"]
+            for b in p["blocks"][k:]:
+                _take(sh, b, host=False)
+            _peak(sh)
+            sh.seq_pages[p["slot"]] = list(p["blocks"])
+            sh.stats["allocs"] += len(p["blocks"]) - k
+            for b in p["blocks"][:k]:
+                sh.ref[b] = sh.ref.get(b, 0) + 1
+        elif op == "pin":
+            # a pin converts the owner's private block to share-managed
+            # (ref counts its one mapping) and adds the tree reference
+            for b in p["blocks"]:
+                sh.pinned.add(b)
+                sh.ref.setdefault(b, 1)
+        else:
+            assert op == "unpin", op
+            freed = 0
+            for b in p["blocks"]:
+                sh.pinned.discard(b)
+                if sh.ref.get(b, 0) <= 0:
+                    sh.ref.pop(b, None)
+                    _give(sh, b)
+                    freed += int(b not in sh.retired)
+            sh.stats["frees"] += freed
+    elif kind == COW:
+        # copy-on-write relocation: like GC, all destination pops
+        # precede any gives (stale lanes' unused destinations return
+        # last); the old shared frame drops ONE mapping ref and only
+        # reaches the free list when it was the last
+        for s, pg, old, new in p["moves"]:
+            _take(sh, new, host=False)
+        for b in p.get("returned", []):
+            _take(sh, b, host=False)
+        _peak(sh)
+        sh.stats["allocs"] += len(p["moves"]) + len(p.get("returned", []))
+        freed = 0
+        for s, pg, old, new in p["moves"]:
+            sh.seq_pages[s][pg] = new
+            freed += _unref_give(sh, old)
         for b in p.get("returned", []):
             _give(sh, b)
             freed += int(b not in sh.retired)
@@ -550,22 +648,34 @@ def _oob_scan(sh: Recovered, pairs: List[List[int]],
         sh.retired.add(b)
         sh.retired_ch[_channel_of(sh.cfg, b)] += 1
         sh.stats["retired"] += 1
+    # prefix sharing (ISSUE 10): a dangling SHARE commit's OOB frame
+    # carries metadata-only owner pairs for its shared lanes — their
+    # blocks are already mapped elsewhere, so the scan bumps a mapping
+    # ref instead of popping a free list; a displaced older owner
+    # likewise drops ONE ref and frees only as the last mapper.
+    mapped = {b for ps in sh.seq_pages.values() for b in ps}
+    taken = 0
     for d, b in sorted((int(d), int(b)) for d, b in pairs):
         slot, page = divmod(d, mp)
         pages = sh.seq_pages.setdefault(slot, [])
         if page > len(pages):
             raise JournalError(
                 f"OOB owner (dlpn={d}) maps a hole at page {page}")
-        _take(sh, b, host=b >= HOST_BASE)
+        if b in mapped or b in sh.ref:    # shared lane — or a block
+            sh.ref[b] = sh.ref.get(b, 0) + 1   # only the tree still holds
+        else:
+            _take(sh, b, host=b >= HOST_BASE)
+            taken += 1
+            mapped.add(b)
         if page == len(pages):
             pages.append(b)
         else:
             old = pages[page]
             pages[page] = b
             if old != b:
-                _give(sh, old)
+                _unref_give(sh, old)
         sh.host_pages[slot] = sum(x >= HOST_BASE for x in pages)
-    sh.stats["allocs"] += len(pairs)
+    sh.stats["allocs"] += taken
 
 
 def latest_snapshot(path: str) -> Optional[dict]:
@@ -633,8 +743,7 @@ def replay(path: str) -> Recovered:
         owned = set(sh.active.values())
         for slot in [s for s in sh.seq_pages if s not in owned]:
             for b in sh.seq_pages.pop(slot):
-                _give(sh, b)
-                sh.stats["frees"] += int(b not in sh.retired)
+                sh.stats["frees"] += _unref_give(sh, b)
             sh.host_pages.pop(slot, None)
     sh.check()
     return sh

@@ -63,9 +63,11 @@ allocator + K-step fused decode macro-steps").
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Tuple
+import zlib
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -131,6 +133,8 @@ class MapStats:
     host_writes: int = 0
     flash_programs: int = 0
     write_amp: float = 1.0
+    shared_maps: int = 0
+    cow_moves: int = 0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -185,7 +189,8 @@ class KVPageManager:
                  n_host_blocks: int = 0, channels: int = 1,
                  use_mesh: Optional[bool] = None,
                  faults: Optional["flt.FaultPlane"] = None,
-                 track_live: bool = False):
+                 track_live: bool = False,
+                 track_refs: bool = False):
         self.n_slots = n_slots
         self.max_pages = max_pages
         self._n_dev = n_device_blocks
@@ -197,6 +202,19 @@ class KVPageManager:
         # default: the lane is a None pytree leaf and every traced
         # graph stays jaxpr-identical to the pre-GC path.
         self.track_live = bool(track_live)
+        # Prefix-sharing refcount tracking (ISSUE 10): same optional-
+        # leaf discipline as the live lane — off by default, and when
+        # armed the ``refcnt`` lane rides the identical fused commits.
+        # With C > 1, sharing requires max_pages % C == 0 so that the
+        # SAME page index of different slots stripes to the same
+        # channel (dlpn = slot*max_pages + page, channel = dlpn mod C):
+        # a shared block and every dlpn mapping it then live in one
+        # channel, preserving the pool/alloc channel invariant.
+        self.track_refs = bool(track_refs)
+        if self.track_refs and C > 1:
+            assert max_pages % C == 0, \
+                (f"prefix sharing with {C} channels needs "
+                 f"max_pages % channels == 0 (got {max_pages})")
         self.geom = _geometry(n_slots, max_pages, C)
         self.fns = fb.make_jitted(self.geom)
         # fault-injection plane (ISSUE 6, core/faults.py): consulted at
@@ -292,6 +310,35 @@ class KVPageManager:
         self.prefetch_misses = 0
         self._pf_seen: set = set()
         self.host_writes = 0
+        # Prefix sharing (ISSUE 10): host-side radix-path index +
+        # authoritative refcounts, mirroring the device refcnt lane the
+        # way BlockPool mirrors the device allocator.
+        #   _nodes   (depth, rolling-hash) -> (block, exact prefix) —
+        #            the radix tree in path-key form: node at depth i
+        #            holds the device block carrying page i-1's KV
+        #            computed under that exact token prefix. Insertion
+        #            order doubles as the pruning order (LRU-touched on
+        #            match via move_to_end).
+        #   _pinned  block -> node key: blocks the tree holds a
+        #            reference on (a pin is NOT a mapping ref — the
+        #            device lane counts dlpn->block mappings only).
+        #   _ref     block -> number of dlpns mapping it; present for
+        #            exactly the share-managed blocks (registered in
+        #            the tree at some point and not yet reclaimed).
+        #            Free rule everywhere: a share-managed block
+        #            returns to the pool only at zero mapping refs AND
+        #            no pin.
+        #   _shared  slot -> {page -> block}: this slot's pages mapped
+        #            at blocks it must not write in place — the COW
+        #            trigger set read by cow_writes().
+        self._nodes: "collections.OrderedDict[Tuple[int, int], Tuple[int, tuple]]" \
+            = collections.OrderedDict()
+        self._pinned: Dict[int, Tuple[int, int]] = {}
+        self._ref: Dict[int, int] = {}
+        self._shared: Dict[int, Dict[int, int]] = {}
+        self.prefix_max_nodes = 4096
+        self.shared_maps = 0
+        self.cow_moves = 0
 
     # ----------------------------------------------------------- helpers
     def _fresh_state(self):
@@ -301,7 +348,8 @@ class KVPageManager:
         if self.channels > 1:
             st = fb.init_sharded_state(
                 self.geom, self.channels, self._n_dev, self._n_host,
-                n_lanes=self.n_slots, track_live=self.track_live)
+                n_lanes=self.n_slots, track_live=self.track_live,
+                track_refs=self.track_refs)
             if self.mesh is not None:
                 from jax.sharding import NamedSharding, PartitionSpec as P
                 st = jax.device_put(
@@ -309,7 +357,8 @@ class KVPageManager:
             return st
         return fb.init_serving_state(self.geom, self._n_dev,
                                      self._n_host, n_lanes=self.n_slots,
-                                     track_live=self.track_live)
+                                     track_live=self.track_live,
+                                     track_refs=self.track_refs)
 
     def reset(self, faults: Optional["flt.FaultPlane"] = None):
         """Reinitialize map state, pool and bookkeeping while KEEPING
@@ -333,6 +382,12 @@ class KVPageManager:
         self.prefetch_misses = 0
         self._pf_seen = set()
         self.host_writes = 0
+        self._nodes = collections.OrderedDict()
+        self._pinned = {}
+        self._ref = {}
+        self._shared = {}
+        self.shared_maps = 0
+        self.cow_moves = 0
 
     def _dlpns(self, slot: int, pages: range) -> np.ndarray:
         return np.asarray([slot * self.max_pages + p for p in pages],
@@ -404,23 +459,65 @@ class KVPageManager:
         return fmmu, flat.reshape(n_slots, max_pages)
 
     # ----------------------------------------------------------- API
-    def new_seq(self, slot: int, n_pages: int) -> List[int]:
+    def new_seq(self, slot: int, n_pages: int,
+                shared: Optional[Sequence[int]] = None) -> List[int]:
+        """Admit a sequence into `slot` with `n_pages` logical pages.
+
+        ``shared`` (ISSUE 10) maps the LEADING len(shared) pages at the
+        given already-resident blocks instead of allocating: the fused
+        UPDATE commits those dlpns at the shared dppns (bumping the
+        device refcnt lane), the host refcounts advance in mirror, and
+        only the remaining pages allocate + program fresh blocks —
+        shared pages cost zero flash programs and zero prefill. Callers
+        obtain `shared` from ``match_prefix`` and MUST NOT write shared
+        pages in place (``cow_writes`` relocates first). With shared
+        empty/None this is byte-for-byte the historical admission path
+        (same journal record, same pool order)."""
         assert slot not in self.seq_pages, f"slot {slot} busy"
+        shared = list(shared or [])
+        k = len(shared)
+        assert k <= n_pages, (k, n_pages)
+        assert k == 0 or self.track_refs, \
+            "shared admission needs track_refs=True (the refcnt lane)"
         dl = self._dlpns(slot, range(n_pages))
-        blocks = self._alloc_blocks(dl)
+        fresh = list(self._alloc_blocks(dl[k:])) if n_pages > k else []
+        blocks = shared + fresh
         self._alloc_dirty = True
-        self.host_writes += len(blocks)
+        self.host_writes += len(fresh)   # shared pages program nothing
         self._xlate(UPDATE, dl, blocks)
         self.seq_pages[slot] = list(blocks)
+        if k:
+            for b in shared:
+                self._ref[b] = self._ref.get(b, 0) + 1
+            self._shared[slot] = {i: b for i, b in enumerate(shared)}
+            self.shared_maps += k
         if self.journal is not None:
-            self.journal.append(
-                jl.NEW_SEQ, {"slot": int(slot), "dl": _ji(dl),
-                             "blocks": _ji(blocks)},
-                programmed=zip(dl, blocks))
+            if k:
+                # SHARE admission: the leading blocks are references to
+                # blocks some other slot (or the tree) already owns —
+                # replay re-takes only the fresh tail from the free
+                # lists and counts the shared refs (core/journal._apply).
+                # The OOB frame carries ALL lanes' owner pairs — the
+                # shared ones as metadata-only entries (they program no
+                # data) — so a torn record stays SPOR-recoverable: the
+                # reverse-map scan would otherwise see a page hole
+                # below the first fresh page.
+                self.journal.append(
+                    jl.SHARE, {"slot": int(slot), "dl": _ji(dl),
+                               "blocks": _ji(blocks), "n_shared": k,
+                               "lanes": len(dl)},
+                    programmed=zip(dl, blocks))
+            else:
+                self.journal.append(
+                    jl.NEW_SEQ, {"slot": int(slot), "dl": _ji(dl),
+                                 "blocks": _ji(blocks)},
+                    programmed=zip(dl, blocks))
         # program-fault check AFTER the map commit, BEFORE any data is
         # written (prefill follows admission): a bad block here needs
-        # only the CondUpdate re-drive, no row copy
-        self._maybe_retire_programs(dl, blocks)
+        # only the CondUpdate re-drive, no row copy. Shared pages hold
+        # long-since-verified data — only fresh programs consult the
+        # plane.
+        self._maybe_retire_programs(dl[k:], fresh)
         return list(self.seq_pages[slot])
 
     def extend_seq(self, slot: int, n_new: int) -> List[int]:
@@ -462,9 +559,32 @@ class KVPageManager:
     def free_seq(self, slot: int):
         blocks = self.seq_pages.pop(slot)
         self._host_pages.pop(slot, None)
+        self._shared.pop(slot, None)
         dl = self._dlpns(slot, range(len(blocks)))
         self._xlate(UPDATE, dl, np.full(len(blocks), NIL, np.int32))
-        self.pool.free(blocks)
+        if self._ref:
+            # refcount gate (ISSUE 10): share-managed blocks return to
+            # the pool only at zero mapping refs and no tree pin —
+            # per-block in lane order, so the free-list order matches
+            # the unshared bulk free (and journal replay) exactly
+            for b in blocks:
+                self._unref(b)
+        else:
+            self.pool.free(blocks)
+        # The CTP frontier filter assumes growth dlpns advance
+        # monotonically — true within one sequence's life, false across
+        # slot reuse: the next occupant re-grows through the SAME dlpn
+        # range, and a key left in _pf_seen would silently skip its
+        # segment fetches forever. Drop the freed slot's keys so a
+        # reused slot re-prefetches. (When max_pages is not a multiple
+        # of cmt_entries a segment can straddle two slots, so this may
+        # also drop a neighbour's still-warm key — harmless: the set is
+        # a hint, and the re-probe lands as a redundant hit.)
+        ent = self.geom.cmt_entries
+        C = self.channels
+        for d in dl.tolist():
+            self._pf_seen.discard((d % C, (d // C) // ent) if C > 1
+                                  else (0, d // ent))
         self._alloc_dirty = True
         if self.journal is not None:
             # no OOB frame: a free programs nothing — a torn tail just
@@ -855,6 +975,14 @@ class KVPageManager:
         for frames in self.pool.erase_blocks(c, block_pages):
             if any(self.pool.is_retired(f) for f in frames):
                 continue
+            # share-managed frames are immovable (ISSUE 10): a shared
+            # block is mapped by SEVERAL dlpns (and possibly pinned by
+            # the radix tree), and the walk's one-CondUpdate-per-frame
+            # relocation can only re-point one of them — freeing the
+            # old frame would tear every other mapper. The erase block
+            # re-qualifies once the refcount gate drains it.
+            if self._ref and any(f in self._ref for f in frames):
+                continue
             nlive = int(sum(int(lv[f]) for f in frames))
             if nlive == 0 or nlive >= len(frames):
                 continue
@@ -966,6 +1094,221 @@ class KVPageManager:
                 programmed=[(d, n) for d, _, n in moves])
         return pools, len(moves), reclaimed
 
+    # ----------------------------------- prefix sharing (ISSUE 10)
+    def refcounts(self) -> np.ndarray:
+        """Host view of the device-maintained per-block mapping
+        reference counts ([n_device] int; channel shards summed) — the
+        refcnt lane's ``live_counts`` twin, read back once per check.
+        The host ``_ref`` dict stays authoritative for share-managed
+        blocks; the lane exists so tests can assert the two mirrors
+        never diverge (and the GC/COW paths never pay a readback)."""
+        assert self.track_refs and self.state.refcnt is not None, \
+            "prefix sharing needs track_refs=True (the refcnt lane)"
+        return np.asarray(jax.device_get(fb.refcount_vec(self.state)))
+
+    @staticmethod
+    def page_groups(tokens, page_size: int) -> List[tuple]:
+        """Split a prompt into page-granular token groups — the radix
+        path alphabet. The last group may be partial (a prompt tail
+        that only part-fills its page); it is still shareable, because
+        two requests whose prompts agree through the partial page have
+        bit-identical KV for it, and the first divergent WRITE into it
+        relocates copy-on-write."""
+        toks = [int(t) for t in tokens]
+        return [tuple(toks[i:i + page_size])
+                for i in range(0, len(toks), page_size)]
+
+    @staticmethod
+    def _path_keys(groups) -> List[Tuple[int, int]]:
+        """Rolling-hash node keys for every prefix of the page-group
+        path: key_i = (depth i+1, crc32 chained over groups[:i+1]).
+        The chain makes the key a function of the WHOLE prefix, so one
+        flat dict keyed by (depth, hash) IS the radix tree — matching
+        a prompt is a walk down increasing depths. Nodes store the
+        exact prefix too: a crc collision degrades to a miss, never to
+        sharing the wrong KV."""
+        keys = []
+        h = 0
+        for i, g in enumerate(groups):
+            h = zlib.crc32(np.asarray(g, np.int64).tobytes(), h)
+            keys.append((i + 1, h))
+        return keys
+
+    def match_prefix(self, groups) -> List[int]:
+        """Walk the radix path for a prompt's page groups; return the
+        blocks backing the LONGEST already-cached prefix (possibly
+        empty). Every returned block carries this exact prefix's KV,
+        already resident in the device tier — admission maps the new
+        slot's leading dlpns at them (``new_seq(shared=...)``) and
+        prefill skips those pages entirely. Matched nodes are
+        LRU-touched so hot prefixes survive pruning."""
+        if not self.track_refs:
+            return []
+        out: List[int] = []
+        pref: List[tuple] = []
+        for g, key in zip(groups, self._path_keys(groups)):
+            node = self._nodes.get(key)
+            if node is None:
+                break
+            block, exact = node
+            pref.append(tuple(g))
+            if exact != tuple(pref) or self.pool.is_retired(block) \
+                    or BlockPool.is_host(block):
+                break               # collision / retired: miss, never lie
+            self._nodes.move_to_end(key)
+            out.append(block)
+        return out
+
+    def register_prefix(self, slot: int, groups) -> int:
+        """Pin the slot's (fully prefilled) prompt pages into the radix
+        tree so later admissions can share them. A pin is a TREE
+        reference: the block now outlives its owner slot and returns to
+        the pool only when the tree lets go AND no slot maps it. The
+        owner's pinned pages also join its COW trigger set — the tree's
+        copy must never be written in place, not even by the slot that
+        computed it. Returns the number of newly pinned pages."""
+        if not self.track_refs or not groups:
+            return 0
+        pages = self.seq_pages.get(slot)
+        if pages is None:
+            return 0
+        mine = self._shared.setdefault(slot, {})
+        pinned: List[Tuple[int, int]] = []     # (page, block)
+        for i, key in enumerate(self._path_keys(groups)):
+            if i >= len(pages):
+                break
+            if key in self._nodes:             # cached already (first
+                continue                       # writer wins)
+            b = pages[i]
+            if BlockPool.is_host(b) or self.pool.is_retired(b) \
+                    or b in self._pinned:
+                continue
+            self._nodes[key] = (b, tuple(tuple(g) for g in groups[:i + 1]))
+            self._pinned[b] = key
+            if b not in self._ref:
+                self._ref[b] = 1               # the owner's mapping
+            mine[i] = b
+            pinned.append((i, b))
+        if not mine:
+            self._shared.pop(slot, None)
+        if pinned and self.journal is not None:
+            # a pin moves no map state and programs nothing — pure
+            # refcount bookkeeping, replayed for the free-gate
+            self.journal.append(
+                jl.SHARE, {"op": "pin", "slot": int(slot),
+                           "pages": [int(p) for p, _ in pinned],
+                           "blocks": [int(b) for _, b in pinned],
+                           "lanes": 0})
+        self._prune_nodes()
+        return len(pinned)
+
+    def _prune_nodes(self):
+        """Bound the tree at ``prefix_max_nodes``: evict least-recently
+        -matched nodes (OrderedDict order). Unpinning releases the tree
+        reference; the block is reclaimed immediately if no slot still
+        maps it, else it lingers as an ordinary shared block until its
+        mappers drain through the refcount gate."""
+        dropped: List[int] = []
+        while len(self._nodes) > self.prefix_max_nodes:
+            _, (b, _) = self._nodes.popitem(last=False)
+            self._pinned.pop(b, None)
+            if self._ref.get(b, 0) <= 0:
+                self._ref.pop(b, None)
+                self.pool.free([b])
+                self._alloc_dirty = True
+            dropped.append(b)
+        if dropped and self.journal is not None:
+            self.journal.append(
+                jl.SHARE, {"op": "unpin", "blocks": _ji(dropped),
+                           "lanes": 0})
+
+    def _unref(self, b: int):
+        """Drop one mapping reference. Share-managed blocks (in
+        ``_ref``) hit the pool only at zero refs with no pin; everything
+        else frees as before."""
+        n = self._ref.get(b)
+        if n is None:
+            self.pool.free([b])
+            return
+        self._ref[b] = n - 1
+        if n - 1 <= 0 and b not in self._pinned:
+            del self._ref[b]
+            self.pool.free([b])
+
+    def has_shared(self, slot: Optional[int] = None) -> bool:
+        """Any (or this slot's) pages mapped at blocks that must not be
+        written in place — the cheap guard the engine checks before
+        paying the per-step COW frontier scan."""
+        if slot is None:
+            return bool(self._shared)
+        return bool(self._shared.get(slot))
+
+    def cow_writes(self, fronts: Dict[int, int], pools=None,
+                   block_axis: int = 0):
+        """Copy-on-write relocation (ISSUE 10): for each slot, every
+        shared page AT OR AFTER its write frontier (the page index its
+        next token lands in) is about to diverge from the cached
+        prefix, so relocate it BEFORE the write commits: allocate a
+        private block in the page's own channel, CondUpdate the dlpn
+        old -> new through the batched relocation path (+ KV row copy
+        when ``pools`` is given — the same fused jit GC and retirement
+        ride), and drop the mapping ref on the shared block. A lane
+        whose guard fails means the page died mid-copy (freed or moved
+        by a racing commit) — it is skipped and its destination
+        returns, exactly the GC walk's stale-lane discipline. Raises
+        OutOfBlocks before any state changes if the pool cannot cover
+        the batch. Returns (pools, n_relocated)."""
+        work: List[Tuple[int, int, int]] = []    # (slot, page, old)
+        for slot, wpage in fronts.items():
+            m = self._shared.get(slot)
+            if not m:
+                continue
+            for p in sorted(k for k in m if k >= wpage):
+                old = m[p]
+                if self.seq_pages[slot][p] != old:
+                    m.pop(p)     # already diverged elsewhere (GC/retire)
+                    continue
+                work.append((slot, p, old))
+        if not work:
+            return pools, 0
+        dl = [s * self.max_pages + p for s, p, _ in work]
+        news = list(self._alloc_blocks(dl))
+        olds = [o for _, _, o in work]
+        self._alloc_dirty = True
+        if pools is None:
+            n = len(dl)
+            cap = 1 << (n - 1).bit_length()
+            _, ok = self._xlate(COND_UPDATE, dl + [-1] * (cap - n),
+                                news + [0] * (cap - n),
+                                olds + [0] * (cap - n))
+            okh = np.asarray(ok)[:n]
+        else:
+            pools, okh = self._retire_move(dl, news, olds, pools,
+                                           block_axis)
+        moves: List[Tuple[int, int, int, int]] = []
+        returned: List[int] = []
+        for (slot, page, old), nb, okl in zip(work, news, okh):
+            if bool(okl):
+                self.seq_pages[slot][page] = nb
+                self._shared[slot].pop(page, None)
+                if not self._shared[slot]:
+                    del self._shared[slot]
+                self._unref(old)
+                moves.append((slot, page, old, nb))
+            else:
+                returned.append(nb)
+        self.pool.free(returned)
+        self.cow_moves += len(moves)
+        if self.journal is not None and (moves or returned):
+            self.journal.append(
+                jl.COW,
+                {"moves": [[int(s), int(p), int(o), int(nw)]
+                           for s, p, o, nw in moves],
+                 "returned": _ji(returned), "lanes": len(moves)},
+                programmed=[(s * self.max_pages + p, nw)
+                            for s, p, _, nw in moves])
+        return pools, len(moves)
+
     # ------------------------------------------ CTP prefetch (ISSUE 9)
     def prefetch_segments(self, dlpns) -> int:
         """The paper's CTP, from pre-commit knowledge: the macro
@@ -1062,7 +1405,14 @@ class KVPageManager:
         bounding re-traces at O(log max_pages) per (axis, pool-count)."""
         blocks = self.seq_pages[slot]
         out = direction == SWAP_OUT
-        moving = [b for b in blocks if BlockPool.is_host(b) != out]
+        # share-managed blocks never change tier (ISSUE 10): other
+        # slots (or the radix tree) still read them in the device
+        # tier, so a swap-out moves only this slot's PRIVATE pages and
+        # leaves the shared prefix resident — the slot comes back with
+        # its shared mappings untouched. (Swap-in never sees shared
+        # blocks: only device-tier blocks are ever shared.)
+        moving = [b for b in blocks
+                  if BlockPool.is_host(b) != out and b not in self._ref]
         if not moving:
             return pools, 0
         if self.faults is not None and self.faults.swap_fails():
@@ -1072,7 +1422,7 @@ class KVPageManager:
             # slot whose swap keeps failing
             raise flt.SwapFault(slot, direction, len(moving))
         dl = [slot * self.max_pages + i for i, b in enumerate(blocks)
-              if BlockPool.is_host(b) != out]
+              if BlockPool.is_host(b) != out and b not in self._ref]
         fresh = self._alloc_blocks(dl, host=out)
         self._alloc_dirty = True
         row = self.pool.host_row
@@ -1183,6 +1533,15 @@ class KVPageManager:
                            for s, p in self.seq_pages.items()},
              "host_pages": {int(s): int(n)
                             for s, n in self._host_pages.items()}}
+        if self._ref or self._pinned:
+            # prefix sharing (ISSUE 10): mapping refcounts and tree
+            # pins are host truth the free-gate depends on. The tree's
+            # CONTENT (token hashes) is deliberately not persisted —
+            # the prefix cache is volatile; recovery releases pins and
+            # rebuilds sharing from new traffic (restore_mapping).
+            d["ref"] = {str(int(b)): int(n)
+                        for b, n in self._ref.items()}
+            d["pinned"] = sorted(int(b) for b in self._pinned)
         d.update(self.pool.state_dict())
         return d
 
@@ -1208,6 +1567,17 @@ class KVPageManager:
                           for s, p in rec.seq_pages.items()}
         self._host_pages = {int(s): int(n)
                             for s, n in rec.host_pages.items()}
+        # prefix sharing (ISSUE 10): mapping refcounts are durable
+        # truth; the radix tree is a volatile cache. Restore the
+        # refcounts, then RELEASE every recovered pin — a pinned block
+        # no slot maps goes straight back to the pool (in sorted block
+        # order, so recovery is deterministic), and sharing rebuilds
+        # from post-recovery traffic.
+        self._ref = {int(b): int(n) for b, n in rec.ref.items()}
+        for b in sorted(int(x) for x in rec.pinned):
+            if self._ref.get(b, 0) <= 0:
+                self._ref.pop(b, None)
+                self.pool.free([b])
         dl: List[int] = []
         blocks: List[int] = []
         for s in sorted(self.seq_pages):
@@ -1230,10 +1600,12 @@ class KVPageManager:
             s = s.sum(axis=0)
         fired = self.faults.counts() if self.faults is not None else {}
         # write-amplification axis (ISSUE 9): every flash program is a
-        # host-commanded write, a swap-in re-program, or a GC
-        # relocation. Retirement re-drives are deliberately excluded —
-        # they are fault recovery, not amplification policy.
-        flash = self.host_writes + self.pool.stats.swaps_in + self.gc_moves
+        # host-commanded write, a swap-in re-program, a GC relocation,
+        # or a copy-on-write divergence copy (ISSUE 10). Retirement
+        # re-drives are deliberately excluded — they are fault
+        # recovery, not amplification policy.
+        flash = (self.host_writes + self.pool.stats.swaps_in
+                 + self.gc_moves + self.cow_moves)
         return MapStats(
             hits=int(s[0]), misses=int(s[1]),
             fills=int(s[2]), updates=int(s[3]),
@@ -1260,4 +1632,7 @@ class KVPageManager:
             host_writes=self.host_writes,
             flash_programs=flash,
             write_amp=(flash / self.host_writes
-                       if self.host_writes else 1.0))
+                       if self.host_writes else 1.0),
+            # prefix-sharing plane (ISSUE 10)
+            shared_maps=self.shared_maps,
+            cow_moves=self.cow_moves)

@@ -51,6 +51,34 @@ class GCConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class PrefixConfig:
+    """Copy-on-write prefix sharing (ISSUE 10 tentpole). ``None`` on
+    ServeConfig disables it entirely — the map carries no refcnt lane
+    and every traced graph is bit-identical to the pre-sharing engine
+    (string-compared in tests/test_prefix.py).
+
+    Admission hashes each full page of a request's prompt tokens into
+    a radix (prefix-tree) path; a path node that already owns a
+    physical block means the page's KV is already computed and
+    resident, so the new slot maps its dlpn at the SAME block (one
+    fused UPDATE, a refcount bump, zero prefill FLOPs for that page).
+    A slot's first divergent write to a shared page relocates it
+    copy-on-write through the batched CondUpdate path.
+
+    min_tokens: only consider sharing when the prompt carries at least
+        this many tokens (short prompts aren't worth the tree walk).
+    max_nodes: capacity of the host-side radix tree — LRU leaves are
+        pruned (and their block references dropped) beyond it.
+    """
+    min_tokens: int = 16
+    max_nodes: int = 4096
+
+    def __post_init__(self):
+        assert self.min_tokens >= 1, self.min_tokens
+        assert self.max_nodes >= 1, self.max_nodes
+
+
+@dataclasses.dataclass(frozen=True)
 class FaultPolicy:
     """Swap-retry / watchdog policy (ISSUE 6). The fault PLANE (the
     injected schedule) stays a runtime argument — it is stateful and
@@ -100,6 +128,7 @@ class ServeConfig:
     faults: FaultPolicy = FaultPolicy()
     durability: DurabilityConfig = DurabilityConfig()
     gc: Optional[GCConfig] = None
+    prefix: Optional[PrefixConfig] = None
 
     @classmethod
     def from_legacy(cls, **kw) -> "ServeConfig":

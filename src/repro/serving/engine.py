@@ -200,11 +200,29 @@ class ServeEngine:
         # traced graph is bit-identical to the pre-GC engine
         # (jaxpr-identity asserted in tests/test_gc.py).
         self.gc = config.gc
+        # the prefix-sharing plane (ISSUE 10 tentpole): config.prefix
+        # arms the map's refcnt lane (per-block mapping counts, the
+        # live lane's twin) plus the radix admission path and the COW
+        # frontier scan below. prefix=None keeps refcnt=None — an
+        # absent pytree leaf, so every traced graph is bit-identical
+        # to the pre-sharing engine (tests/test_prefix.py).
+        self.prefix = config.prefix
         self.kvm = KVPageManager(n_slots, self.max_pages, n_dev,
                                  n_host_blocks, channels=self.channels,
                                  use_mesh=bool(use_mesh),
                                  faults=fault_plane,
-                                 track_live=self.gc is not None)
+                                 track_live=self.gc is not None,
+                                 track_refs=self.prefix is not None)
+        if self.prefix is not None:
+            self.kvm.prefix_max_nodes = self.prefix.max_nodes
+        # sharing only applies to pure paged-attention state: a mamba
+        # layer's recurrent state is per-slot and position-dependent,
+        # so a skipped prefill cannot be reconstructed from shared KV
+        # pages (requests with prefix/src embeddings are gated per
+        # request in _share_ok for the same reason)
+        self._share_model_ok = not any(
+            self.cfg.layer_kind(j) == "mamba"
+            for j in range(self.cfg.period))
         src_len = _src_len(self.cfg, max_ctx)
         # +1 scratch block: unmapped table entries (inactive slots) write
         # their garbage KV there instead of corrupting block 0
@@ -298,14 +316,16 @@ class ServeEngine:
         self._swap_fails: Dict[int, int] = {}     # slot -> consecutive
         self._retry_at: Dict[int, int] = {}       # slot -> boundary gate
         self._progress: Dict[int, tuple] = {}     # slot -> (out, pend, bd)
-        self.metrics = {"prefills": 0, "decode_steps": 0, "preemptions": 0,
+        self.metrics = {"prefills": 0, "prefill_tokens": 0,
+                        "decode_steps": 0, "preemptions": 0,
                         "generated": 0, "macro_steps": 0,
                         "macro_fallbacks": 0, "swaps_out": 0,
                         "swaps_in": 0, "chunked_prefills": 0,
                         "swap_faults": 0, "quarantines": 0,
                         "watchdog_quarantines": 0, "requeues": 0,
                         "recoveries": 0, "gc_walks": 0, "gc_moves": 0,
-                        "gc_victims": 0}
+                        "gc_victims": 0, "shared_admits": 0,
+                        "shared_pages": 0, "cow_moves": 0}
         # crash-consistency journal (ISSUE 7, core/journal.py): when
         # attached, every host commit point appends a sequence-numbered
         # record and every `snapshot_every`-th macro boundary writes a
@@ -530,6 +550,12 @@ class ServeEngine:
                 return bool(self.queue)
         if self._macro_on and self.nonblocking_swap:
             self._swap_schedule()
+        # COW frontier (ISSUE 10): shared pages the coming writes
+        # would touch go private here, before any decode dispatch
+        # (and before the macro paths' allocator sync — the copies'
+        # destination pops must reach the device mirror)
+        if self.prefix is not None:
+            self._cow_boundary()
         if self._macro_eligible():
             self._macro_decode_step(done)
         else:
@@ -572,16 +598,27 @@ class ServeEngine:
                 if budget <= 0:
                     return                  # token budget spent this round
                 chunk = min(chunk, budget)
+            # prefix sharing (ISSUE 10): walk the radix tree over the
+            # prompt's page groups; any cached prefix maps this slot's
+            # leading dlpns at the SHARED blocks and skips their
+            # prefill entirely (zero FLOPs, zero programs, zero budget)
+            groups = shared_blocks = None
+            if self._share_ok(req):
+                groups = self.kvm.page_groups(req.tokens, self.page)
+                shared_blocks = self.kvm.match_prefix(groups)
             # on-demand allocation: admission reserves only the chunk
             # (+prefix) pages that prefill actually writes; decode grows
             # the mapping page-by-page (batched, one fused map call per
             # step) instead of parking max_new worth of blocks up front
             n_prefix = (req.prefix_emb.shape[0]
                         if req.prefix_emb is not None else 0)
-            n_pages = -(-(chunk + n_prefix) // self.page)
-            n_pages = max(1, min(n_pages, self.max_pages))
+            if shared_blocks:
+                n_pages = len(shared_blocks)
+            else:
+                n_pages = -(-(chunk + n_prefix) // self.page)
+                n_pages = max(1, min(n_pages, self.max_pages))
             try:
-                self.kvm.new_seq(slot, n_pages)
+                self.kvm.new_seq(slot, n_pages, shared=shared_blocks)
             except OutOfBlocks:
                 if not self._preempt(exclude=slot):
                     return
@@ -596,9 +633,71 @@ class ServeEngine:
                 self.journal.append(
                     jl.ADMIT, {"rid": req.rid, "slot": int(slot),
                                "lanes": 0})
-            self._do_prefill(req, chunk)
-            if budget is not None:
-                budget -= chunk
+            if shared_blocks:
+                # the cached prefix IS the context: start the slot at
+                # n_skip and stream the (always >= 1) remaining prompt
+                # tokens through the decode scans as forced lanes —
+                # the chunked-prefill machinery, so outputs stay
+                # bit-identical to an unshared admission. Keeping the
+                # final token out of the skip even when the whole
+                # prompt is cached makes the last forced step produce
+                # the first output logits; its page is relocated
+                # copy-on-write before the write lands (_cow_boundary).
+                n_skip = min(sum(len(g) for g in
+                                 groups[:len(shared_blocks)]),
+                             len(req.tokens) - 1)
+                self.ctx_lens[slot] = n_skip
+                req.pending_prompt = list(req.tokens[n_skip:])
+                self.metrics["shared_admits"] += 1
+                self.metrics["shared_pages"] += len(shared_blocks)
+            else:
+                self._do_prefill(req, chunk)
+                if budget is not None:
+                    budget -= chunk
+
+    # ------------------------------------- prefix sharing (ISSUE 10)
+    def _share_ok(self, req: Request) -> bool:
+        """Prefix sharing applies to plain token prompts on attention
+        -only state long enough to be worth the tree walk; prefix/src
+        embeddings carry per-slot state the shared pages don't hold."""
+        return (self.prefix is not None and self._share_model_ok
+                and req.prefix_emb is None and req.src_emb is None
+                and len(req.tokens) >= self.prefix.min_tokens)
+
+    def _register_prompt(self, req: Request):
+        """Pin a fully-prefilled prompt's pages into the radix tree
+        (idempotent — register_prefix skips cached keys) so later
+        admissions can map them. Called at every prompt-completion
+        site: full prefill, single-step drain, macro-scan drain."""
+        if self._share_ok(req):
+            self.kvm.register_prefix(
+                req.slot, self.kvm.page_groups(req.tokens, self.page))
+
+    def _cow_boundary(self):
+        """Relocate diverging shared pages BEFORE this round's decode
+        writes land (ISSUE 10): every resident lane's write-frontier
+        page and beyond must be private by the time the scan commits
+        KV there. One batched CondUpdate + fused KV row copy — the GC
+        walk's machinery and stale-lane discipline. On exhaustion,
+        preempt one victim to the host tier and retry once (the copy
+        itself cannot be deferred: the write is about to commit)."""
+        kvm = self.kvm
+        if not kvm.has_shared():
+            return
+        fronts = {r.slot: int(self.ctx_lens[r.slot]) // self.page
+                  for r in self.active.values()
+                  if kvm.is_resident(r.slot) and kvm.has_shared(r.slot)}
+        if not fronts:
+            return
+        pools = [self.caches["pool_k"], self.caches["pool_v"]]
+        try:
+            pools, n = kvm.cow_writes(fronts, pools, block_axis=2)
+        except OutOfBlocks:
+            if not self._preempt(exclude=-1):
+                raise
+            pools, n = kvm.cow_writes(fronts, pools, block_axis=2)
+        self.caches["pool_k"], self.caches["pool_v"] = pools
+        self.metrics["cow_moves"] += n
 
     def _preempt(self, exclude: int) -> bool:
         """Swap the longest active sequence that still holds device
@@ -971,6 +1070,7 @@ class ServeEngine:
         stream through the decode path as forced tokens; its boundary
         prediction is discarded (the true next token is known)."""
         n_chunk = len(req.tokens) if n_chunk is None else n_chunk
+        self.metrics["prefill_tokens"] += n_chunk
         toks = jnp.asarray(req.tokens[:n_chunk], jnp.int32)[None]
         batch = {"tokens": toks}
         if req.prefix_emb is not None:
@@ -990,6 +1090,7 @@ class ServeEngine:
             req.pending_prompt = list(req.tokens[n_chunk:])
             self.metrics["chunked_prefills"] += 1
         else:
+            self._register_prompt(req)
             tok = int(jnp.argmax(logits[0]))
             req.out.append(tok)
             self.metrics["generated"] += 1
@@ -1400,7 +1501,12 @@ class ServeEngine:
             s = r.slot
             p = int(pend[s])
             if p:
+                # forced lanes are prompt work riding the decode path:
+                # count them into the prefill-FLOP proxy
+                self.metrics["prefill_tokens"] += min(p, K)
                 del r.pending_prompt[:min(p, K)]
+                if not r.pending_prompt:
+                    self._register_prompt(r)   # drained mid-scan
                 outs = ([int(t) for t in toks[p - 1:, s]]
                         if p <= K else [])
             else:
@@ -1696,9 +1802,11 @@ class ServeEngine:
             if r.pending_prompt:
                 # forced lane: the step consumed a known prompt token;
                 # its prediction only counts once the prompt is done
+                self.metrics["prefill_tokens"] += 1
                 r.pending_prompt.pop(0)
                 if r.pending_prompt:
                     continue
+                self._register_prompt(r)   # prompt drained this step
             tok = int(next_tok[r.slot])
             r.out.append(tok)
             self.metrics["generated"] += 1

@@ -424,7 +424,7 @@ def test_map_stats_typed_access():
     assert d["victims_ch"] == [0, 0]
     assert d["write_amp"] >= 1.0
     assert d["flash_programs"] == d["host_writes"] + d["swaps_in"] \
-        + d["gc_moves"]
+        + d["gc_moves"] + d["cow_moves"]
 
 
 def test_prefetch_segments_frontier_semantics():
@@ -453,3 +453,95 @@ def test_prefetch_segments_frontier_semantics():
     # reset clears the frontier with the rest of the bookkeeping
     kvm.reset()
     assert kvm.prefetch_segments(dl) == 2
+
+
+@pytest.mark.parametrize("C", CHANNELS)
+def test_prefetch_frontier_invalidated_on_slot_reuse(C):
+    """Regression (ISSUE 10): PR 9's frontier filter assumed growth
+    dlpns advance monotonically — true within one sequence's life,
+    false across slot REUSE, which restarts growth through the same
+    dlpn range. `free_seq` never dropped the freed slot's (channel,
+    segment) keys from `_pf_seen`, so the next occupant's prefetches
+    were silently filtered as already-seen and every segment fill was
+    paid as an in-scan miss instead. prefetch→admit→drain/free→
+    re-prefetch for the reused slot must dispatch and MISS again.
+    Pre-fix, the second prefetch was a host-side no-op (returned 0, no
+    dispatch, no miss) and this test fails."""
+    kvm = _kvm(C)
+    dl = np.asarray(kvm._dlpns(0, range(4)))
+    # boundary order mirrors the engine: prefetch from the pre-commit's
+    # growth schedule BEFORE the growth UPDATE commits
+    assert kvm.prefetch_segments(dl) > 0
+    m0 = kvm.prefetch_misses
+    assert m0 > 0                        # cold map: the fills were useful
+    kvm.new_seq(0, 4)                    # admit ...
+    kvm.free_seq(0)                      # ... drain: slot goes back
+    # a real workload re-cools the segments via CMT eviction churn;
+    # emulate that deterministically — the CMT is write-through, so
+    # flushing the valid bits loses nothing
+    fm = kvm.state.fmmu
+    kvm.state = kvm.state._replace(
+        fmmu=fm._replace(valid=jnp.zeros_like(fm.valid)))
+    x0 = KM.XLATE_CALLS[0]
+    assert kvm.prefetch_segments(dl) > 0     # NOT filtered (the fix)
+    assert KM.XLATE_CALLS[0] - x0 == 1       # one fused dispatch
+    assert kvm.prefetch_misses > m0          # and it did useful work
+    kvm.new_seq(0, 4)                        # reused slot admits cleanly
+
+
+# ---------------------------------------------------------------------
+# bugfix audit (ISSUE 10): GC victim walk vs swap-pending slots
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("C", CHANNELS)
+def test_gc_victim_excludes_swap_pending_slot(C):
+    """A victim erase block must never hold pages of a swap-pending
+    slot while the swap's host commit is in flight. The audit's answer
+    is BY CONSTRUCTION, pinned here as the exact interleaving: (1)
+    `_swap` commits host truth atomically — map re-point, pool
+    free/alloc, page lists — before returning, and GC only ever runs
+    between commits, so a "mid-swap" walk cannot exist on the host
+    side; (2) a swapped slot's pages carry HOST_BASE tags, which never
+    enter the walk's reverse map (gc_collect skips host blocks) and
+    can never be picked (`pool.erase_blocks` groups device frames
+    only); (3) the swap's not-yet-executed DEVICE copy is ordered
+    before any reuse of its freed source frames by dispatch order, so
+    even a walk racing the in-flight copy reads/writes consistent
+    rows. Interleaving: swap OUT dispatched non-blocking (check=False,
+    the serving scheduler's mode — the device work is still in flight
+    when the walk starts) -> GC walk -> swap back IN; the pending
+    slot's mapping must be untouched by the walk and fully readable
+    after resume."""
+    kvm = _kvm(C, n_dev=32, n_host=16)
+    rng = random.Random(11 + C)
+    width = kvm.pool.n_device + kvm.pool.n_host + 1
+    pools = [jnp.arange(width * 4.0).reshape(width, 4)]
+    _fragment(kvm, rng)
+    if 0 not in kvm.seq_pages:
+        kvm.new_seq(0, 4)
+    rows_before = [np.asarray(pools[0][b]) for b in kvm.seq_pages[0]]
+    pools, moved = kvm.swap_out(0, pools, check=False)  # in flight
+    assert moved > 0
+    pending = list(kvm.seq_pages[0])
+    assert all(kvm.pool.is_host(b) for b in pending)
+    mapping0 = {s: list(p) for s, p in kvm.seq_pages.items()}
+    pools, moved_pages, _ = kvm.gc_collect(pools, block_axis=0,
+                                           block_pages=4, budget=64)
+    # the walk never touched the swap-pending slot: same host blocks,
+    # and no victim frame aliased into its mapping
+    assert kvm.seq_pages[0] == pending
+    assert all(kvm.pool.is_host(b) for b in kvm.seq_pages[0])
+    # the walk is otherwise live: lane counts still match the oracle
+    # and every surviving mapping reads through the table
+    np.testing.assert_array_equal(kvm.live_counts(), _oracle_live(kvm))
+    tab = np.asarray(kvm.block_tables())
+    for s, pages in kvm.seq_pages.items():
+        assert len(pages) == len(mapping0[s])
+        assert list(tab[s, :len(pages)]) == pages
+    # resume: the swap back in lands on device rows that still carry
+    # the slot's data (the defrag walk could not have recycled them)
+    pools, back = kvm.swap_in(0, pools, check=True)
+    assert back == moved
+    assert kvm.is_resident(0)
+    rows_after = [np.asarray(pools[0][b]) for b in kvm.seq_pages[0]]
+    for r0, r1 in zip(rows_before, rows_after):
+        np.testing.assert_array_equal(r0, r1)

@@ -275,6 +275,18 @@ def _valid_doc():
                     "prefetch_hits": 50, "prefetch_misses": 10},
             },
         },
+        "shared_prefix": {
+            "batch": 8, "common_tokens": 80, "tail_tokens": 4,
+            "max_new": 4,
+            "prefill_tokens": {"prefix_off": 672, "prefix_on": 112},
+            "prefill_flop_ratio": 0.1667,
+            "device_pages": {"prefix_off": 88, "prefix_on": 18},
+            "device_page_ratio": 0.2045,
+            "shared_admits": 7, "shared_pages": 70, "cow_moves": 8,
+            "outputs_bit_identical": True, "off_inert": True,
+            "forced_divergence": {"cow_moves": 7,
+                                  "outputs_bit_identical": True},
+        },
         "recovery": {
             "channels": 2, "seed": 2027, "crash_at": 80,
             "snapshot_sweep": {
@@ -310,6 +322,9 @@ def test_bench_schema_accepts_valid_and_rejects_malformed(tmp_path):
     assert line["gc_retention"] == 0.95
     assert line["write_amp"]["gc_on"] == 1.0325
     assert line["gc_moves"] == 30
+    assert line["prefix_flop_ratio"] == 0.1667
+    assert line["prefix_page_ratio"] == 0.2045
+    assert line["prefix_cow_moves"] == 8
 
     # missing file and invalid JSON hard-fail
     assert chk.main([str(tmp_path / "nope.json")]) == 1
@@ -377,6 +392,23 @@ def test_bench_schema_accepts_valid_and_rejects_malformed(tmp_path):
     broken(lambda d: d["gc"]["modes"]["gc_off"].update(gc_moves=7))
     broken(lambda d: d["gc"]["modes"]["gc_on"]
            .update(victims_per_channel=[]))
+    # ISSUE-10 shared_prefix gates
+    broken(lambda d: d.pop("shared_prefix"))
+    broken(lambda d: d["shared_prefix"].pop("prefill_flop_ratio"))
+    # sharing can only shrink prompt work: ratio must stay in (0, 1]
+    broken(lambda d: d["shared_prefix"].update(prefill_flop_ratio=1.5))
+    broken(lambda d: d["shared_prefix"]["prefill_tokens"]
+           .pop("prefix_on"))
+    broken(lambda d: d["shared_prefix"]["device_pages"]
+           .update(prefix_on=0))
+    # a sharing run that never admitted/relocated measured nothing
+    broken(lambda d: d["shared_prefix"].update(shared_admits=0))
+    broken(lambda d: d["shared_prefix"].update(cow_moves=0))
+    broken(lambda d: d["shared_prefix"]
+           .update(outputs_bit_identical=False))
+    broken(lambda d: d["shared_prefix"].update(off_inert=False))
+    broken(lambda d: d["shared_prefix"]["forced_divergence"]
+           .update(cow_moves=0))
     # ISSUE-7 recovery gates
     broken(lambda d: d.pop("recovery"))
     broken(lambda d: d["recovery"].pop("snapshot_sweep"))
